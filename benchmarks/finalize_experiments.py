@@ -1,0 +1,72 @@
+"""Inject the roofline table + perf-iteration log into EXPERIMENTS.md from
+results/dryrun.json (idempotent — replaces the marked sections)."""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+from benchmarks.roofline_report import (fmt_s, load, markdown_table,
+                                        model_flops, row)
+from repro.configs import ARCHS
+from repro.configs.shapes import SHAPES
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def perf_rows(data):
+    """Collect tagged (hillclimb) runs paired with their baselines."""
+    out = []
+    for key, res in data.items():
+        r = row(res)
+        if not r or not r["tag"]:
+            continue
+        base_key = "|".join(key.split("|")[:3])
+        base = row(data.get(base_key, {})) or {}
+        out.append((base_key, r["tag"], base, r))
+    return out
+
+
+def perf_markdown(data) -> str:
+    lines = ["| cell | variant | compute | memory | collective | dominant "
+             "| peak GiB | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    seen_base = set()
+    for base_key, tag, base, r in sorted(perf_rows(data)):
+        if base and base_key not in seen_base:
+            seen_base.add(base_key)
+            lines.append(
+                f"| {base_key.replace('|single', '')} | baseline | "
+                f"{fmt_s(base['compute_s'])} | {fmt_s(base['memory_s'])} | "
+                f"{fmt_s(base['collective_s'])} | {base['dominant']} | "
+                f"{base['peak_gib']:.1f} | {base['roofline_frac']:.2%} |")
+        lines.append(
+            f"| {base_key.replace('|single', '')} | **{tag}** | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | {r['dominant']} | "
+            f"{r['peak_gib']:.1f} | {r['roofline_frac']:.2%} |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    data = load()
+    rows = [r for r in (row(v) for v in data.values()) if r]
+    rows.sort(key=lambda r: (ARCHS.index(r["arch"]),
+                             list(SHAPES).index(r["cell"]), r["mesh"]))
+    table = markdown_table(rows)
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## |\Z)",
+                "<!-- ROOFLINE_TABLE -->\n" + table + "\n", md,
+                flags=re.S) if "<!-- ROOFLINE_TABLE -->" in md else md
+    if "<!-- PERF_TABLE -->" in md:
+        md = re.sub(r"<!-- PERF_TABLE -->.*?(?=\n### |\n## |\Z)",
+                    "<!-- PERF_TABLE -->\n" + perf_markdown(data) + "\n", md,
+                    flags=re.S)
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md updated:",
+          sum(1 for r in rows if r["mesh"] == "16x16" and not r["tag"]),
+          "baseline cells,", len(perf_rows(data)), "tagged runs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled), so wall-time here benchmarks the *oracle*
+(pure-jnp, XLA-compiled) path — the apples-to-apples number for the CSV —
+and separately validates that the Pallas path agrees numerically.  On a TPU
+the same harness times the Mosaic kernels.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+
+
+def _time(fn: Callable, *args, iters: int = 5) -> float:
+    fn_j = jax.jit(fn)
+    out = fn_j(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn_j(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6     # us
+
+
+def bench_kernels() -> Dict[str, Dict]:
+    rng = jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 8)
+    out = {}
+
+    # vc-asgd lerp over a 16M-param tensor: HBM-pass throughput
+    n = 1 << 24
+    s = jax.random.normal(ks[0], (n,), jnp.float32)
+    c = jax.random.normal(ks[1], (n,), jnp.float32)
+    us = _time(lambda a, b: R.vc_asgd_lerp(a, b, 0.95), s, c)
+    gbps = 3 * n * 4 / (us * 1e-6) / 1e9                # 2 reads + 1 write
+    out["vc_asgd_lerp_16M"] = {"us_per_call": round(us, 1),
+                               "derived": f"{gbps:.1f}GB/s"}
+
+    q = jax.random.normal(ks[2], (1, 8, 1024, 64), jnp.float32) * 0.3
+    k = jax.random.normal(ks[3], (1, 2, 1024, 64), jnp.float32) * 0.3
+    v = jax.random.normal(ks[4], (1, 2, 1024, 64), jnp.float32)
+    us = _time(lambda a, b, c_: R.attention(a, b, c_, causal=True), q, k, v)
+    fl = 2 * 2 * 8 * 1024 * 1024 * 64 / 2               # causal half
+    out["attention_1k"] = {"us_per_call": round(us, 1),
+                           "derived": f"{fl / (us * 1e-6) / 1e9:.1f}GFLOP/s"}
+
+    r_ = jax.random.normal(ks[5], (2, 4, 128, 64)) * 0.3
+    w = jax.nn.sigmoid(jax.random.normal(ks[6], (2, 4, 128, 64))) * 0.5 + 0.4
+    u = jax.random.normal(ks[7], (4, 64)) * 0.2
+    us = _time(lambda a, b, c_, d, e: R.wkv6(a, b, c_, d, e),
+               r_, r_, r_, w, u)
+    out["wkv6_T128"] = {"us_per_call": round(us, 1), "derived": "-"}
+
+    x = jax.random.normal(ks[0], (1 << 22,))
+    us = _time(lambda a: R.quantize_int8(a)[0], x)
+    out["quantize_int8_4M"] = {"us_per_call": round(us, 1),
+                               "derived":
+                               f"{x.size * 4 / (us * 1e-6) / 1e9:.1f}GB/s"}
+
+    # numerical agreement of the Pallas path (small shapes, interpret mode)
+    sp = jax.random.normal(ks[0], (4096,))
+    cp = jax.random.normal(ks[1], (4096,))
+    err = float(jnp.max(jnp.abs(K.fused_lerp(sp, cp, 0.9)
+                                - R.vc_asgd_lerp(sp, cp, 0.9))))
+    out["pallas_vs_ref_lerp"] = {"us_per_call": 0.0,
+                                 "derived": f"maxerr={err:.1e}"}
+    return out

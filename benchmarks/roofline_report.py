@@ -1,0 +1,202 @@
+"""Roofline report generator: dryrun.json -> EXPERIMENTS.md tables.
+
+Per (arch x cell x mesh):
+  compute_s   = HLO dot FLOPs / peak            (per device, trip-scaled)
+  memory_s    = essential HBM bytes / HBM bw
+  collective_s= collective wire bytes / ICI bw
+  MODEL_FLOPS = analytic useful FLOPs (6*N_active*D train / 2*N*D serve
+                + exact attention/recurrence terms)
+  ratio       = MODEL_FLOPS / (HLO_FLOPs * n_dev)   (remat/padding waste)
+  frac        = projected roofline fraction = ideal compute time / bound
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES
+from repro.models.common import ModelConfig
+from repro.models.registry import build_model
+from repro.runtime.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+_COUNTS: Dict[str, tuple] = {}
+
+
+def param_counts(arch: str) -> tuple:
+    """(total, active) param counts. MoE experts count at top_k/n_experts."""
+    if arch in _COUNTS:
+        return _COUNTS[arch]
+    cfg = get_config(arch)
+    specs = build_model(cfg).param_specs()
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if cfg.moe and "moe" in pstr and any(
+                pstr.endswith(s) for s in ("wi", "wg", "wo")):
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    _COUNTS[arch] = (total, active)
+    return _COUNTS[arch]
+
+
+def attn_flops_per_token(cfg: ModelConfig, ctx: int, causal_avg: bool) -> float:
+    """Exact per-token attention/mixer FLOPs at context `ctx` (score+out
+    einsums; projections are inside N)."""
+    total = 0.0
+    for b in cfg.all_blocks:
+        if b.mixer == "attn":
+            eff = min(ctx, b.window) if (b.attn_kind == "swa" and b.window) \
+                else ctx
+            if causal_avg and not (b.attn_kind == "swa" and b.window
+                                   and ctx > b.window):
+                eff = eff / 2            # causal average over positions
+            total += 4.0 * eff * cfg.n_heads * cfg.hd
+        elif b.mixer == "mamba":
+            di = cfg.mamba.expand * cfg.d_model
+            total += 6.0 * di * cfg.mamba.d_state
+        elif b.mixer == "rwkv":
+            hd = cfg.rwkv.head_dim
+            total += 4.0 * cfg.d_model * hd      # wkv out + state update
+    return total
+
+
+def decode_model_bytes(arch: str, cell_name: str) -> float:
+    """Speed-of-light HBM bytes for one decode step: weights (bf16, once —
+    shared across the batch; all experts touched when b*k >= e) + the full
+    per-layer state read (KV cache / recurrent state) + O(b) writes."""
+    cfg = get_config(arch)
+    cell = SHAPES[cell_name]
+    b, ctx = cell.global_batch, cell.seq_len
+    total, active = param_counts(arch)
+    n_w = total if (cfg.moe and b * cfg.moe.top_k >= cfg.moe.n_experts) \
+        else active
+    bytes_w = n_w * 2.0
+    bytes_state = 0.0
+    for blk in cfg.all_blocks:
+        if blk.mixer == "attn":
+            eff = min(ctx, blk.window) if (blk.attn_kind == "swa"
+                                           and blk.window) else ctx
+            bytes_state += b * cfg.n_kv_heads * cfg.hd * eff * 2 * 2.0
+        elif blk.mixer == "mamba":
+            di = cfg.mamba.expand * cfg.d_model
+            bytes_state += b * di * cfg.mamba.d_state * 4.0
+        elif blk.mixer == "rwkv":
+            hd = cfg.rwkv.head_dim
+            bytes_state += b * cfg.d_model * hd * 4.0
+    if cfg.encoder is not None:
+        bytes_state += (cfg.n_layers * b * cfg.n_kv_heads * cfg.hd
+                        * cfg.encoder.n_frames * 2 * 2.0)
+    return bytes_w + bytes_state
+
+
+def model_flops(arch: str, cell_name: str) -> float:
+    cfg = get_config(arch)
+    cell = SHAPES[cell_name]
+    total, active = param_counts(arch)
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        tokens = b * s
+        return 6.0 * active * tokens + 3.0 * tokens * attn_flops_per_token(
+            cfg, s, causal_avg=True)
+    if cell.kind == "prefill":
+        tokens = b * s
+        return 2.0 * active * tokens + tokens * attn_flops_per_token(
+            cfg, s, causal_avg=True)
+    # decode: one token against ctx = seq_len
+    return b * (2.0 * active + attn_flops_per_token(cfg, s, causal_avg=False))
+
+
+def load(path: Optional[Path] = None) -> Dict:
+    return json.loads((path or RESULTS / "dryrun.json").read_text())
+
+
+def row(res: Dict) -> Optional[Dict]:
+    if res.get("status") != "ok" or "roofline" not in res:
+        return None
+    n_dev = res["n_devices"]
+    mf = model_flops(res["arch"], res["cell"])
+    hlo_total = res["hlo"]["dot_flops"] * n_dev
+    rt = res["roofline"]
+    ideal_s = mf / n_dev / PEAK_FLOPS
+    if SHAPES[res["cell"]].kind == "decode":
+        # decode's speed of light is HBM-bound: weights + state streaming
+        ideal_s = max(ideal_s,
+                      decode_model_bytes(res["arch"], res["cell"])
+                      / n_dev / HBM_BW)
+    bound = max(rt["compute_s"], rt["memory_s"], rt["collective_s"], 1e-12)
+    return {
+        "arch": res["arch"], "cell": res["cell"],
+        "mesh": "2x16x16" if res["multi_pod"] else "16x16",
+        "attn": res.get("attn_mode", "-"),
+        "compute_s": rt["compute_s"], "memory_s": rt["memory_s"],
+        "collective_s": rt["collective_s"], "dominant": rt["dominant"],
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "ratio": mf / max(hlo_total, 1.0),
+        "roofline_frac": ideal_s / bound,
+        "peak_gib": res["mem"]["peak_per_device"] / 2 ** 30,
+        "tag": res.get("tag", ""),
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def markdown_table(rows, single_pod_only=True) -> str:
+    hdr = ("| arch | cell | attn | compute | memory | collective | dominant "
+           "| MODEL/HLO | roofline frac | peak GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if single_pod_only and r["mesh"] != "16x16":
+            continue
+        if r["tag"]:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['attn']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['dominant']}** | "
+            f"{r['ratio']:.2f} | {r['roofline_frac']:.2%} | "
+            f"{r['peak_gib']:.1f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    data = load()
+    rows = [r for r in (row(v) for v in data.values()) if r]
+    rows.sort(key=lambda r: (ARCHS.index(r["arch"]),
+                             list(SHAPES).index(r["cell"]), r["mesh"]))
+    print(markdown_table(rows))
+    # worst cells by roofline fraction (hillclimb candidates)
+    worst = sorted((r for r in rows if r["mesh"] == "16x16" and not r["tag"]),
+                   key=lambda r: r["roofline_frac"])[:8]
+    print("\nWorst roofline fractions (hillclimb candidates):")
+    for r in worst:
+        print(f"  {r['arch']:24s} {r['cell']:12s} {r['roofline_frac']:.2%} "
+              f"dom={r['dominant']}")
+    coll = sorted((r for r in rows if r["mesh"] == "16x16" and not r["tag"]),
+                  key=lambda r: -r["collective_s"] / max(r["compute_s"], 1e-12))[:5]
+    print("\nMost collective-bound:")
+    for r in coll:
+        print(f"  {r['arch']:24s} {r['cell']:12s} "
+              f"coll/comp={r['collective_s'] / max(r['compute_s'], 1e-12):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (contract) and writes the full
+structured results (curves, claims) to results/bench_*.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4,cost]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+RESULTS.mkdir(exist_ok=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale horizons (40 epochs, 50 shards)")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig2,fig3,fig4,fig6,consistency,cost,kernels")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import paper_figs as F
+    from benchmarks.kernel_bench import bench_kernels
+
+    benches = {
+        "fig2": lambda: F.fig2_distributed(quick),
+        "fig3": lambda: F.fig3_server_scaling(quick),
+        "fig4": lambda: F.fig4_alpha(quick),
+        "fig6": lambda: F.fig6_vs_serial(quick),
+        "consistency": lambda: F.consistency_bench(quick),
+        "cost": lambda: F.cost_bench(quick),
+        "kernels": bench_kernels,
+    }
+
+    print("name,us_per_call,derived")
+    all_claims = {}
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        res = fn()
+        dt_us = (time.perf_counter() - t0) * 1e6
+        out = RESULTS / f"bench_{name}.json"
+        out.write_text(json.dumps(res, indent=1, default=str))
+        claims = res.pop("_claims", None) if isinstance(res, dict) else None
+        if name == "kernels":
+            for k, v in res.items():
+                print(f"{name}.{k},{v['us_per_call']},{v['derived']}")
+        else:
+            ok = (all(claims.values()) if claims else True)
+            n_claims = len(claims) if claims else 0
+            n_ok = sum(claims.values()) if claims else 0
+            fails = ("" if ok else " FAILED:"
+                     + str([k for k, v in claims.items() if not v]))
+            print(f"{name},{dt_us:.0f},claims:{n_ok}/{n_claims}{fails}")
+        if claims:
+            all_claims[name] = claims
+    (RESULTS / "bench_claims.json").write_text(
+        json.dumps(all_claims, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: the paper's system in 60 lines.
+
+Builds a tiny LM, splits the job into VC subtasks, trains it with VC-ASGD
+assimilation through the discrete-event simulator (heterogeneous preemptible
+clients, eventual-consistency parameter store), and prints the
+accuracy-vs-time trace — the Fig. 2 experience at laptop scale.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.baselines import VCASGD
+from repro.core.simulator import SimConfig, run_simulation
+from repro.core.tasks import MLPTask, make_classification_data
+from repro.core.vc_asgd import var_alpha
+
+
+def main():
+    task = MLPTask()
+    data = make_classification_data(n_train=4000, n_val=800)
+
+    cfg = SimConfig(
+        n_param_servers=3,        # Pn
+        n_clients=5,              # Cn — heterogeneous fleet (Table I types)
+        tasks_per_client=2,       # Tn
+        n_shards=25,              # the work generator's data split
+        max_epochs=10,
+        preemptible=True,         # clients get killed mid-flight...
+        mean_lifetime_s=2400.0,   # ...every ~40 simulated minutes
+        consistency="eventual",   # Redis-style parameter store
+        seed=0,
+    )
+    scheme = VCASGD(alpha=var_alpha())      # the paper's alpha_e = e/(e+1)
+
+    print(f"[quickstart] {cfg.n_shards} subtasks x {cfg.max_epochs} epochs "
+          f"on {cfg.n_clients} preemptible clients, {cfg.n_param_servers} "
+          f"parameter servers")
+    res = run_simulation(task, data, scheme, cfg)
+
+    print(f"{'epoch':>6} {'sim hours':>10} {'val acc':>8} {'spread':>7}")
+    for p in res.points:
+        print(f"{p.epoch:>6} {p.t_complete / 3600:>10.2f} "
+              f"{p.acc_mean:>8.3f} ±{p.acc_std:.3f}")
+    print(f"\n[quickstart] final accuracy {res.final_accuracy:.3f} | "
+          f"preemptions {res.preemptions} | subtask reassignments "
+          f"{res.reassignments} | lost store updates "
+          f"{res.store_stats.lost_updates}")
+    print("[quickstart] training survived every failure — that is the paper.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (CheckpointManager, load_checkpoint,
+                                    save_checkpoint)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]

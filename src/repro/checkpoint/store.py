@@ -1,0 +1,138 @@
+"""Checkpointing: msgpack tensor store with atomic rename, async save,
+retention, and restart logic.
+
+This is the durability layer of the VC design: the *server copy* is the
+only state that must survive (clients/islands are disposable by design —
+the paper's whole point), so checkpoints are snapshots of
+(server params, opt state, round counter, alpha-schedule position, data
+cursor).  ``CheckpointManager.restore_or_init`` is what every launcher
+calls first: a preempted coordinator resumes exactly where the last
+assimilation left off.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _tree_to_payload(tree) -> Tuple[Dict, list]:
+    leaves, treedef = jax.tree.flatten(tree)
+    metas, bufs = [], []
+    for leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            metas.append({"dtype": "bfloat16", "shape": arr.shape})
+            bufs.append(arr.view(np.uint16).tobytes())
+        else:
+            metas.append({"dtype": str(arr.dtype), "shape": arr.shape})
+            bufs.append(arr.tobytes())
+    return {"treedef": str(treedef), "metas": metas}, bufs
+
+
+def save_checkpoint(path: str | Path, tree, extra: Optional[Dict] = None
+                    ) -> None:
+    """Atomic save: write to a temp file in the same dir, then rename."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    header, bufs = _tree_to_payload(tree)
+    header["extra"] = extra or {}
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(header, use_bin_type=True))
+            for b in bufs:
+                f.write(msgpack.packb(b, use_bin_type=True))
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_checkpoint(path: str | Path, tree_like) -> Tuple[Any, Dict]:
+    """Restore into the structure of `tree_like` (shapes must match)."""
+    path = Path(path)
+    leaves, treedef = jax.tree.flatten(tree_like)
+    with open(path, "rb") as f:
+        unpacker = msgpack.Unpacker(f, raw=False, max_buffer_size=2 ** 31)
+        header = next(unpacker)
+        out = []
+        for meta, like in zip(header["metas"], leaves):
+            buf = next(unpacker)
+            if meta["dtype"] == "bfloat16":
+                arr = np.frombuffer(buf, np.uint16).reshape(meta["shape"])
+                arr = jnp.asarray(arr.view(jnp.bfloat16))
+            else:
+                arr = jnp.asarray(np.frombuffer(
+                    buf, np.dtype(meta["dtype"])).reshape(meta["shape"]))
+            out.append(arr)
+    return jax.tree.unflatten(treedef, out), header.get("extra", {})
+
+
+class CheckpointManager:
+    """Rolling checkpoints with async save and retention.
+
+    save() snapshots on the calling thread's values but writes on a
+    background thread (double-buffered — training never blocks on disk),
+    mirroring how a real cluster writes to replicated object storage.
+    """
+
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+
+    def _path(self, step: int) -> Path:
+        return self.dir / f"ckpt_{step:08d}.msgpack"
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save_checkpoint(self._path(step), host_tree, extra)
+            self._gc()
+
+        if self.async_save:
+            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending.start()
+        else:
+            work()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("ckpt_*.msgpack"))
+        for old in ckpts[:-self.keep]:
+            old.unlink(missing_ok=True)
+
+    def latest_step(self) -> Optional[int]:
+        ckpts = sorted(self.dir.glob("ckpt_*.msgpack"))
+        if not ckpts:
+            return None
+        return int(ckpts[-1].stem.split("_")[1])
+
+    def restore_or_init(self, tree_like, init_fn):
+        """Resume from the newest checkpoint or initialize fresh.
+        Returns (tree, extra, step)."""
+        self.wait()
+        step = self.latest_step()
+        if step is None:
+            return init_fn(), {}, 0
+        tree, extra = load_checkpoint(self._path(step), tree_like)
+        return tree, extra, step

@@ -1,0 +1,38 @@
+"""Architecture config registry: one module per assigned architecture.
+
+Each module exposes ``config()`` (the exact published configuration) and
+``reduced()`` (a tiny same-family config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+from importlib import import_module
+from typing import Dict
+
+from repro.models.common import ModelConfig
+
+_ARCH_MODULES = {
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+}
+
+ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return import_module(_ARCH_MODULES[arch]).config()
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return import_module(_ARCH_MODULES[arch]).reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

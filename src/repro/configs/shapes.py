@@ -1,0 +1,86 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+Four cells per architecture (the 40-cell table):
+  train_4k     seq 4096,   global_batch 256  -> train_step
+  prefill_32k  seq 32768,  global_batch 32   -> prefill_step
+  decode_32k   seq 32768,  global_batch 128  -> decode_step (1 new token)
+  long_500k    seq 524288, global_batch 1    -> decode_step; only for archs
+               with sub-quadratic / bounded per-step state (see
+               ModelConfig.supports_long_decode and DESIGN.md §5)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.plan import NULL_PLAN
+from repro.models.registry import build_model
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> Optional[str]:
+    """None if runnable; else a human-readable skip reason."""
+    if cell.name == "long_500k" and not cfg.supports_long_decode:
+        return ("pure full-attention stack: 500k dense-KV decode has no "
+                "sub-quadratic mechanism in the published architecture")
+    return None
+
+
+def tune_for_shape(cfg: ModelConfig, cell: ShapeCell) -> ModelConfig:
+    """Per-cell chunk-size policy: bound the chunked-recurrence working set
+    (it scales with local batch) and keep unrolled chunk counts sane."""
+    kw = {}
+    if cfg.rwkv is not None:
+        kw["scan_chunk"] = {"train_4k": 128, "prefill_32k": 512}.get(cell.name, 128)
+    elif cfg.mamba is not None:
+        kw["scan_chunk"] = {"train_4k": 256, "prefill_32k": 1024}.get(cell.name, 256)
+    if cell.name == "prefill_32k":
+        kw["attn_q_block"] = 2048
+        kw["attn_kv_block"] = 2048
+    return cfg.replace(**kw) if kw else cfg
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, plan=NULL_PLAN):
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    sds = jax.ShapeDtypeStruct
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind in ("train", "prefill"):
+        batch = {}
+        if cfg.encoder is not None:
+            batch["frame_embeds"] = sds(
+                (b, cfg.encoder.n_frames, cfg.encoder.d_model), jnp.bfloat16)
+            batch["tokens"] = sds((b, s), jnp.int32)
+        elif cfg.vision is not None:
+            batch["patch_embeds"] = sds(
+                (b, cfg.vision.n_patches, cfg.vision.vit_dim), jnp.bfloat16)
+            batch["tokens"] = sds((b, s - cfg.vision.n_patches), jnp.int32)
+        else:
+            batch["tokens"] = sds((b, s), jnp.int32)
+        return batch
+    # decode: one new token against a seq_len cache
+    model = build_model(cfg)
+    return {
+        "caches": model.cache_specs(b, s, plan),
+        "token": sds((b,), jnp.int32),
+        "pos": sds((), jnp.int32),
+    }

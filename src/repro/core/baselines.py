@@ -1,0 +1,183 @@
+"""Server parameter-update schemes: VC-ASGD plus every baseline the paper
+discusses (§II-B, §III-C), behind one interface the simulator drives.
+
+* VC-ASGD    — Eq. 1 lerp per arriving result; alpha schedule per epoch.
+* Downpour   — clients push accumulated deltas (n_push == one subtask), the
+               server applies them directly (Dean et al. [4]).
+* EASGD      — elastic averaging with moving rate beta; the paper shows its
+               VC-equivalent is VC-ASGD with alpha = 1 - beta = 0.999
+               (§IV-C); a persistent-client variant exposes its
+               fault-INtolerance under preemption.
+* DC-ASGD    — Downpour + diagonal-Hessian delay compensation (Zheng [18]).
+* SyncBSP    — barriered weight averaging per round (the cluster paradigm);
+               included to show why synchrony fails on preemptible fleets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vc_asgd as V
+
+
+@dataclass
+class ResultMeta:
+    cid: int
+    unit_uid: int
+    epoch: int
+    shard: int
+    read_version: int          # server version the client started from
+    server_version: int        # server version at assimilation time
+    t_arrival: float = 0.0
+
+    @property
+    def staleness(self) -> int:
+        return max(0, self.server_version - self.read_version)
+
+
+class ServerScheme:
+    """Stateless-client contract: a client downloads server params, trains
+    on its shard, uploads a payload; the server assimilates payloads in
+    arrival order.  Fault tolerance == dropping any subset of payloads
+    leaves the server state valid."""
+
+    name = "base"
+    requires_all_clients = False    # True -> not fault tolerant (BSP/EASGD-p)
+
+    def init_state(self, params0) -> Dict[str, Any]:
+        return {"params": params0, "version": 0}
+
+    def params_for_client(self, state):
+        return state["params"]
+
+    def client_payload(self, trained, start):
+        """What travels client -> server. Default: full weights (the paper)."""
+        return trained
+
+    def assimilate(self, state, payload, meta: ResultMeta) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def on_epoch(self, state, epoch: int) -> None:
+        pass
+
+
+class VCASGD(ServerScheme):
+    def __init__(self, alpha: float | Callable[[int], float] = 0.95,
+                 staleness_gamma: Optional[float] = None):
+        self.alpha = alpha if callable(alpha) else V.const_alpha(alpha)
+        self.staleness_gamma = staleness_gamma
+        self.name = "vc-asgd"
+
+    def assimilate(self, state, payload, meta: ResultMeta):
+        a = self.alpha(meta.epoch)
+        if self.staleness_gamma is not None:
+            a = V.staleness_alpha(a, meta.staleness, self.staleness_gamma)
+        state["params"] = V.vc_asgd_update(state["params"], payload, a)
+        state["version"] += 1
+        return state
+
+
+class Downpour(ServerScheme):
+    """Client sends delta = trained - start (the accumulated update of its
+    n_push local iterations); server adds it, Hogwild-style."""
+
+    def __init__(self, server_lr: float = 1.0):
+        self.server_lr = server_lr
+        self.name = "downpour"
+
+    def client_payload(self, trained, start):
+        return jax.tree.map(lambda t, s: t - s, trained, start)
+
+    def assimilate(self, state, payload, meta: ResultMeta):
+        state["params"] = jax.tree.map(
+            lambda p, d: p + self.server_lr * d, state["params"], payload)
+        state["version"] += 1
+        return state
+
+
+class DCASGD(Downpour):
+    """Delay-compensated: server keeps the per-client backup of the params
+    it handed out; the compensation term uses (W_now - W_backup)."""
+
+    def __init__(self, server_lr: float = 1.0, lam: float = 0.1):
+        super().__init__(server_lr)
+        self.lam = lam
+        self.name = "dc-asgd"
+        self._backups: Dict[int, Any] = {}
+
+    def params_for_client(self, state):
+        return state["params"]
+
+    def note_handout(self, cid: int, params):
+        self._backups[cid] = params
+
+    def assimilate(self, state, payload, meta: ResultMeta):
+        backup = self._backups.get(meta.cid, state["params"])
+        # payload is a delta ~ -lr * accumulated grad; compensate elementwise
+        comp = jax.tree.map(
+            lambda d, wn, wb: d + self.lam * d * d *
+            jnp.sign(d) * (wn - wb),
+            payload, state["params"], backup)
+        state["params"] = jax.tree.map(
+            lambda p, d: p + self.server_lr * d, state["params"], comp)
+        state["version"] += 1
+        return state
+
+
+class EASGDPersistent(ServerScheme):
+    """Elastic averaging with persistent client replicas (Zhang et al. [17]).
+    Clients keep local params between rounds; both sides move toward each
+    other with moving rate beta.  NOT fault tolerant: a preempted client
+    loses its replica (it must restart from the center), and the method
+    assumes updates from all clients."""
+
+    requires_all_clients = True
+
+    def __init__(self, beta: float = 0.001):
+        self.beta = beta
+        self.name = "easgd-persistent"
+        self.replicas: Dict[int, Any] = {}
+
+    def params_for_client(self, state, cid: Optional[int] = None):
+        if cid is not None and cid in self.replicas:
+            return self.replicas[cid]
+        return state["params"]
+
+    def assimilate(self, state, payload, meta: ResultMeta):
+        center = state["params"]
+        diff = jax.tree.map(lambda x, c: x - c, payload, center)
+        state["params"] = jax.tree.map(
+            lambda c, d: c + self.beta * d, center, diff)
+        self.replicas[meta.cid] = jax.tree.map(
+            lambda x, d: x - self.beta * d, payload, diff)
+        state["version"] += 1
+        return state
+
+    def drop_client(self, cid: int) -> None:
+        self.replicas.pop(cid, None)       # preemption loses the replica
+
+
+class SyncBSP(ServerScheme):
+    """Bulk-synchronous: buffer weights until EVERY shard of the round has
+    reported, then average.  Under preemption the barrier stalls until
+    timeout reassignment refills the missing shards."""
+
+    requires_all_clients = True
+
+    def __init__(self, n_shards: int):
+        self.n_shards = n_shards
+        self.name = "sync-bsp"
+        self._buf: Dict[int, Any] = {}
+
+    def assimilate(self, state, payload, meta: ResultMeta):
+        self._buf[meta.shard] = payload
+        if len(self._buf) == self.n_shards:
+            ws = list(self._buf.values())
+            state["params"] = jax.tree.map(
+                lambda *xs: sum(xs) / len(xs), *ws)
+            state["version"] += 1
+            self._buf.clear()
+        return state

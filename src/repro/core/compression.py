@@ -1,0 +1,92 @@
+"""Update compression for cross-pod / WAN transfer (beyond paper; DESIGN §4).
+
+The paper ships whole 21.2 MB .h5 parameter files and leans on BOINC's
+gzip.  At LLM scale the assimilation payload is the parameter *delta*
+(W_c - W_s0), which is compressible:
+
+* magnitude top-k sparsification with **error feedback** (the residual is
+  carried into the next round, so nothing is permanently lost — the same
+  "lossy but convergent" philosophy as the paper's eventual consistency),
+* symmetric per-block int8 quantization of the surviving values.
+
+Both have pure-jnp forms here and fused Pallas kernels (kernels/topk_mask,
+kernels/quantize) for the TPU hot path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedDelta(NamedTuple):
+    values: jnp.ndarray      # int8 quantized surviving values [k]
+    scales: jnp.ndarray      # f32 per-block scales [k / block]
+    indices: jnp.ndarray     # int32 flat indices [k]
+    shape: tuple             # original shape
+    density: float
+
+
+def topk_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask of the k largest-|x| entries (flat)."""
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh)
+
+
+def quantize_int8(x: jnp.ndarray, block: int = 256
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-block int8: returns (q int8 [n], scales f32 [n/block])."""
+    n = x.size
+    pad = (-n) % block
+    xf = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(xf), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[:n], scale[:, 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, n: int,
+                    block: int = 256) -> jnp.ndarray:
+    pad = (-n) % block
+    qf = jnp.pad(q.astype(jnp.float32), (0, pad)).reshape(-1, block)
+    return (qf * scales[:, None]).reshape(-1)[:n]
+
+
+def compress_delta(delta: jnp.ndarray, *, density: float = 0.05,
+                   block: int = 256) -> Tuple[CompressedDelta, jnp.ndarray]:
+    """Top-k + int8. Returns (payload, residual) — residual is the error-
+    feedback carry (what was NOT transmitted, plus quantization error)."""
+    flat = delta.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.size * density))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    q, scales = quantize_int8(sel, block)
+    deq = dequantize_int8(q, scales, k, block)
+    transmitted = jnp.zeros_like(flat).at[idx].set(deq)
+    residual = (flat - transmitted).reshape(delta.shape)
+    payload = CompressedDelta(values=q, scales=scales,
+                              indices=idx.astype(jnp.int32),
+                              shape=delta.shape, density=density)
+    return payload, residual
+
+
+def decompress_delta(p: CompressedDelta) -> jnp.ndarray:
+    n = 1
+    for s in p.shape:
+        n *= s
+    deq = dequantize_int8(p.values, p.scales, p.values.size)
+    flat = jnp.zeros((n,), jnp.float32).at[p.indices].set(deq)
+    return flat.reshape(p.shape)
+
+
+def payload_bytes(p: CompressedDelta) -> int:
+    return int(p.values.size * 1 + p.scales.size * 4 + p.indices.size * 4)
+
+
+def compression_ratio(p: CompressedDelta, dtype_bytes: int = 4) -> float:
+    n = 1
+    for s in p.shape:
+        n *= s
+    return n * dtype_bytes / payload_bytes(p)

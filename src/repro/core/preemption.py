@@ -1,0 +1,107 @@
+"""Client-fleet models: heterogeneity, network latency, preemption (§III-B,
+§III-E).  All distributions are seeded and deterministic, so every
+experiment in EXPERIMENTS.md reproduces bit-for-bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class InstanceType:
+    """Mirrors the paper's Table I fleet + §IV-E pricing."""
+    name: str
+    vcpu: int
+    clock_ghz: float
+    ram_gb: int
+    net_gbps: float
+    price_standard: float        # $/hr
+    price_preemptible: float     # $/hr
+    # relative training throughput (samples/s multiplier vs the 2.3GHz/8vCPU
+    # reference server) — heterogeneity knob
+    rel_speed: float = 1.0
+
+
+# the paper's Table I fleet (prices from §IV-E: fleet of 5 = $1.67/hr std,
+# $0.50/hr preemptible -> per-instance averages; per-type prices chosen to
+# reproduce those totals with the published 70-90% discount band)
+PAPER_FLEET = (
+    InstanceType("c5.2xlarge-a", 8, 2.2, 32, 5, 0.340, 0.102, rel_speed=0.96),
+    InstanceType("c5.2xlarge-b", 8, 2.5, 32, 5, 0.340, 0.102, rel_speed=1.09),
+    InstanceType("c5a.2xlarge", 8, 2.8, 15, 2, 0.308, 0.092, rel_speed=1.22),
+    InstanceType("c5a.4xlarge", 16, 2.8, 30, 2, 0.616, 0.185, rel_speed=2.30),
+    InstanceType("m5.2xlarge", 8, 2.3, 61, 10, 0.384, 0.115, rel_speed=1.00),
+)
+
+SERVER_INSTANCE = InstanceType("m5.4xlarge-server", 8, 2.3, 61, 10,
+                               0.768, 0.768, rel_speed=1.0)
+
+
+@dataclass
+class PreemptionModel:
+    """Exponential instance lifetime (memoryless — matches how cloud spot
+    reclaims behave at fleet scale) + restart delay."""
+    mean_lifetime_s: float = 3600.0     # expected time-to-preempt
+    restart_delay_s: float = 120.0      # replacement instance spin-up
+    enabled: bool = True
+
+    def sample_lifetime(self, rng: np.random.Generator) -> float:
+        if not self.enabled:
+            return float("inf")
+        return float(rng.exponential(self.mean_lifetime_s))
+
+
+@dataclass
+class LatencyModel:
+    """WAN-ish transfer latency: base RTT + size/bandwidth + lognormal jitter
+    (§III-B: clients in different regions see variable latency)."""
+    base_s: float = 0.15
+    jitter_sigma: float = 0.5
+
+    def sample(self, rng: np.random.Generator, nbytes: float,
+               net_gbps: float) -> float:
+        bw = net_gbps * 1e9 / 8.0
+        jitter = float(rng.lognormal(0.0, self.jitter_sigma))
+        return self.base_s * jitter + nbytes / bw
+
+
+@dataclass
+class ClientModel:
+    """One volunteer/preemptible client: instance type + stochastic state."""
+    cid: int
+    itype: InstanceType
+    preemption: PreemptionModel
+    latency: LatencyModel
+    rng: np.random.Generator
+    alive_until: float = 0.0
+    reliability: float = 1.0            # scheduler's EMA estimate
+
+    def spawn(self, now: float) -> None:
+        self.alive_until = now + self.preemption.sample_lifetime(self.rng)
+
+    def compute_time(self, base_cost_s: float) -> float:
+        """Time to run a subtask whose reference cost is base_cost_s on the
+        1.0-speed instance; +-10% run-to-run noise."""
+        noise = 1.0 + 0.1 * float(self.rng.standard_normal())
+        return max(base_cost_s / self.itype.rel_speed * max(noise, 0.5), 1e-3)
+
+    def transfer_time(self, nbytes: float) -> float:
+        return self.latency.sample(self.rng, nbytes, self.itype.net_gbps)
+
+
+def make_fleet(n_clients: int, *, seed: int = 0,
+               preemption: Optional[PreemptionModel] = None,
+               latency: Optional[LatencyModel] = None) -> list[ClientModel]:
+    preemption = preemption or PreemptionModel()
+    latency = latency or LatencyModel()
+    rng = np.random.default_rng(seed)
+    fleet = []
+    for cid in range(n_clients):
+        itype = PAPER_FLEET[cid % len(PAPER_FLEET)]
+        fleet.append(ClientModel(
+            cid=cid, itype=itype, preemption=preemption, latency=latency,
+            rng=np.random.default_rng(rng.integers(2 ** 63))))
+    return fleet

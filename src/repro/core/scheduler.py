@@ -1,0 +1,104 @@
+"""BOINC-style scheduler (§II-C, §III-B): timeout reassignment, reliability
+tracking, sticky-file shard affinity, per-client concurrency caps (Tn).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+from repro.core.work_generator import WorkGenerator, WorkUnit
+
+
+@dataclass
+class Assignment:
+    unit: WorkUnit
+    cid: int
+    t_assigned: float
+    deadline: float
+
+
+class Scheduler:
+    """Tracks in-flight workunits; the simulator drives it with events.
+
+    * ``timeout_s``: if a result is not back in time, the unit is requeued
+      (the paper's configurable time limit).
+    * reliability: EMA of per-client success; unreliable clients are given
+      work last (the paper: "assign subtasks to more reliable clients").
+    * sticky affinity: prefer giving a client shards whose files it already
+      holds (BOINC sticky files -> no re-download).
+    """
+
+    def __init__(self, gen: WorkGenerator, *, timeout_s: float = 1800.0,
+                 tasks_per_client: int = 2, reliability_decay: float = 0.8):
+        self.gen = gen
+        self.timeout_s = timeout_s
+        self.tasks_per_client = tasks_per_client
+        self.rel_decay = reliability_decay
+        self.inflight: Dict[int, Assignment] = {}      # uid -> assignment
+        self.client_load: Dict[int, int] = {}
+        self.client_rel: Dict[int, float] = {}
+        self.client_cache: Dict[int, Set[int]] = {}    # cid -> cached shards
+        self.reassignments = 0
+        self.results_ok = 0
+
+    # -- assignment ----------------------------------------------------------
+    def request_work(self, cid: int, now: float) -> List[WorkUnit]:
+        """Client asks for work (BOINC pull model). Returns <= free-slot units,
+        sticky-affine first."""
+        free = self.tasks_per_client - self.client_load.get(cid, 0)
+        out: List[WorkUnit] = []
+        if free <= 0 or not self.gen.pending:
+            return out
+        cache = self.client_cache.setdefault(cid, set())
+        # sticky-first ordering, stable within groups
+        pending = sorted(self.gen.pending,
+                         key=lambda u: (u.shard not in cache, u.uid))
+        for unit in pending[:free]:
+            self.gen.pending.remove(unit)
+            unit.deadline = now + self.timeout_s
+            self.inflight[unit.uid] = Assignment(unit, cid, now, unit.deadline)
+            self.client_load[cid] = self.client_load.get(cid, 0) + 1
+            cache.add(unit.shard)
+            out.append(unit)
+        return out
+
+    # -- result & failure paths ----------------------------------------------
+    def complete(self, uid: int, now: float) -> Optional[WorkUnit]:
+        asg = self.inflight.pop(uid, None)
+        if asg is None:
+            return None                                 # already timed out
+        self.client_load[asg.cid] -= 1
+        r = self.client_rel.get(asg.cid, 1.0)
+        self.client_rel[asg.cid] = self.rel_decay * r + (1 - self.rel_decay)
+        self.results_ok += 1
+        return asg.unit
+
+    def fail_client(self, cid: int, now: float) -> List[WorkUnit]:
+        """Preemption/crash: every unit on that client is requeued now."""
+        lost = [a for a in self.inflight.values() if a.cid == cid]
+        for a in lost:
+            del self.inflight[a.unit.uid]
+            self.gen.requeue(a.unit)
+            self.reassignments += 1
+        self.client_load[cid] = 0
+        r = self.client_rel.get(cid, 1.0)
+        self.client_rel[cid] = self.rel_decay * r       # decay toward 0
+        return [a.unit for a in lost]
+
+    def expire_timeouts(self, now: float) -> List[WorkUnit]:
+        """Requeue every in-flight unit past its deadline (§III-B)."""
+        expired = [a for a in self.inflight.values() if a.deadline <= now]
+        for a in expired:
+            del self.inflight[a.unit.uid]
+            self.client_load[a.cid] = max(0, self.client_load[a.cid] - 1)
+            r = self.client_rel.get(a.cid, 1.0)
+            self.client_rel[a.cid] = self.rel_decay * r
+            self.gen.requeue(a.unit)
+            self.reassignments += 1
+        return [a.unit for a in expired]
+
+    def next_deadline(self) -> float:
+        if not self.inflight:
+            return math.inf
+        return min(a.deadline for a in self.inflight.values())

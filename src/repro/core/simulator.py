@@ -1,0 +1,276 @@
+"""Discrete-event simulator of the full VC training system (§III, §IV).
+
+Everything the paper measures comes out of this one engine:
+
+* Pn parameter servers (each processes results serially; §IV-B's
+  client/server imbalance), sharing state through a Strong or Eventual
+  ParameterStore (§III-D / §IV-D),
+* Cn heterogeneous clients with WAN latency and preemption (§III-B, §III-E),
+* Tn simultaneous subtasks per client (vertical scaling),
+* BOINC-style scheduler with timeout reassignment + sticky shards,
+* a WorkGenerator splitting the dataset into subtasks,
+* any ServerScheme (VC-ASGD or a baseline).
+
+ACCURACY IS REAL: clients run actual JAX training on actual data shards;
+only wall-clock time is simulated (from the paper's measured transfer
+sizes, §IV-D update latencies, and Table I instance speeds).  The virtual
+clock makes every figure reproducible in seconds of CPU time.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.baselines import (EASGDPersistent, ResultMeta, ServerScheme,
+                                  SyncBSP)
+from repro.core.consistency import EventualStore, StoreStats, StrongStore
+from repro.core.preemption import (ClientModel, LatencyModel, PreemptionModel,
+                                   make_fleet)
+from repro.core.scheduler import Scheduler
+from repro.core.work_generator import WorkGenerator, split_dataset
+
+
+@dataclass
+class SimConfig:
+    n_param_servers: int = 3          # Pn
+    n_clients: int = 3                # Cn
+    tasks_per_client: int = 4         # Tn
+    n_shards: int = 50                # paper: 50 CIFAR subsets
+    max_epochs: int = 40
+    target_accuracy: Optional[float] = None
+    local_steps: int = 60             # client minibatch steps per subtask
+    timeout_s: float = 1800.0
+    consistency: str = "eventual"     # "eventual" (Redis) | "strong" (MySQL)
+    preemptible: bool = False
+    mean_lifetime_s: float = 5400.0
+    restart_delay_s: float = 120.0
+    # transfer sizes (paper §IV-A): params 21.2MB, data shard 3.9MB, model 269KB
+    param_bytes: float = 21.2e6
+    shard_bytes: float = 3.9e6
+    model_bytes: float = 269e3
+    # server-side per-result processing (assimilation compute + validation)
+    server_proc_s: float = 2.0
+    # reference client compute per subtask on the 1.0-speed instance
+    subtask_compute_s: float = 180.0
+    seed: int = 0
+
+
+@dataclass
+class EpochPoint:
+    epoch: int
+    t_complete: float
+    acc_mean: float
+    acc_min: float
+    acc_max: float
+    acc_std: float
+
+
+@dataclass
+class SimResult:
+    points: List[EpochPoint]
+    wall_time_s: float
+    epochs_done: int
+    final_accuracy: float
+    store_stats: StoreStats
+    reassignments: int
+    preemptions: int
+    results_assimilated: int
+    cost_hours: float = 0.0
+
+    def acc_at_time(self, t: float) -> float:
+        best = 0.0
+        for p in self.points:
+            if p.t_complete <= t:
+                best = p.acc_mean
+        return best
+
+
+# event kinds
+_ARRIVE = "arrive"          # result lands at the web server
+_RESPAWN = "respawn"
+
+
+def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
+                   ) -> SimResult:
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    split = split_dataset(len(data.x_train), cfg.n_shards, seed=cfg.seed)
+    shards = [np.flatnonzero(split.shard_index == s)
+              for s in range(cfg.n_shards)]
+
+    gen = WorkGenerator(cfg.n_shards, local_steps=cfg.local_steps,
+                        max_epochs=cfg.max_epochs)
+    sched = Scheduler(gen, timeout_s=cfg.timeout_s,
+                      tasks_per_client=cfg.tasks_per_client)
+
+    pre = PreemptionModel(mean_lifetime_s=cfg.mean_lifetime_s,
+                          restart_delay_s=cfg.restart_delay_s,
+                          enabled=cfg.preemptible)
+    fleet = make_fleet(cfg.n_clients, seed=cfg.seed, preemption=pre)
+    for c in fleet:
+        c.spawn(0.0)
+
+    params0 = task.init_params(key)
+    eventual = cfg.consistency == "eventual"
+    store = EventualStore(params0) if eventual else StrongStore(params0)
+    state = scheme.init_state(params0)
+    # parameter servers: independent serial processors sharing the store
+    ps_busy = [0.0] * cfg.n_param_servers
+    ps_rr = itertools.cycle(range(cfg.n_param_servers))
+
+    # validation accuracy per assimilated subtask, grouped by epoch
+    epoch_accs: Dict[int, List[float]] = {}
+    epoch_done_t: Dict[int, float] = {}
+    points: List[EpochPoint] = []
+
+    events: List[Tuple[float, int, str, Any]] = []
+    eid = itertools.count()
+    preemptions = 0
+    assimilated = 0
+
+    def push(t, kind, payload):
+        heapq.heappush(events, (t, next(eid), kind, payload))
+
+    def dispatch(cid: int, now: float):
+        """Client pulls work; schedule result arrivals for each unit."""
+        client = fleet[cid]
+        units = sched.request_work(cid, now)
+        for unit in units:
+            unit.param_version = store.version
+            # download params (+ shard if not cached — request_work marked it)
+            dl = client.transfer_time(cfg.param_bytes + cfg.model_bytes)
+            comp = client.compute_time(cfg.subtask_compute_s)
+            ul = client.transfer_time(cfg.param_bytes)
+            t_done = now + dl + comp + ul
+            push(t_done, _ARRIVE, (cid, unit, store.version, now))
+
+    # boot: every client asks for work at t=0 (staggered a little)
+    for c in fleet:
+        push(0.001 * c.cid, "boot", c.cid)
+
+    t_now = 0.0
+    hard_stop = 10 ** 9
+    target_hit = False
+
+    while events and not gen.exhausted and not target_hit:
+        t_now, _, kind, payload = heapq.heappop(events)
+        if t_now > hard_stop:
+            break
+
+        # preemption check: any client whose lifetime expired before t_now
+        for c in fleet:
+            if cfg.preemptible and c.alive_until <= t_now:
+                lost = sched.fail_client(c.cid, t_now)
+                if lost:
+                    preemptions += 1
+                if isinstance(scheme, EASGDPersistent):
+                    scheme.drop_client(c.cid)
+                c.spawn(t_now + cfg.restart_delay_s)
+                push(t_now + cfg.restart_delay_s, _RESPAWN, c.cid)
+
+        sched.expire_timeouts(t_now)
+
+        if kind == "boot" or kind == _RESPAWN:
+            dispatch(payload, t_now)
+            continue
+
+        if kind == _ARRIVE:
+            cid, unit, read_version, t_dispatch = payload
+            client = fleet[cid]
+            if cfg.preemptible and client.alive_until <= t_now:
+                continue                    # died mid-flight; timeout recovers
+            if unit.uid not in sched.inflight:
+                # timed out and reassigned while in flight; result discarded
+                dispatch(cid, t_now)
+                continue
+            sched.complete(unit.uid, t_now)
+
+            # ---- client-side REAL training --------------------------------
+            # the client trained from the params it downloaded at dispatch
+            # time: the store snapshot as of t_dispatch
+            base, _ = store.read_at(t_dispatch)
+            idx = shards[unit.shard]
+            if isinstance(scheme, EASGDPersistent):
+                base = scheme.params_for_client(state, cid)
+            trained = task.client_train(
+                base, data.x_train[idx], data.y_train[idx],
+                steps=unit.local_steps * max(1, len(idx) // task.batch),
+                seed=cfg.seed * 1000003 + unit.uid)
+            payload_w = scheme.client_payload(trained, base)
+
+            # ---- server-side assimilation ---------------------------------
+            ps = next(ps_rr)
+            t_free = max(t_now, ps_busy[ps])
+            meta = ResultMeta(cid=cid, unit_uid=unit.uid, epoch=unit.epoch,
+                              shard=unit.shard, read_version=read_version,
+                              server_version=store.version, t_arrival=t_now)
+            if eventual:
+                # PS reads its snapshot when it starts processing; its write
+                # clobbers any commit racing within the processing window
+                snap, _ = store.read_at(t_free)
+                state["params"] = snap
+                state = scheme.assimilate(state, payload_w, meta)
+                t_commit = store.commit(t_free, t_free + cfg.server_proc_s,
+                                        state["params"])
+            else:
+                # serializable read-modify-write against the head
+                def txn(head):
+                    state["params"] = head
+                    scheme.assimilate(state, payload_w, meta)
+                    return state["params"]
+                t_commit = store.transact(t_free + cfg.server_proc_s, txn)
+            ps_busy[ps] = t_commit
+            assimilated += 1
+
+            acc = task.evaluate(store.head(), data.x_val, data.y_val)
+            epoch_accs.setdefault(unit.epoch, []).append(acc)
+
+            rolled = gen.complete(unit)
+            if rolled:
+                accs = np.array(epoch_accs.get(unit.epoch, [0.0]))
+                points.append(EpochPoint(
+                    epoch=unit.epoch, t_complete=t_commit,
+                    acc_mean=float(accs.mean()), acc_min=float(accs.min()),
+                    acc_max=float(accs.max()), acc_std=float(accs.std())))
+                scheme.on_epoch(state, gen.epoch)
+                if (cfg.target_accuracy is not None
+                        and accs.mean() >= cfg.target_accuracy):
+                    target_hit = True
+            dispatch(cid, t_commit)
+
+    final_acc = task.evaluate(store.head(), data.x_val, data.y_val)
+    return SimResult(
+        points=points, wall_time_s=t_now,
+        epochs_done=len(points), final_accuracy=final_acc,
+        store_stats=store.stats, reassignments=sched.reassignments,
+        preemptions=preemptions, results_assimilated=assimilated,
+        cost_hours=t_now / 3600.0)
+
+
+def run_single_instance(task, data, *, max_epochs: int = 40,
+                        steps_per_epoch: int = 100, seed: int = 0,
+                        epoch_time_s: float = 1200.0) -> SimResult:
+    """The paper's Fig. 6 baseline: serial synchronous training on one
+    standard instance (same machine class as the server)."""
+    key = jax.random.PRNGKey(seed)
+    params = task.init_params(key)
+    points = []
+    for e in range(1, max_epochs + 1):
+        params = task.client_train(params, data.x_train, data.y_train,
+                                   steps=steps_per_epoch, seed=seed + e)
+        acc = task.evaluate(params, data.x_val, data.y_val)
+        points.append(EpochPoint(epoch=e, t_complete=e * epoch_time_s,
+                                 acc_mean=acc, acc_min=acc, acc_max=acc,
+                                 acc_std=0.0))
+    return SimResult(points=points, wall_time_s=max_epochs * epoch_time_s,
+                     epochs_done=max_epochs,
+                     final_accuracy=points[-1].acc_mean,
+                     store_stats=StoreStats(), reassignments=0, preemptions=0,
+                     results_assimilated=max_epochs)

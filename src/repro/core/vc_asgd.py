@@ -1,0 +1,157 @@
+"""VC-ASGD — the paper's parameter-update scheme (§III-C, Eq. 1/2).
+
+    W_s <- alpha * W_s + (1 - alpha) * W_{c_i,j}            (Eq. 1)
+
+applied immediately per arriving client result, in arrival order, with no
+barrier.  The per-epoch closed form (Eq. 2) over n_t returning subtasks:
+
+    W_{s,e} = alpha^{n_t} W_{s,e-1} + (1-alpha) sum_j alpha^{n_t-j} W_{c,j}
+
+``assimilate_many`` evaluates Eq. 2 directly as one weighted sum — this is
+what the pod-scale runtime uses (one fused collective instead of n_t
+sequential lerps), and a hypothesis property test asserts it is exactly
+the fold of Eq. 1.
+
+Alpha schedules: constant, and the paper's epoch-varying
+``alpha_e = e / (e + 1)`` (§III-C "Var"), plus a generalized power schedule
+(beyond paper).  Staleness-aware damping (beyond paper) shrinks the client
+weight geometrically with result staleness so stragglers still contribute
+but cannot drag the server copy backwards.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 — the core server update
+# ---------------------------------------------------------------------------
+
+def vc_asgd_update(server, client, alpha: float | jnp.ndarray,
+                   use_kernel: bool = False):
+    """One assimilation: every leaf lerped toward the client copy.
+
+    With ``use_kernel=True`` the fused Pallas kernel (kernels/vc_asgd_update)
+    performs the lerp in one HBM pass per leaf (TPU target; interpret-mode
+    validated on CPU).
+    """
+    if use_kernel:
+        from repro.kernels import ops as K
+        return jax.tree.map(lambda s, c: K.fused_lerp(s, c, alpha),
+                            server, client)
+    a = jnp.asarray(alpha, jnp.float32)
+    return jax.tree.map(
+        lambda s, c: (a * s.astype(jnp.float32)
+                      + (1.0 - a) * c.astype(jnp.float32)).astype(s.dtype),
+        server, client)
+
+
+def vc_asgd_update_delta(server, delta, alpha: float | jnp.ndarray):
+    """Delta form: W_s <- W_s + (1-alpha) * delta, where delta = W_c - W_s0.
+
+    Algebraically identical to Eq. 1 when delta is taken against the same
+    server copy; at LLM scale the delta is what travels cross-pod (it
+    compresses well — core/compression.py)."""
+    a = jnp.asarray(alpha, jnp.float32)
+    return jax.tree.map(
+        lambda s, d: (s.astype(jnp.float32)
+                      + (1.0 - a) * d.astype(jnp.float32)).astype(s.dtype),
+        server, delta)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 — batched assimilation (order-deterministic weighted sum)
+# ---------------------------------------------------------------------------
+
+def assimilation_weights(n: int, alpha: float) -> List[float]:
+    """Weight of client j (arrival order j = 0..n-1) plus the server weight.
+
+    Returns [w_server, w_0, ..., w_{n-1}] with
+    w_server = alpha^n, w_j = (1-alpha) * alpha^{n-1-j}; sums to 1."""
+    ws = [alpha ** n] + [(1.0 - alpha) * alpha ** (n - 1 - j) for j in range(n)]
+    return ws
+
+
+def assimilate_many(server, clients: Sequence, alpha: float):
+    """Eq. 2 as a single weighted sum over [server, client_0, ..., client_n-1]
+    in arrival order.  Exactly equal to folding Eq. 1 n times."""
+    n = len(clients)
+    if n == 0:
+        return server
+    w = assimilation_weights(n, alpha)
+
+    def merge(s, *cs):
+        acc = w[0] * s.astype(jnp.float32)
+        for wi, c in zip(w[1:], cs):
+            acc = acc + wi * c.astype(jnp.float32)
+        return acc.astype(s.dtype)
+
+    return jax.tree.map(merge, server, *clients)
+
+
+# ---------------------------------------------------------------------------
+# alpha schedules
+# ---------------------------------------------------------------------------
+
+AlphaSchedule = Callable[[int], float]
+
+
+def const_alpha(alpha: float) -> AlphaSchedule:
+    return lambda e: alpha
+
+
+def var_alpha() -> AlphaSchedule:
+    """The paper's §III-C schedule: alpha_e = e/(e+1), rising 0.5 -> ~1."""
+    return lambda e: e / (e + 1.0)
+
+
+def power_alpha(alpha_min: float = 0.5, alpha_max: float = 0.99,
+                tau: float = 10.0) -> AlphaSchedule:
+    """Beyond paper: exponential approach to alpha_max with time-scale tau."""
+    return lambda e: alpha_max - (alpha_max - alpha_min) * math.exp(-e / tau)
+
+
+def staleness_alpha(alpha: float, staleness: float, gamma: float = 0.7) -> float:
+    """Beyond paper: effective alpha for a result computed against a server
+    copy that is `staleness` versions old.  The client weight (1 - alpha)
+    decays geometrically: 1-a_eff = (1-a) * gamma^staleness."""
+    return 1.0 - (1.0 - alpha) * (gamma ** staleness)
+
+
+# ---------------------------------------------------------------------------
+# delay compensation (DC-ASGD, Zheng et al. [18]) — used by baselines and by
+# the fused kernel's optional DC term
+# ---------------------------------------------------------------------------
+
+def dc_asgd_gradient(grad, w_now, w_backup, lam: float = 0.04):
+    """g_dc = g + lam * g (.) g (.) (W_now - W_backup): a diagonal Hessian
+    approximation compensating for gradient delay."""
+    return jax.tree.map(
+        lambda g, wn, wb: g + lam * g * g * (wn.astype(g.dtype)
+                                             - wb.astype(g.dtype)),
+        grad, w_now, w_backup)
+
+
+# ---------------------------------------------------------------------------
+# convenience: convex-combination invariants (used by property tests and by
+# the elastic runtime's sanity guards)
+# ---------------------------------------------------------------------------
+
+def is_convex_combination(n: int, alpha: float, atol=1e-9) -> bool:
+    w = assimilation_weights(n, alpha)
+    return (abs(sum(w) - 1.0) < atol) and all(x >= -atol for x in w)
+
+
+def tree_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def tree_max_abs(tree) -> jnp.ndarray:
+    return max(jnp.max(jnp.abs(x.astype(jnp.float32)))
+               for x in jax.tree.leaves(tree))

@@ -1,0 +1,118 @@
+"""Work generator (§III-A): splits one DL training job into data-parallel
+training subtasks (BOINC "workunits"), tracks epochs, and decides the split.
+
+A subtask = (data shard, model + server parameter snapshot version, training
+recipe).  An epoch completes when every subtask of that epoch has been
+assimilated; the generator then emits the next epoch's subtasks (with the
+current server parameter version) until the stop criterion is met.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class WorkUnit:
+    uid: int
+    epoch: int
+    shard: int                   # index into the dataset split
+    param_version: int           # server version the client starts from
+    replicas: int = 1            # computational redundancy (§II-C)
+    deadline: float = math.inf   # absolute sim-time deadline (scheduler sets)
+    local_steps: int = 1         # client-side passes over the shard
+
+
+@dataclass
+class Split:
+    n_shards: int
+    shard_index: np.ndarray      # [n_samples] -> shard id
+    shard_sizes: np.ndarray      # [n_shards]
+
+
+def split_dataset(n_samples: int, n_shards: int, *, seed: int = 0,
+                  shuffle: bool = True) -> Split:
+    """Deterministic near-even split; shuffled so shards are iid (the paper
+    splits CIFAR10's 50k train rows into 50 shards of 1000)."""
+    idx = np.arange(n_samples)
+    if shuffle:
+        idx = np.random.default_rng(seed).permutation(n_samples)
+    shard_of = np.zeros(n_samples, np.int32)
+    bounds = np.linspace(0, n_samples, n_shards + 1).astype(int)
+    for s in range(n_shards):
+        shard_of[idx[bounds[s]:bounds[s + 1]]] = s
+    sizes = np.bincount(shard_of, minlength=n_shards)
+    return Split(n_shards, shard_of, sizes)
+
+
+def auto_split(n_samples: int, n_clients: int, tasks_per_client: int,
+               min_shard: int = 64) -> int:
+    """The paper's "best possible split" heuristic (§III-A): enough subtasks
+    to keep every client slot busy ~2 rounds per epoch, but never shards so
+    small that the client step is dominated by transfer overhead."""
+    want = max(n_clients * tasks_per_client * 2, 1)
+    cap = max(n_samples // min_shard, 1)
+    return int(min(want, cap))
+
+
+class WorkGenerator:
+    """Epoch bookkeeping over subtasks.  The scheduler pulls from
+    ``pending``; the parameter server calls ``complete(uid)`` after
+    assimilation.  ``next_epoch`` rolls the epoch when all shards of the
+    current epoch are assimilated."""
+
+    def __init__(self, n_shards: int, *, replicas: int = 1,
+                 local_steps: int = 1, max_epochs: int = 10 ** 6):
+        self.n_shards = n_shards
+        self.replicas = replicas
+        self.local_steps = local_steps
+        self.max_epochs = max_epochs
+        self.epoch = 1
+        self._uid = 0
+        self.pending: List[WorkUnit] = []
+        self.done_shards: set[int] = set()
+        self.completed_units: Dict[int, WorkUnit] = {}
+        self._emit_epoch()
+
+    def _emit_epoch(self) -> None:
+        for s in range(self.n_shards):
+            for _ in range(self.replicas):
+                self.pending.append(WorkUnit(
+                    uid=self._uid, epoch=self.epoch, shard=s,
+                    param_version=-1, replicas=self.replicas,
+                    local_steps=self.local_steps))
+                self._uid += 1
+
+    def complete(self, unit: WorkUnit) -> bool:
+        """Mark a shard's result assimilated. Returns True if this completed
+        the epoch (and the next epoch was emitted)."""
+        self.completed_units[unit.uid] = unit
+        if unit.epoch != self.epoch:
+            return False                   # stale replica of an old epoch
+        self.done_shards.add(unit.shard)
+        if len(self.done_shards) == self.n_shards:
+            self.epoch += 1
+            self.done_shards = set()
+            # drop leftover replicas of the finished epoch
+            self.pending = [u for u in self.pending if u.epoch == self.epoch]
+            if self.epoch <= self.max_epochs:
+                self._emit_epoch()
+            return True
+        return False
+
+    def requeue(self, unit: WorkUnit) -> None:
+        """Timeout reassignment (§III-B): the shard goes back to pending
+        unless the epoch already finished without it (replica quorum)."""
+        if unit.epoch == self.epoch and unit.shard not in self.done_shards:
+            self.pending.append(WorkUnit(
+                uid=self._uid, epoch=unit.epoch, shard=unit.shard,
+                param_version=-1, replicas=unit.replicas,
+                local_steps=unit.local_steps))
+            self._uid += 1
+
+    @property
+    def exhausted(self) -> bool:
+        return self.epoch > self.max_epochs

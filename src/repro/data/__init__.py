@@ -1,0 +1,5 @@
+from repro.data.pipeline import (ShardedTokenDataset, SyntheticTokenSource,
+                                 make_batch_for, subtask_batches)
+
+__all__ = ["SyntheticTokenSource", "ShardedTokenDataset", "subtask_batches",
+           "make_batch_for"]

@@ -1,0 +1,115 @@
+"""Data pipeline: deterministic synthetic token streams + the work
+generator's dataset sharding, with double-buffered host prefetch.
+
+The paper's work generator splits the training set into n_t subsets
+(§III-A); ``ShardedTokenDataset`` is that split for LM training — each
+subtask (island round) draws only from its own shard, so the epoch
+semantics of the simulator and the pod-scale runtime match.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+
+class SyntheticTokenSource:
+    """Deterministic, seekable synthetic corpus: a mixture of Zipfian
+    unigrams and a order-2 Markov chain so models have real structure to
+    learn (loss actually goes down)."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, order_dim: int = 64):
+        self.vocab = vocab_size
+        self.seed = seed
+        rng = np.random.default_rng(seed)
+        self._mix = rng.integers(1, self.vocab, size=(order_dim,))
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks ** 1.1
+        self._probs = p / p.sum()
+
+    def sample(self, n_seqs: int, seq_len: int, offset: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(self.seed * 1_000_003 + offset)
+        base = rng.choice(self.vocab, size=(n_seqs, seq_len), p=self._probs)
+        # inject structure: token[t] correlates with token[t-1]
+        mix = self._mix[base[:, :-1] % len(self._mix)]
+        coin = rng.random((n_seqs, seq_len - 1)) < 0.35
+        base[:, 1:] = np.where(coin, (base[:, :-1] + mix) % self.vocab,
+                               base[:, 1:])
+        return base.astype(np.int32)
+
+
+@dataclass
+class ShardedTokenDataset:
+    """The work-generator split: n_shards disjoint sequence ranges."""
+    source: SyntheticTokenSource
+    n_shards: int
+    seqs_per_shard: int
+    seq_len: int
+
+    def shard_batch(self, shard: int, batch: int, step: int) -> np.ndarray:
+        """Deterministic batch from one shard (client subtask training)."""
+        offset = shard * self.seqs_per_shard + step * batch
+        return self.source.sample(batch, self.seq_len,
+                                  offset=shard * 10_000_019 + step)
+
+
+def make_batch_for(cfg: ModelConfig, batch: int, seq_len: int,
+                   seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """One model-ready batch (tokens + stub modality inputs)."""
+    src = SyntheticTokenSource(cfg.vocab_size, seed)
+    out: Dict[str, jnp.ndarray] = {}
+    if cfg.encoder is not None:
+        rng = np.random.default_rng(seed + 1)
+        out["frame_embeds"] = jnp.asarray(rng.standard_normal(
+            (batch, cfg.encoder.n_frames, cfg.encoder.d_model)),
+            jnp.bfloat16)
+        out["tokens"] = jnp.asarray(src.sample(batch, seq_len))
+    elif cfg.vision is not None:
+        rng = np.random.default_rng(seed + 1)
+        out["patch_embeds"] = jnp.asarray(rng.standard_normal(
+            (batch, cfg.vision.n_patches, cfg.vision.vit_dim)), jnp.bfloat16)
+        out["tokens"] = jnp.asarray(
+            src.sample(batch, seq_len - cfg.vision.n_patches))
+    else:
+        out["tokens"] = jnp.asarray(src.sample(batch, seq_len))
+    return out
+
+
+def subtask_batches(cfg: ModelConfig, ds: ShardedTokenDataset, shard: int,
+                    batch: int, n_steps: int) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Batches for one training subtask (the client's local steps)."""
+    for step in range(n_steps):
+        yield {"tokens": jnp.asarray(ds.shard_batch(shard, batch, step))}
+
+
+class Prefetcher:
+    """Host-side double buffering: overlaps batch synthesis/IO with device
+    compute (one producer thread, bounded queue)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._done = object()
+
+        def run():
+            for item in it:
+                self._q.put(item)
+            self._q.put(self._done)
+
+        self._t = threading.Thread(target=run, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item

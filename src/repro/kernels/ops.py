@@ -1,0 +1,63 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On CPU (this container) every kernel runs in interpret mode — the kernel
+body executes as traced jnp ops, which validates BlockSpecs, index maps and
+the kernel math against ref.py.  On TPU backends the same calls compile to
+Mosaic.  ``interpret`` is decided once per process from the backend.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import quantize as _qz
+from repro.kernels import rwkv6_scan as _rw
+from repro.kernels import topk_mask as _tm
+from repro.kernels import vc_asgd_update as _vc
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_lerp(server, client, alpha):
+    """VC-ASGD Eq. 1 on one tensor (pytree mapping handled by callers)."""
+    return _vc.vc_asgd_lerp(server, client, alpha, interpret=_interpret())
+
+
+def fused_dc_lerp(server, client, grad, backup, alpha, lam=0.04):
+    return _vc.vc_asgd_dc_lerp(server, client, grad, backup, alpha, lam,
+                               interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    q_block=256, kv_block=256):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_block=q_block,
+                               kv_block=kv_block, interpret=_interpret())
+
+
+def wkv6(r, k, v, w, u):
+    return _rw.wkv6(r, k, v, w, u, interpret=_interpret())
+
+
+def mamba_scan(u, dt, B, C, A, D, d_block=128):
+    return _ms.mamba_scan(u, dt, B, C, A, D, d_block=d_block,
+                          interpret=_interpret())
+
+
+def quantize_int8(x):
+    return _qz.quantize_int8(x, interpret=_interpret())
+
+
+def dequantize_int8(q, scales, n, out_dtype=jnp.float32):
+    return _qz.dequantize_int8(q, scales, n, out_dtype,
+                               interpret=_interpret())
+
+
+def threshold_sparsify(x, tau):
+    return _tm.threshold_sparsify(x, tau, interpret=_interpret())

@@ -1,0 +1,48 @@
+"""Fused threshold-sparsify + error-feedback kernel.
+
+Top-k selection itself is a global op (jnp.lax.top_k over the flat delta);
+given the resulting magnitude threshold tau this kernel does the two
+memory-bound passes in one: the transmitted (masked) values and the
+error-feedback residual (what stays behind for the next round).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 1024
+
+
+def _mask_kernel(scal_ref, x_ref, keep_ref, res_ref):
+    tau = scal_ref[0]
+    x = x_ref[...].astype(jnp.float32)
+    keep = jnp.where(jnp.abs(x) >= tau, x, 0.0)
+    keep_ref[...] = keep.astype(keep_ref.dtype)
+    res_ref[...] = (x - keep).astype(res_ref.dtype)
+
+
+def threshold_sparsify(x: jnp.ndarray, tau, *, interpret: bool = True):
+    """Returns (kept, residual): kept has |x| >= tau entries, residual the
+    rest; kept + residual == x exactly."""
+    n = x.size
+    nb = -(-n // BLOCK)
+    pad = nb * BLOCK - n
+    xf = x.reshape(-1)
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    xf = xf.reshape(nb, BLOCK)
+    scal = jnp.asarray([tau], jnp.float32)
+    kept, res = pl.pallas_call(
+        _mask_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec((1, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((1, BLOCK), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, BLOCK), x.dtype),
+                   jax.ShapeDtypeStruct((nb, BLOCK), x.dtype)],
+        interpret=interpret,
+    )(scal, xf)
+    unpad = lambda t: t.reshape(-1)[:n].reshape(x.shape)
+    return unpad(kept), unpad(res)

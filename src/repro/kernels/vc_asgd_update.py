@@ -1,0 +1,83 @@
+"""Fused VC-ASGD server assimilation kernel (Eq. 1) — the paper's hot op.
+
+The server update ``W_s <- a*W_s + (1-a)*W_c`` is purely memory-bound: at
+LLM scale the whole parameter set must stream through the chip once per
+assimilation.  The fusion opportunities are (a) the lerp itself, (b) the
+optional DC-ASGD delay-compensation term, and (c) the staleness-damped
+effective alpha — one HBM pass for all streams instead of several.
+
+TPU adaptation (DESIGN.md §2): parameters are flattened to 1-D and tiled
+into (1, 8192)-element VMEM blocks (multiples of the 8x128 vector tile);
+the grid walks the flat buffer.  Scalars (alpha, lam) ride in ANY memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 1024            # elements per grid step; multiple of 8*128
+
+
+def _lerp_kernel(scal_ref, s_ref, c_ref, o_ref):
+    a = scal_ref[0]
+    s = s_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    o_ref[...] = (a * s + (1.0 - a) * c).astype(o_ref.dtype)
+
+
+def _dc_lerp_kernel(scal_ref, s_ref, c_ref, g_ref, b_ref, o_ref):
+    """Delay-compensated lerp; scal = [alpha, lam].  The client copy is
+    first corrected by the diagonal-Hessian term lam*g*g*(W_s - W_backup)
+    (Zheng et al. [18]), then assimilated."""
+    a, lam = scal_ref[0], scal_ref[1]
+    s = s_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    c_comp = c + lam * g * g * (s - b)
+    o_ref[...] = (a * s + (1.0 - a) * c_comp).astype(o_ref.dtype)
+
+
+def _blocked_call(kernel, scalars, arrays, *, interpret: bool):
+    """Flatten every operand to [nb, BLOCK] (zero-padded) and run the grid."""
+    x0 = arrays[0]
+    n = x0.size
+    nb = -(-n // BLOCK)
+    pad = nb * BLOCK - n
+
+    def prep(x):
+        f = x.reshape(-1)
+        if pad:
+            f = jnp.pad(f, (0, pad))
+        return f.reshape(nb, BLOCK)
+
+    flats = [prep(x) for x in arrays]
+    scal = jnp.stack([jnp.asarray(s, jnp.float32).reshape(()) for s in scalars])
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] + [
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)) for _ in flats],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, BLOCK), x0.dtype),
+        interpret=interpret,
+    )(scal, *flats)
+    out = out.reshape(-1)
+    if pad:
+        out = out[:n]
+    return out.reshape(x0.shape)
+
+
+def vc_asgd_lerp(server: jnp.ndarray, client: jnp.ndarray, alpha,
+                 *, interpret: bool = True) -> jnp.ndarray:
+    """W_s <- alpha*W_s + (1-alpha)*W_c, one fused pass."""
+    return _blocked_call(_lerp_kernel, [alpha], [server, client],
+                         interpret=interpret)
+
+
+def vc_asgd_dc_lerp(server, client, grad, backup, alpha, lam=0.04,
+                    *, interpret: bool = True) -> jnp.ndarray:
+    """Fused DC-ASGD + lerp (one HBM pass over four streams)."""
+    return _blocked_call(_dc_lerp_kernel, [alpha, lam],
+                         [server, client, grad, backup], interpret=interpret)

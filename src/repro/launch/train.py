@@ -1,0 +1,130 @@
+"""End-to-end VC-ASGD trainer.
+
+Runs the paper's full loop at any scale the host provides: a mesh of
+(pod, data, model), per-pod client islands doing local steps, Eq. 2
+assimilation between rounds, timeout-free fault handling (an island that
+fails a round is simply masked out of the assimilation), checkpoint /
+restart of the server copy, and the epoch-varying alpha schedule.
+
+CPU example (2 islands, reduced model):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --reduced --rounds 20 --local-steps 4 --islands 2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_reduced
+from repro.core.vc_asgd import var_alpha, const_alpha
+from repro.data import make_batch_for
+from repro.launch.mesh import make_test_mesh
+from repro.models.registry import build_model
+from repro.optim import Adam
+from repro.runtime.sharding import MeshPlan
+from repro.runtime.vc_runtime import island_shardings, make_vc_round
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU)")
+    ap.add_argument("--islands", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--alpha", default="var",
+                    help="'var' (paper schedule) or a float")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", default="1,2",
+                    help="data,model mesh inside each island")
+    ap.add_argument("--ckpt-dir", default="/tmp/vcjax_ckpt")
+    ap.add_argument("--preempt-round", type=int, default=-1,
+                    help="simulate island-0 preemption at this round")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    n_pods = args.islands
+    dm = tuple(int(x) for x in args.mesh.split(","))
+    n_dev = len(jax.devices())
+    assert n_pods * dm[0] * dm[1] <= n_dev, \
+        f"need {n_pods * dm[0] * dm[1]} devices, have {n_dev}"
+    mesh = jax.make_mesh((n_pods, dm[0], dm[1]), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    plan = MeshPlan.build(cfg, mesh, data_axis="data")
+    optimizer = Adam(lr=args.lr)
+    alpha_fn = var_alpha() if args.alpha == "var" else \
+        const_alpha(float(args.alpha))
+
+    vc_round = make_vc_round(model, plan, n_pods, args.local_steps, optimizer)
+    server_sh, island_sh, opt_sh = island_shardings(model, plan, n_pods,
+                                                    optimizer)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    step_fn = jax.jit(vc_round,
+                      in_shardings=(server_sh, island_sh, opt_sh, None, rep, rep),
+                      out_shardings=(server_sh, island_sh, opt_sh,
+                                     {"loss": rep}))
+
+    ckpt = CheckpointManager(args.ckpt_dir)
+    key = jax.random.PRNGKey(args.seed)
+
+    def init_server():
+        return model.init(key)
+
+    with mesh:
+        server, extra, start_round = ckpt.restore_or_init(
+            jax.eval_shape(init_server) if ckpt.latest_step() else None,
+            init_server)
+        islands = jax.tree.map(
+            lambda s: jnp.broadcast_to(s[None], (n_pods, *s.shape)), server)
+        opts = jax.vmap(optimizer.init)(islands)
+
+        print(f"[train] {cfg.describe()}")
+        print(f"[train] islands={n_pods} mesh={dict(mesh.shape)} "
+              f"resume_round={start_round}")
+        for rnd in range(start_round, args.rounds):
+            t0 = time.time()
+            batches = _round_batches(cfg, n_pods, args.local_steps,
+                                     args.batch, args.seq,
+                                     seed=args.seed * 7919 + rnd)
+            survivors = np.ones((n_pods,), bool)
+            if rnd == args.preempt_round:
+                survivors[0] = False      # island 0 preempted this round
+                print(f"[train] round {rnd}: island 0 PREEMPTED "
+                      f"(masked out of assimilation)")
+            alpha = jnp.asarray(alpha_fn(rnd + 1), jnp.float32)
+            server, islands, opts, metrics = step_fn(
+                server, islands, opts, batches, alpha,
+                jnp.asarray(survivors))
+            loss = float(metrics["loss"])
+            print(f"[train] round {rnd:3d} alpha={float(alpha):.3f} "
+                  f"loss={loss:.4f} ({time.time() - t0:.1f}s)")
+            ckpt.save(rnd + 1, server, {"round": rnd + 1})
+        ckpt.wait()
+    print("[train] done; server checkpoint at", args.ckpt_dir)
+    return 0
+
+
+def _round_batches(cfg, n_pods, local_steps, batch, seq, seed):
+    bs = []
+    for p in range(n_pods):
+        steps = [make_batch_for(cfg, batch, seq, seed=seed * 31 + p * 7 + s)
+                 for s in range(local_steps)]
+        bs.append(jax.tree.map(lambda *x: jnp.stack(x), *steps))
+    return jax.tree.map(lambda *x: jnp.stack(x), *bs)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,226 @@
+"""Model configuration dataclasses shared by the whole zoo.
+
+Every architecture in the pool is expressed as a ``ModelConfig``: a flat
+description of the embedding/FFN/attention dimensions plus a *layer plan*
+(``layer_groups``) that captures heterogeneous stacks (gemma3's 5:1
+local:global pattern, jamba's mamba/attention 7:1 interleave with MoE on
+alternate layers) as repeated "superblocks".  The superblock is the unit we
+``lax.scan`` over, which keeps HLO size and compile time bounded while
+letting ``cost_analysis`` numbers be rescaled exactly (see
+runtime/hlo_analysis.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+AttnKind = Literal["full", "swa"]
+MixerKind = Literal["attn", "mamba", "rwkv"]
+FFNKind = Literal["dense", "moe", "none"]
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    """One layer of the network: a sequence mixer followed by an FFN."""
+
+    mixer: MixerKind = "attn"
+    attn_kind: AttnKind = "full"      # only for mixer == "attn"
+    window: Optional[int] = None       # sliding window size for attn_kind=="swa"
+    ffn: FFNKind = "dense"
+
+    def short(self) -> str:
+        m = {"attn": "A", "mamba": "M", "rwkv": "R"}[self.mixer]
+        if self.mixer == "attn" and self.attn_kind == "swa":
+            m = "a"
+        f = {"dense": "d", "moe": "e", "none": "-"}[self.ffn]
+        return m + f
+
+
+@dataclass(frozen=True)
+class LayerGroup:
+    """``repeats`` copies of a superblock (a tuple of BlockSpecs).
+
+    The model scans over the ``repeats`` axis with the blocks of one
+    superblock unrolled inside the scan body.
+    """
+
+    blocks: Tuple[BlockSpec, ...]
+    repeats: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.blocks) * self.repeats
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # expert-parallel "virtual expert" factor: each expert is split into
+    # ep_virtual f-parallel slices so that n_experts * ep_virtual divides the
+    # EP axis (e.g. mixtral's 8 experts -> 16 virtual on a 16-way axis).
+    # Exact: SwiGLU is elementwise over f and wo contracts f, so f-slices
+    # compose by summation.
+    ep_virtual: int = 1
+
+    @property
+    def n_virtual(self) -> int:
+        return self.n_experts * self.ep_virtual
+
+    @property
+    def d_ff_virtual(self) -> int:
+        assert self.d_ff_expert % self.ep_virtual == 0
+        return self.d_ff_expert // self.ep_virtual
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None  # default: ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    lora_dim_w: int = 64     # decay lora rank
+    lora_dim_mix: int = 32   # token-shift ddlerp lora rank
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder tower for enc-dec models (whisper).  The conv/patch frontend
+    is a STUB: inputs are precomputed frame embeddings."""
+
+    n_layers: int
+    n_frames: int            # encoder sequence length (post-conv)
+    d_model: int
+    n_heads: int
+    d_ff: int
+
+
+@dataclass(frozen=True)
+class VisionStubConfig:
+    """VLM frontend stub: precomputed patch embeddings are model inputs."""
+
+    n_patches: int
+    vit_dim: int
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    layer_groups: Tuple[LayerGroup, ...]
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    norm_eps: float = 1e-5
+    mlp_act: Literal["swiglu", "geglu", "gelu"] = "swiglu"
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rope_theta_local: Optional[float] = None   # gemma3 uses 10k local / 1M global
+    rope_pct: float = 1.0            # fraction of head_dim that is rotated
+    pos_emb: Literal["rope", "learned", "sinusoidal", "none"] = "rope"
+    tie_embeddings: bool = False
+    logit_softcap: Optional[float] = None
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    vision: Optional[VisionStubConfig] = None
+    max_seq: int = 131072
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # chunk sizes for blocked computation (attention / linear-recurrence)
+    attn_q_block: int = 1024
+    attn_kv_block: int = 1024
+    scan_chunk: int = 256            # chunked linear recurrence (mamba / rwkv)
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def n_layers(self) -> int:
+        return sum(g.n_layers for g in self.layer_groups)
+
+    @property
+    def all_blocks(self) -> Tuple[BlockSpec, ...]:
+        out = []
+        for g in self.layer_groups:
+            for _ in range(g.repeats):
+                out.extend(g.blocks)
+        return tuple(out)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.encoder is not None
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(b.mixer != "attn" for b in self.all_blocks)
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """True when per-step decode state is sub-quadratic / bounded:
+        attention-free, hybrid with few attn layers, or bounded-window SWA.
+        Pure full-attention stacks return False (long_500k is skipped)."""
+        blocks = self.all_blocks
+        attn_blocks = [b for b in blocks if b.mixer == "attn"]
+        if not attn_blocks:
+            return True
+        full = [b for b in attn_blocks if b.attn_kind == "full"]
+        # all-SWA (mixtral) -> bounded rolling cache
+        if not full:
+            return True
+        # hybrid / mostly-local: full-attn layers are a small minority and the
+        # seq-sharded decode path bounds per-chip state (jamba, gemma3)
+        return len(full) <= len(blocks) // 4
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> str:
+        pat = "".join(b.short() for b in self.all_blocks)
+        return (f"{self.arch}: {self.n_layers}L d={self.d_model} H={self.n_heads}"
+                f"/kv={self.n_kv_heads} hd={self.hd} ff={self.d_ff} "
+                f"V={self.vocab_size} pattern={pat}")
+
+
+def uniform_groups(n_layers: int, block: BlockSpec, superblock: int = 1) -> Tuple[LayerGroup, ...]:
+    """Homogeneous stack: one group scanning `n_layers // superblock` repeats."""
+    assert n_layers % superblock == 0
+    return (LayerGroup(blocks=(block,) * superblock, repeats=n_layers // superblock),)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count from shapes (filled in by the builders; used by
+    roofline MODEL_FLOPS).  Importing here avoids a cycle."""
+    from repro.models.registry import build_model
+    import jax
+
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return sum(int(jnp.prod(jnp.array(x.shape))) for x in jax.tree.leaves(shapes))

@@ -1,0 +1,715 @@
+"""Core neural-net building blocks (pure JAX, functional).
+
+Key design points (see DESIGN.md §6):
+
+* **Blocked attention** — python-unrolled q-block × kv-block loops with an
+  online-softmax accumulator.  Unrolling (instead of ``lax.scan``) keeps
+  ``compiled.cost_analysis()`` exact (scan bodies are counted once by XLA's
+  analysis) and lets fully-masked blocks be skipped *statically*.
+* **Strided context parallelism (CP)** — when head counts don't divide the
+  model axis (gemma3: 8 heads, qwen: 40 heads), queries are sharded over the
+  sequence instead.  We use a *strided* chunk assignment: chunk ``p`` owns
+  positions ``p, p+P, p+2P, ...`` so every chunk spans the whole range →
+  causal block-skipping stays static and per-shard load is balanced (no
+  stragglers), unlike contiguous CP.
+* **Two-tier KV cache** — decode caches are split into a chunk-sharded
+  read-only "old" tier and a small replicated "recent" ring.  The decode
+  step only ever writes the replicated tier, so no dynamic-update-slice on
+  a sharded dim is ever needed; a cheap ``compact_cache`` (run every R
+  steps, amortized) merges recent → old.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+NEG_INF = -1e30  # large-negative for masking (bf16-safe after cast)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def he_normal(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = math.sqrt(2.0 / fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def lecun_normal(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = math.sqrt(1.0 / fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros(_, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None):
+    dim = dim or cfg.d_model
+    p = {"scale": jnp.ones((dim,), cfg.pdtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), cfg.pdtype)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = x32.mean(-1, keepdims=True)
+        var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (x32 ** 2).mean(-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, theta: float) -> jnp.ndarray:
+    rot = int(cfg.hd * cfg.rope_pct)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig,
+               theta: Optional[float] = None) -> jnp.ndarray:
+    """x: [..., s, h, hd]; positions: broadcastable to x[..., s]."""
+    if cfg.pos_emb != "rope":
+        return x
+    theta = theta if theta is not None else cfg.rope_theta
+    freqs = rope_freqs(cfg, theta)                       # [rot/2]
+    rot = freqs.shape[0] * 2
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., s, rot/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([y.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoidal_pos(seq: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# attention parameters
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": he_normal(ks[0], (d, h * hd), cfg.pdtype),
+        "wk": he_normal(ks[1], (d, kv * hd), cfg.pdtype),
+        "wv": he_normal(ks[2], (d, kv * hd), cfg.pdtype),
+        "wo": he_normal(ks[3], (h * hd, d), cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((kv * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((kv * hd,), cfg.pdtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.pdtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.pdtype)
+    return p
+
+
+def _qk_norm(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt((x32 ** 2).mean(-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def qkv_proj(p, x, cfg: ModelConfig):
+    """x: [..., s, d] -> q [..., s, h, hd], k/v [..., s, kv, hd]."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.cdtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(*q.shape[:-1], h, hd)
+    k = k.reshape(*k.shape[:-1], kv, hd)
+    v = v.reshape(*v.shape[:-1], kv, hd)
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[..., s, kv, hd] -> [..., s, h, hd] by repeating each kv head."""
+    kv = k.shape[-2]
+    if kv == n_heads:
+        return k
+    rep = n_heads // kv
+    k = jnp.broadcast_to(k[..., :, None, :],
+                         (*k.shape[:-2], kv, rep, k.shape[-1]))
+    return k.reshape(*k.shape[:-3], kv * rep, k.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# blocked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+class _Acc(NamedTuple):
+    m: jnp.ndarray    # running max       [b, P, h, sq]
+    l: jnp.ndarray    # running sum       [b, P, h, sq]
+    o: jnp.ndarray    # unnormalized out  [b, P, h, sq, hd]
+
+
+def blocked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, window: Optional[int] = None,
+                      q_positions: Optional[jnp.ndarray] = None,
+                      kv_positions: Optional[jnp.ndarray] = None,
+                      q_block: int = 1024, kv_block: int = 1024,
+                      softcap: Optional[float] = None) -> jnp.ndarray:
+    """Online-softmax attention, python-unrolled over q and kv blocks.
+
+    q:  [b, P, sq, h, hd]   (P = CP chunk dim; use P=1 when not CP-sharded)
+    k,v:[b, skv, kvh, hd]   (replicated over the model axis in CP mode)
+    q_positions: [P, sq] global positions of the queries (strided CP layout);
+        defaults to contiguous arange for P == 1.
+    Returns [b, P, sq, h, hd].
+    """
+    b, P, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0
+    if q_positions is None:
+        assert P == 1
+        q_positions = jnp.arange(sq, dtype=jnp.int32)[None, :]
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv, dtype=jnp.int32)
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    n_qb = (sq + q_block - 1) // q_block
+    n_kb = (skv + kv_block - 1) // kv_block
+    scale = 1.0 / math.sqrt(hd)
+
+    kh = repeat_kv(k, h)     # [b, skv, h, hd] (broadcast view; fused by XLA)
+    vh = repeat_kv(v, h)
+
+    outs = []
+    for i in range(n_qb):
+        qs = slice(i * q_block, min((i + 1) * q_block, sq))
+        qi = q[:, :, qs]                                # [b,P,qb,h,hd]
+        pos_i = q_positions[:, qs]                      # [P,qb]
+        qb = qi.shape[2]
+        m = jnp.full((b, P, h, qb), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, P, h, qb), jnp.float32)
+        o = jnp.zeros((b, P, h, qb, hd), jnp.float32)
+        # static skip bounds — positions are affine in the index, so use
+        # the max/min over the (concrete) iota that built them:
+        pos_i_max = int(_static_max(pos_i))
+        pos_i_min = int(_static_min(pos_i))
+        for j in range(n_kb):
+            ks_ = slice(j * kv_block, min((j + 1) * kv_block, skv))
+            kpos = kv_positions[ks_]
+            kmin, kmax = int(_static_min(kpos)), int(_static_max(kpos))
+            if causal and kmin > pos_i_max:
+                continue                                 # fully masked (future)
+            if window is not None and kmax < pos_i_min - window:
+                continue                                 # fully masked (past window)
+            kj = kh[:, ks_]                              # [b,kb,h,hd]
+            vj = vh[:, ks_]
+            s = jnp.einsum("bpqhd,bkhd->bphqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap is not None:
+                s = jnp.tanh(s / softcap) * softcap
+            mask = None
+            if causal:
+                mask = pos_i[None, :, None, :, None] >= kpos[None, None, None, None, :]
+            if window is not None:
+                wm = kpos[None, None, None, None, :] > \
+                    pos_i[None, :, None, :, None] - window
+                mask = wm if mask is None else (mask & wm)
+            if mask is not None:
+                s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l = l * alpha + pexp.sum(-1)
+            o = o * alpha[..., None] + jnp.einsum(
+                "bphqk,bkhd->bphqd", pexp.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            m = m_new
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        outs.append(o.transpose(0, 1, 3, 2, 4))          # [b,P,qb,h,hd]
+    out = jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
+    return out.astype(q.dtype)
+
+
+def _static_max(x: jnp.ndarray) -> int:
+    """Max of a trace-time-constant int array (positions are iota-built)."""
+    import numpy as np
+    return int(np.max(jax.device_get(_force_concrete(x))))
+
+
+def _static_min(x: jnp.ndarray) -> int:
+    import numpy as np
+    return int(np.min(jax.device_get(_force_concrete(x))))
+
+
+def _force_concrete(x):
+    # positions arrays are built from numpy at trace time in all callers
+    import numpy as np
+    if isinstance(x, np.ndarray):
+        return x
+    try:
+        return np.asarray(x)
+    except Exception as e:  # pragma: no cover
+        raise ValueError("attention positions must be trace-time constants") from e
+
+
+def strided_positions(P: int, sq_local: int) -> "np.ndarray":  # noqa: F821
+    """Strided CP layout: chunk p owns global positions p, p+P, p+2P, ..."""
+    import numpy as np
+    return (np.arange(P, dtype=np.int32)[:, None]
+            + P * np.arange(sq_local, dtype=np.int32)[None, :])
+
+
+# ---------------------------------------------------------------------------
+# two-tier decode KV cache
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    """Per-attention-layer decode cache.
+
+    k_old/v_old: [b, kv, C, L, hd]  chunk-sharded over the model axis (C) or
+                 head-sharded (kv) — read-only within a decode step.
+    old_pos:     [C, L] int32        global position of every old slot
+                 (== -1 for invalid slots).
+    k_rec/v_rec: [b, kv, R, hd]      replicated ring, written every step.
+    rec_pos:     [R] int32           global position per recent slot (-1 invalid).
+    """
+    k_old: jnp.ndarray
+    v_old: jnp.ndarray
+    old_pos: jnp.ndarray
+    k_rec: jnp.ndarray
+    v_rec: jnp.ndarray
+    rec_pos: jnp.ndarray
+
+
+RECENT_RING = 64
+
+
+def make_decode_cache(b: int, kv: int, chunks: int, chunk_len: int, hd: int,
+                      dtype, prefilled: int = 0, recent: int = RECENT_RING
+                      ) -> DecodeCache:
+    """Empty (or logically-prefilled) cache. old_pos marks validity."""
+    pos = (jnp.arange(chunks * chunk_len, dtype=jnp.int32)
+           .reshape(chunks, chunk_len))
+    old_pos = jnp.where(pos < prefilled, pos, -1)
+    return DecodeCache(
+        k_old=jnp.zeros((b, kv, chunks, chunk_len, hd), dtype),
+        v_old=jnp.zeros((b, kv, chunks, chunk_len, hd), dtype),
+        old_pos=old_pos,
+        k_rec=jnp.zeros((b, kv, recent, hd), dtype),
+        v_rec=jnp.zeros((b, kv, recent, hd), dtype),
+        rec_pos=jnp.full((recent,), -1, jnp.int32),
+    )
+
+
+def cache_specs(b, kv, chunks, chunk_len, hd, dtype, recent: int = RECENT_RING):
+    """ShapeDtypeStructs mirroring make_decode_cache (for dry-run lowering)."""
+    sds = jax.ShapeDtypeStruct
+    return DecodeCache(
+        k_old=sds((b, kv, chunks, chunk_len, hd), dtype),
+        v_old=sds((b, kv, chunks, chunk_len, hd), dtype),
+        old_pos=sds((chunks, chunk_len), jnp.int32),
+        k_rec=sds((b, kv, recent, hd), dtype),
+        v_rec=sds((b, kv, recent, hd), dtype),
+        rec_pos=sds((recent,), jnp.int32),
+    )
+
+
+def decode_attention(q: jnp.ndarray, cache: DecodeCache, pos: jnp.ndarray, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None) -> jnp.ndarray:
+    """One-token attention against a two-tier cache.
+
+    q: [b, h, hd]; pos: scalar int32 (current position).
+    Softmax statistics over the chunk-sharded old tier partition cleanly:
+    max/sum over the sharded dims become tiny all-reduces under GSPMD.
+    """
+    b, h, hd = q.shape
+    kv = cache.k_old.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+
+    s_old = jnp.einsum("bkgd,bkcld->bkgcl", qg, cache.k_old.astype(q.dtype),
+                       preferred_element_type=jnp.float32) * scale
+    s_rec = jnp.einsum("bkgd,bkrd->bkgr", qg, cache.k_rec.astype(q.dtype),
+                       preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s_old = jnp.tanh(s_old / softcap) * softcap
+        s_rec = jnp.tanh(s_rec / softcap) * softcap
+
+    lo = (pos - window) if window is not None else -1
+    ok_old = (cache.old_pos >= 0) & (cache.old_pos <= pos)
+    ok_rec = (cache.rec_pos >= 0) & (cache.rec_pos <= pos)
+    if window is not None:
+        ok_old = ok_old & (cache.old_pos > lo)
+        ok_rec = ok_rec & (cache.rec_pos > lo)
+    s_old = jnp.where(ok_old[None, None, None], s_old, NEG_INF)
+    s_rec = jnp.where(ok_rec[None, None, None], s_rec, NEG_INF)
+
+    m = jnp.maximum(s_old.max((-2, -1)), s_rec.max(-1))          # [b,kv,g]
+    p_old = jnp.exp(s_old - m[..., None, None])
+    p_rec = jnp.exp(s_rec - m[..., None])
+    denom = p_old.sum((-2, -1)) + p_rec.sum(-1)
+    o = (jnp.einsum("bkgcl,bkcld->bkgd", p_old.astype(q.dtype),
+                    cache.v_old.astype(q.dtype),
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bkgr,bkrd->bkgd", p_rec.astype(q.dtype),
+                      cache.v_rec.astype(q.dtype),
+                      preferred_element_type=jnp.float32))
+    o = o / jnp.maximum(denom[..., None], 1e-30)
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
+def cache_append_recent(cache: DecodeCache, k_new: jnp.ndarray,
+                        v_new: jnp.ndarray, pos: jnp.ndarray) -> DecodeCache:
+    """Write this step's K/V into the replicated recent ring (cheap DUS on a
+    replicated buffer — never touches the sharded tier)."""
+    R = cache.k_rec.shape[2]
+    slot = jnp.mod(pos, R)
+    k_rec = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rec, k_new[:, :, None, :].astype(cache.k_rec.dtype), slot, axis=2)
+    v_rec = jax.lax.dynamic_update_slice_in_dim(
+        cache.v_rec, v_new[:, :, None, :].astype(cache.v_rec.dtype), slot, axis=2)
+    rec_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.rec_pos, pos[None].astype(jnp.int32), slot, axis=0)
+    return cache._replace(k_rec=k_rec, v_rec=v_rec, rec_pos=rec_pos)
+
+
+def compact_cache(cache: DecodeCache, pos: jnp.ndarray) -> DecodeCache:
+    """Fold the recent ring into the old tier (runs every RECENT_RING steps,
+    outside the measured decode step; one masked pass over the old tier)."""
+    b, kvh, C, L, hd = cache.k_old.shape
+    R = cache.k_rec.shape[2]
+    flat_pos = cache.old_pos.reshape(C * L)
+    # each recent slot lands at old slot (rec_pos mod C*L) in ring order
+    tgt = jnp.mod(cache.rec_pos, C * L)
+    onehot = (jnp.arange(C * L, dtype=jnp.int32)[None, :] == tgt[:, None])
+    onehot = onehot & (cache.rec_pos >= 0)[:, None]           # [R, C*L]
+    sel = onehot.any(0)                                        # [C*L]
+    kr = jnp.einsum("rl,bkrd->bkld", onehot.astype(cache.k_rec.dtype),
+                    cache.k_rec)
+    vr = jnp.einsum("rl,bkrd->bkld", onehot.astype(cache.v_rec.dtype),
+                    cache.v_rec)
+    new_pos = (onehot.astype(jnp.int32) * cache.rec_pos[:, None]).sum(0)
+    k_old = jnp.where(sel[None, None, :, None],
+                      kr, cache.k_old.reshape(b, kvh, C * L, hd))
+    v_old = jnp.where(sel[None, None, :, None],
+                      vr, cache.v_old.reshape(b, kvh, C * L, hd))
+    old_pos = jnp.where(sel, new_pos, flat_pos)
+    return cache._replace(
+        k_old=k_old.reshape(b, kvh, C, L, hd),
+        v_old=v_old.reshape(b, kvh, C, L, hd),
+        old_pos=old_pos.reshape(C, L),
+        k_rec=jnp.zeros_like(cache.k_rec),
+        v_rec=jnp.zeros_like(cache.v_rec),
+        rec_pos=jnp.full((R,), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {"wi": he_normal(ks[0], (d, f), cfg.pdtype),
+                "wg": he_normal(ks[1], (d, f), cfg.pdtype),
+                "wo": he_normal(ks[2], (f, d), cfg.pdtype)}
+    return {"wi": he_normal(ks[0], (d, f), cfg.pdtype),
+            "wo": he_normal(ks[2], (f, d), cfg.pdtype)}
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    dt = cfg.cdtype
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+    elif cfg.mlp_act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(dt), approximate=True) * (x @ p["wi"].astype(dt))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(dt), approximate=True)
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (token-choice top-k, capacity-bounded, local dispatch)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig):
+    """Expert weights are stored in the VIRTUAL layout [e*v, d, f/v] (v=1
+    unless expert parallelism needs virtual splitting) — an f-parallel
+    reshape of the published [e, d, f] weights, numerically identical."""
+    m = cfg.moe
+    d, f, ev = cfg.d_model, m.d_ff_virtual, m.n_virtual
+    ks = jax.random.split(key, 4)
+    p = {"router": lecun_normal(ks[0], (d, m.n_experts), cfg.pdtype)}
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p["wi"] = he_normal(ks[1], (ev, d, f), cfg.pdtype, fan_in=d)
+        p["wg"] = he_normal(ks[2], (ev, d, f), cfg.pdtype, fan_in=d)
+    else:
+        p["wi"] = he_normal(ks[1], (ev, d, f), cfg.pdtype, fan_in=d)
+    p["wo"] = he_normal(ks[3], (ev, f, d), cfg.pdtype, fan_in=f)
+    return p
+
+
+def _virtual_assignments(top_i, top_p, v: int):
+    """[T, k] expert assignments -> [T, k*v] virtual assignments (each
+    expert's v f-slices all receive the token; gates repeat — f-partial
+    outputs sum to the full expert output)."""
+    if v == 1:
+        return top_i, top_p
+    vt = (top_i[..., None] * v
+          + jnp.arange(v, dtype=top_i.dtype)).reshape(*top_i.shape[:-1], -1)
+    vp = jnp.repeat(top_p, v, axis=-1)
+    return vt, vp
+
+
+def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, min(n_tokens, -(-c // 8) * 8))   # round up to 8, clamp
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: [T, d] (tokens of ONE data shard chunk — dispatch is shard-local).
+    Returns ([T, d], aux) where aux carries the load-balancing loss term.
+    Capacity-overflow tokens are dropped (their expert output is zero; the
+    residual passes through) — the same lossy-but-tolerant philosophy the
+    paper applies to parameter updates (§III-D).
+    """
+    m = cfg.moe
+    T, d = x.shape
+    e, k, v = m.n_experts, m.top_k, m.ep_virtual
+    E, kv = m.n_virtual, m.top_k * m.ep_virtual
+    dt = cfg.cdtype
+    cap = moe_capacity(T, cfg)
+
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)   # [T, e]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = jax.lax.top_k(probs, k)                      # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    vt_i, vt_p = _virtual_assignments(top_i, top_p, v)          # [T, k*v]
+
+    flat_e = vt_i.reshape(-1)                                    # [T*kv]
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)              # [T*kv, E]
+    pos_in_e = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(T * kv), flat_e]
+    valid = pos_in_e < cap
+    tok_id = jnp.repeat(jnp.arange(T, dtype=jnp.int32), kv)
+
+    # slot table [E, cap] of source-token ids (T == OOB sentinel row).
+    # Invalid (over-capacity) entries write at expert index E == out of
+    # bounds, which mode="drop" silently discards.
+    slot_tok = jnp.full((E, cap), T, jnp.int32)
+    slot_tok = slot_tok.at[jnp.where(valid, flat_e, E),
+                           jnp.where(valid, pos_in_e, 0)].set(
+        tok_id, mode="drop")
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], 0)
+    xe = x_pad[slot_tok]                                        # [E, cap, d]
+
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_act == "swiglu" else partial(
+            jax.nn.gelu, approximate=True)
+        h = act(jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dt))) * \
+            jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt)),
+                        approximate=True)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))      # [E, cap, d]
+
+    # combine: gather each (t, k*v) virtual output back; f-partials sum
+    gath = ye[flat_e, jnp.minimum(pos_in_e, cap - 1)]            # [T*kv, d]
+    gath = jnp.where(valid[:, None], gath, 0.0)
+    w = vt_p.reshape(-1)[:, None].astype(gath.dtype)
+    out = (gath * w).reshape(T, kv, d).sum(1)
+
+    # Switch-style load-balance aux loss
+    frac_tok = jnp.mean(jax.nn.one_hot(top_i[:, 0], e, dtype=jnp.float32), 0)
+    frac_prob = probs.mean(0)
+    aux = e * jnp.sum(frac_tok * frac_prob)
+    return out.astype(x.dtype), aux
+
+
+def apply_moe_ep(p, x, cfg: ModelConfig, plan):
+    """Expert-parallel MoE for train/prefill (beyond paper; EXPERIMENTS §Perf).
+
+    Tokens travel to their experts' home shards instead of expert weights /
+    activation buffers being resharded: experts live sharded over the data
+    axis ([E, d, fv] with E = n_virtual % D == 0), tokens are dispatched with
+    one all-to-all each way.  The moved payload is the capacity-padded token
+    buffer (MBs) instead of expert weights (GBs).
+
+    x: [b, s, d] with b sharded over data. Returns ([b, s, d], aux).
+    """
+    m = cfg.moe
+    D = plan.ep
+    E, kv, v = m.n_virtual, m.top_k * m.ep_virtual, m.ep_virtual
+    e, k = m.n_experts, m.top_k
+    assert E % D == 0, (E, D)
+    e_loc = E // D
+    b, s, d = x.shape
+    assert b % D == 0, (b, D)
+    dt = cfg.cdtype
+    xl = plan.act(x.reshape(D, (b // D) * s, d), "ep_tokens")   # [D, Tl, d]
+    Tl = xl.shape[1]
+    cap = moe_capacity(Tl, cfg)
+
+    def route_one(xs):
+        """Local routing on one data shard. xs: [Tl, d]."""
+        logits = (xs @ p["router"].astype(dt)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, -1)
+        top_p, top_i = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        vt_i, vt_p = _virtual_assignments(top_i, top_p, v)      # [Tl, kv]
+        flat_e = vt_i.reshape(-1)
+        oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(Tl * kv), flat_e]
+        valid = pos < cap
+        tok_id = jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), kv)
+        slot_tok = jnp.full((E, cap), Tl, jnp.int32)
+        slot_tok = slot_tok.at[jnp.where(valid, flat_e, E),
+                               jnp.where(valid, pos, 0)].set(tok_id,
+                                                             mode="drop")
+        x_pad = jnp.concatenate([xs, jnp.zeros((1, d), xs.dtype)], 0)
+        xe = x_pad[slot_tok]                                    # [E, cap, d]
+        # Switch aux (expert-level, local stats)
+        frac_tok = jnp.mean(jax.nn.one_hot(top_i[:, 0], e,
+                                           dtype=jnp.float32), 0)
+        aux = e * jnp.sum(frac_tok * probs.mean(0))
+        return xe, flat_e, pos, valid, vt_p, aux
+
+    xe, flat_e, pos, valid, vt_p, aux = jax.vmap(route_one)(xl)
+
+    # ---- dispatch all-to-all: [D_src, E, cap, d] -> [D_home, e_loc, ...]
+    y = xe.reshape(D, D, e_loc, cap, d).transpose(1, 2, 0, 3, 4)
+    y = plan.act(y, "ep_dispatched")        # [D_home, e_loc, D_src, cap, d]
+    y = y.reshape(D, e_loc, D * cap, d)
+
+    # ---- expert compute (fully local: E over data, fv over model) --------
+    fv = m.d_ff_virtual
+    wi = plan.act(p["wi"].astype(dt).reshape(D, e_loc, d, fv), "ep_w_in")
+    wo = plan.act(p["wo"].astype(dt).reshape(D, e_loc, fv, d), "ep_w_out")
+    if "wg" in p:
+        wg = plan.act(p["wg"].astype(dt).reshape(D, e_loc, d, fv), "ep_w_in")
+        act = jax.nn.silu if cfg.mlp_act == "swiglu" else partial(
+            jax.nn.gelu, approximate=True)
+        h = act(jnp.einsum("hecd,hedf->hecf", y, wg)) * \
+            jnp.einsum("hecd,hedf->hecf", y, wi)
+    else:
+        h = jax.nn.gelu(jnp.einsum("hecd,hedf->hecf", y, wi),
+                        approximate=True)
+    ye = jnp.einsum("hecf,hefd->hecd", h, wo)   # [D_home, e_loc, D*cap, d]
+
+    # ---- return all-to-all --------------------------------------------
+    back = ye.reshape(D, e_loc, D, cap, d).transpose(2, 0, 1, 3, 4)
+    back = plan.act(back.reshape(D, E, cap, d), "ep_returned")
+
+    def combine_one(ye_l, flat_e_l, pos_l, valid_l, gates_l):
+        gath = ye_l[flat_e_l, jnp.minimum(pos_l, cap - 1)]      # [Tl*kv, d]
+        gath = jnp.where(valid_l[:, None], gath, 0.0)
+        w = gates_l.reshape(-1)[:, None].astype(gath.dtype)
+        return (gath * w).reshape(Tl, kv, d).sum(1)
+
+    out = jax.vmap(combine_one)(back, flat_e, pos, valid, vt_p)
+    out = plan.act(out, "ep_tokens").reshape(b, s, d)
+    return out.astype(x.dtype), aux.mean()
+
+
+def moe_decode_gathered(p, x, cfg: ModelConfig):
+    """Decode-time MoE: gather the top-k experts' weights per token and apply
+    them densely — exactly ``k`` active expert-FFNs worth of FLOPs and
+    ``k/e`` of the expert bytes, no capacity padding.  x: [b, d] -> [b, d]."""
+    m = cfg.moe
+    b, d = x.shape
+    dt = cfg.cdtype
+    logits_ = (x @ p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits_, -1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)            # [b, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    top_i, top_p = _virtual_assignments(top_i, top_p, m.ep_virtual)
+
+    wi = p["wi"].astype(dt)[top_i]                           # [b, kv, d, fv]
+    wo = p["wo"].astype(dt)[top_i]                           # [b, kv, fv, d]
+    if "wg" in p:
+        wg = p["wg"].astype(dt)[top_i]
+        act = jax.nn.silu if cfg.mlp_act == "swiglu" else partial(
+            jax.nn.gelu, approximate=True)
+        h = act(jnp.einsum("bd,bkdf->bkf", x, wg)) * \
+            jnp.einsum("bd,bkdf->bkf", x, wi)
+    else:
+        h = jax.nn.gelu(jnp.einsum("bd,bkdf->bkf", x, wi), approximate=True)
+    y = jnp.einsum("bkf,bkfd->bkd", h, wo)
+    return (y * top_p[..., None].astype(dt)).sum(1)
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits (padded vocab, model-axis sharded)
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg: ModelConfig, multiple: int = 16) -> int:
+    v = cfg.vocab_size
+    return -(-v // multiple) * multiple
+
+
+def init_embedding(key, cfg: ModelConfig):
+    vp = padded_vocab(cfg)
+    p = {"table": lecun_normal(key, (vp, cfg.d_model), cfg.pdtype,
+                               fan_in=cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = lecun_normal(jax.random.fold_in(key, 1),
+                                    (cfg.d_model, vp), cfg.pdtype)
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    return p["table"].astype(cfg.cdtype)[tokens]
+
+
+def logits(p, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        out = x @ p["table"].astype(cfg.cdtype).T
+    else:
+        out = x @ p["unembed"].astype(cfg.cdtype)
+    if cfg.logit_softcap is not None:
+        out = jnp.tanh(out / cfg.logit_softcap) * cfg.logit_softcap
+    # mask padded vocab rows
+    vp, v = out.shape[-1], cfg.vocab_size
+    if vp != v:
+        mask = jnp.arange(vp) < v
+        out = jnp.where(mask, out, NEG_INF)
+    return out

@@ -1,0 +1,197 @@
+"""Mamba (selective SSM) block — used by jamba-v0.1 (hybrid 1:7 interleave).
+
+Two execution modes:
+
+* ``chunked`` (train / prefill): python-unrolled loop over time chunks with a
+  ``jax.lax.associative_scan`` *inside* each chunk.  associative_scan lowers
+  to a tree of real HLO ops (no while-loop), so ``cost_analysis`` counts its
+  FLOPs exactly — required by the roofline methodology — and the per-chunk
+  state hand-off bounds the materialized [chunk, d_inner, d_state] tensor.
+* ``recurrent`` (decode / oracle): one step of the exact recurrence.
+
+TPU adaptation note (DESIGN.md §2): the CUDA selective-scan kernel fuses the
+recurrence in SRAM; on TPU we target a Pallas kernel (kernels/mamba_scan.py)
+with the same chunked decomposition, MXU-aligned [128k] blocks in VMEM.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import he_normal
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # [b, d_inner, d_conv - 1]
+    ssm: jnp.ndarray    # [b, d_inner, d_state]  (f32)
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, m.d_state, m.d_conv, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, ds, dc, dtr = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    # S4D-real init for A
+    a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                     (di, ds)))
+    dt_bias = jnp.log(jnp.exp(jnp.exp(
+        jax.random.uniform(ks[6], (di,), jnp.float32) *
+        (math.log(0.1) - math.log(0.001)) + math.log(0.001))) - 1.0 + 1e-9)
+    return {
+        "in_proj": he_normal(ks[0], (d, 2 * di), cfg.pdtype),
+        "conv_w": he_normal(ks[1], (dc, di), cfg.pdtype, fan_in=dc),
+        "conv_b": jnp.zeros((di,), cfg.pdtype),
+        "x_proj": he_normal(ks[2], (di, dtr + 2 * ds), cfg.pdtype),
+        "dt_proj": he_normal(ks[3], (dtr, di), cfg.pdtype, fan_in=dtr),
+        "dt_bias": dt_bias.astype(cfg.pdtype),
+        "a_log": a_log.astype(jnp.float32),          # keep f32: exp-sensitive
+        "d_skip": jnp.ones((di,), cfg.pdtype),
+        "out_proj": he_normal(ks[4], (di, d), cfg.pdtype),
+    }
+
+
+def _ssm_inputs(p, x, cfg: ModelConfig):
+    """Shared projections. x: [b, s, d] -> (u, u_pre, z, dt_r, B, C) with
+    u [b,s,di] conv'd+silu'd, z gate, dt_r [b,s,dtr] (pre-dt_proj, small —
+    the [b,s,di] dt and [b,s,di,ds] discretization are materialized
+    per-chunk under remat to bound the working set), B/C [b,s,ds]."""
+    di, ds, dc, dtr = _dims(cfg)
+    dt_ = cfg.cdtype
+    xz = x @ p["in_proj"].astype(dt_)                 # [b, s, 2di]
+    u_pre, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv over time (kernel dc)
+    pad = jnp.pad(u_pre, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv = sum(pad[:, i: i + u_pre.shape[1]] * p["conv_w"].astype(dt_)[i]
+               for i in range(dc))
+    u = jax.nn.silu(conv + p["conv_b"].astype(dt_))
+
+    xdbc = u @ p["x_proj"].astype(dt_)                # [b, s, dtr+2ds]
+    dt_r, B, C = jnp.split(xdbc, [dtr, dtr + ds], axis=-1)
+    return u, u_pre, z, dt_r, B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def _chunk_scan(p, u_c, dtr_c, B_c, C_c, h_prev, cfg: ModelConfig):
+    """One chunk of the selective scan; the [chunk, di, ds] discretization
+    tensors live only inside this (rematted) region."""
+    dt_ = cfg.cdtype
+    dt = jax.nn.softplus((dtr_c @ p["dt_proj"].astype(dt_)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # [b,C,di]
+    A = -jnp.exp(p["a_log"])
+    a_c = jnp.exp(dt[..., None] * A)                  # [b,C,di,ds]
+    b_c = (dt * u_c.astype(jnp.float32))[..., None] * B_c[..., None, :]
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    cumA, hs = jax.lax.associative_scan(combine, (a_c, b_c), axis=1)
+    h = cumA * h_prev[:, None] + hs                   # [b,C,di,ds]
+    y = jnp.einsum("bcds,bcs->bcd", h, C_c)           # [b,C,di]
+    return y, h[:, -1]
+
+
+def mamba_chunked(p, x, cfg: ModelConfig, h0: jnp.ndarray = None):
+    """x: [b, s, d] -> y [b, s, d].  Unrolled chunks, each rematted, with
+    the per-chunk state handed across chunk boundaries."""
+    b, s, d = x.shape
+    di, ds, dc, dtr = _dims(cfg)
+    u, u_pre, z, dt_r, B, C = _ssm_inputs(p, x, cfg)
+
+    chunk = min(cfg.scan_chunk, s)
+    h_prev = h0 if h0 is not None else jnp.zeros((b, di, ds), jnp.float32)
+    chunk_fn = jax.checkpoint(
+        lambda uc, dc_, bc, cc, hp: _chunk_scan(p, uc, dc_, bc, cc, hp, cfg))
+    if s % chunk == 0 and s // chunk > 1:
+        # scan over chunks: one chunk's [C, di, ds] working set at a time
+        # (the while-loop trip count is rescaled by the roofline analyzer)
+        nch = s // chunk
+
+        def sbody(hp, xs):
+            uc, dc_, bc, cc = xs
+            y, hp = chunk_fn(uc, dc_, bc, cc, hp)
+            return hp, y
+
+        stack = lambda t: t.reshape(b, nch, chunk, -1).swapaxes(0, 1)
+        h_prev, ys = jax.lax.scan(
+            sbody, h_prev, (stack(u), stack(dt_r), stack(B), stack(C)))
+        y = ys.swapaxes(0, 1).reshape(b, s, di)
+    else:
+        ys = []
+        for c0 in range(0, s, chunk):                 # last chunk may be short
+            sl = slice(c0, c0 + chunk)
+            y, h_prev = chunk_fn(u[:, sl], dt_r[:, sl], B[:, sl], C[:, sl],
+                                 h_prev)
+            ys.append(y)
+        y = jnp.concatenate(ys, axis=1) if len(ys) > 1 else ys[0]
+    y = y + u.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(cfg.cdtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(cfg.cdtype)
+    # decode-compatible carry state: PRE-conv activations of the tail
+    conv_state = (u_pre[:, -(dc - 1):].swapaxes(1, 2) if dc > 1
+                  else jnp.zeros((b, di, 0), cfg.cdtype))
+    return out, MambaState(conv=conv_state, ssm=h_prev)
+
+
+def mamba_decode_state(b: int, cfg: ModelConfig, dtype) -> MambaState:
+    di, ds, dc, _ = _dims(cfg)
+    return MambaState(conv=jnp.zeros((b, di, dc - 1), dtype),
+                      ssm=jnp.zeros((b, di, ds), jnp.float32))
+
+
+def mamba_state_specs(b: int, cfg: ModelConfig, dtype) -> MambaState:
+    di, ds, dc, _ = _dims(cfg)
+    sds = jax.ShapeDtypeStruct
+    return MambaState(conv=sds((b, di, dc - 1), dtype),
+                      ssm=sds((b, di, ds), jnp.float32))
+
+
+def mamba_decode(p, x, state: MambaState, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, MambaState]:
+    """One decode step. x: [b, d] -> (y [b, d], new state)."""
+    b, d = x.shape
+    di, ds, dc, dtr = _dims(cfg)
+    dt_ = cfg.cdtype
+    xz = x @ p["in_proj"].astype(dt_)
+    u, z = jnp.split(xz, 2, axis=-1)                  # [b, di]
+
+    conv_in = jnp.concatenate([state.conv.astype(dt_), u[:, :, None]], -1)
+    u = jax.nn.silu(jnp.einsum("bdc,cd->bd", conv_in, p["conv_w"].astype(dt_))
+                    + p["conv_b"].astype(dt_))
+    new_conv = conv_in[:, :, 1:]
+
+    xdbc = u @ p["x_proj"].astype(dt_)
+    dt_r, B, C = jnp.split(xdbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"].astype(dt_)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [b, di]
+    A = -jnp.exp(p["a_log"])
+    a_bar = jnp.exp(dt[..., None] * A)                # [b, di, ds]
+    bx = (dt * u.astype(jnp.float32))[..., None] * \
+        B.astype(jnp.float32)[:, None, :]             # [b, di, ds]
+    h = a_bar * state.ssm + bx
+    y = jnp.einsum("bds,bs->bd", h, C.astype(jnp.float32))
+    y = y + u.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_), MambaState(conv=new_conv, ssm=h)
+
+
+def mamba_recurrent_ref(p, x, cfg: ModelConfig):
+    """Step-by-step oracle (numpy-paced scan) — used by tests only."""
+    b, s, d = x.shape
+    state = mamba_decode_state(b, cfg, cfg.cdtype)
+    ys = []
+    for t in range(s):
+        y, state = mamba_decode(p, x[:, t], state, cfg)
+        ys.append(y)
+    return jnp.stack(ys, axis=1)

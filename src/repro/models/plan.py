@@ -1,0 +1,34 @@
+"""Execution-plan protocol decoupling models from distribution.
+
+Models call ``plan.act(x, kind)`` at layout boundaries; the runtime's
+``MeshPlan`` (runtime/sharding.py) turns those into
+``with_sharding_constraint``s.  The default ``NullPlan`` is the identity —
+models run unchanged on a single device (all tests exploit this, including
+the property test that CP chunking with any P is numerically identical to
+P=1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass
+class NullPlan:
+    # attention execution mode: "local" (replicated heads), "head_tp"
+    # (heads sharded over the model axis), "cp" (contiguous-chunk context
+    # parallelism over the model axis)
+    attn_mode: str = "local"
+    cp: int = 1                 # CP chunk count (== model axis size when sharded)
+    cache_chunks: int = 1       # decode-cache old-tier chunk count
+    window_gather: bool = True  # SWA layers gather only neighbor kv chunks
+    moe_ep: bool = False        # expert-parallel MoE dispatch (train/prefill)
+    ep: int = 1                 # EP degree (== data axis size)
+
+    def act(self, x, kind: str):
+        """Sharding-constraint hook. kind names the logical layout:
+        bsd / cp_bpsd / q_bpshd / kv_rep / kv_cp / logits / moe_tokens /
+        dec_x / dec_q / scores ..."""
+        return x
+
+
+NULL_PLAN = NullPlan()

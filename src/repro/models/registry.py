@@ -1,0 +1,62 @@
+"""Uniform model facade: every architecture exposes the same five entry
+points regardless of family (decoder-only LM, enc-dec, VLM, SSM, hybrid).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models.common import ModelConfig
+from repro.models.plan import NULL_PLAN
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- init ----
+    def init(self, key):
+        if self.cfg.is_enc_dec:
+            return W.init_whisper(key, self.cfg)
+        return T.init_lm(key, self.cfg)
+
+    def param_specs(self):
+        """Shape-only init (never allocates) — the dry-run path."""
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ---- train ----
+    def loss(self, params, batch, plan=NULL_PLAN, remat: bool = True):
+        if self.cfg.is_enc_dec:
+            return W.whisper_loss(params, self.cfg, batch, plan)
+        return T.lm_loss(params, self.cfg, batch, plan, remat=remat)
+
+    def forward(self, params, batch, plan=NULL_PLAN, remat: bool = True):
+        if self.cfg.is_enc_dec:
+            enc = W.encode(params, self.cfg, batch["frame_embeds"], plan)
+            lg, _ = W.decoder_forward(params, self.cfg, batch["tokens"], enc, plan)
+            return lg
+        return T.lm_forward(params, self.cfg, batch, plan, remat=remat)[0]
+
+    # ---- serve ----
+    def prefill(self, params, batch, plan=NULL_PLAN):
+        if self.cfg.is_enc_dec:
+            return W.whisper_prefill(params, self.cfg, batch, plan)
+        return T.lm_prefill(params, self.cfg, batch, plan)
+
+    def decode_step(self, params, caches, token, pos, plan=NULL_PLAN):
+        if self.cfg.is_enc_dec:
+            return W.whisper_decode_step(params, self.cfg, caches, token, pos, plan)
+        return T.lm_decode_step(params, self.cfg, caches, token, pos, plan)
+
+    def cache_specs(self, b: int, seq_len: int, plan=NULL_PLAN):
+        if self.cfg.is_enc_dec:
+            return W.whisper_cache_specs(self.cfg, b, seq_len, plan)
+        return T.decode_cache_specs(self.cfg, b, seq_len, plan)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg)

@@ -1,0 +1,230 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free, data-dependent decay.
+
+Time-mix (WKV6) recurrence per head (k-dim i, v-dim j):
+
+    out_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+
+with per-channel, per-timestep decay ``w_t = exp(-exp(w0 + lora_w(x)))``.
+
+Modes:
+
+* ``chunked`` (train / prefill): python-unrolled chunks; *within* a chunk
+  the intra-token interaction uses the numerically-exact log-space distance
+  form  ``D[t,j,i] = exp(lcw_{t-1}[i] - lcw_j[i])`` whose exponent is always
+  <= 0, so it is stable for any decay values (GLA-style, without secondary
+  chunking).  All ops are real HLO (no while-loops) so cost_analysis is
+  exact, per the roofline methodology.
+* ``recurrent`` (decode / oracle): exact single-step recurrence.
+
+Token-shift data-dependent lerp (ddlerp) follows the paper: a shared
+low-rank bottleneck modulates five interpolation gates (w,k,v,r,g).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import he_normal, lecun_normal
+
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray      # [b, h, hd, hd]  (f32) matrix state
+    tm_prev: jnp.ndarray  # [b, d]  last token input of time-mix
+    cm_prev: jnp.ndarray  # [b, d]  last token input of channel-mix
+
+
+MIX = ("w", "k", "v", "r", "g")
+
+
+def _dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h, hd = _dims(cfg)
+    r = cfg.rwkv
+    ks = jax.random.split(key, 16)
+    p = {
+        "mu_x": jnp.full((d,), 0.5, cfg.pdtype),
+        "lora_a": lecun_normal(ks[0], (d, r.lora_dim_mix * 5), cfg.pdtype),
+        "lora_b": (jax.random.normal(ks[1], (5, r.lora_dim_mix, d), jnp.float32)
+                   * 0.01).astype(cfg.pdtype),
+        "w0": jnp.full((d,), -5.0, jnp.float32),     # decay bias (f32, exp-sensitive)
+        "w_a": lecun_normal(ks[2], (d, r.lora_dim_w), cfg.pdtype),
+        "w_b": (jax.random.normal(ks[3], (r.lora_dim_w, d), jnp.float32)
+                * 0.01).astype(cfg.pdtype),
+        "u": (jax.random.normal(ks[4], (h, hd), jnp.float32) * 0.1
+              ).astype(cfg.pdtype),
+        "wr": he_normal(ks[5], (d, d), cfg.pdtype),
+        "wk": he_normal(ks[6], (d, d), cfg.pdtype),
+        "wv": he_normal(ks[7], (d, d), cfg.pdtype),
+        "wg": he_normal(ks[8], (d, d), cfg.pdtype),
+        "wo": he_normal(ks[9], (d, d), cfg.pdtype),
+        "ln_x": jnp.ones((d,), cfg.pdtype),          # per-head groupnorm scale
+    }
+    for i, m in enumerate(MIX):
+        p[f"mu_{m}"] = jnp.full((d,), 0.3 + 0.1 * i, cfg.pdtype)
+    return p
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, cfg.pdtype),
+        "mu_r": jnp.full((d,), 0.5, cfg.pdtype),
+        "wk": he_normal(ks[0], (d, f), cfg.pdtype),
+        "wv": he_normal(ks[1], (f, d), cfg.pdtype),
+        "wr": he_normal(ks[2], (d, d), cfg.pdtype),
+    }
+
+
+def _ddlerp(p, x, x_prev, cfg: ModelConfig):
+    """Data-dependent token-shift interpolation -> dict of five mixed inputs."""
+    dt = cfg.cdtype
+    dx = x_prev - x
+    base = x + dx * p["mu_x"].astype(dt)
+    lora = jnp.tanh(base @ p["lora_a"].astype(dt))
+    lora = lora.reshape(*lora.shape[:-1], 5, cfg.rwkv.lora_dim_mix)
+    mods = jnp.einsum("...ml,mld->...md", lora, p["lora_b"].astype(dt))
+    out = {}
+    for i, m in enumerate(MIX):
+        out[m] = x + dx * (p[f"mu_{m}"].astype(dt) + mods[..., i, :])
+    return out
+
+
+def _time_mix_proj(p, x, x_prev, cfg: ModelConfig):
+    """Projections shared by chunked and recurrent paths.
+    x: [..., d] -> r,k,v [..., h, hd], g [..., d], logw [..., h, hd] (f32<=~0)."""
+    h, hd = _dims(cfg)
+    dt = cfg.cdtype
+    mix = _ddlerp(p, x, x_prev, cfg)
+    r = (mix["r"] @ p["wr"].astype(dt)).reshape(*x.shape[:-1], h, hd)
+    k = (mix["k"] @ p["wk"].astype(dt)).reshape(*x.shape[:-1], h, hd)
+    v = (mix["v"] @ p["wv"].astype(dt)).reshape(*x.shape[:-1], h, hd)
+    g = jax.nn.silu(mix["g"] @ p["wg"].astype(dt))
+    ww = p["w0"] + (jnp.tanh(mix["w"] @ p["w_a"].astype(dt))
+                    @ p["w_b"].astype(dt)).astype(jnp.float32)
+    logw = -jnp.exp(ww)                                # log decay, <= 0
+    logw = logw.reshape(*x.shape[:-1], h, hd)
+    return r, k, v, g, logw
+
+
+def _head_groupnorm(p, x, cfg: ModelConfig, eps=64e-5):
+    """Per-head LayerNorm over hd (RWKV's ln_x), then flatten heads."""
+    h, hd = _dims(cfg)
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*x.shape[:-2], h * hd) * p["ln_x"].astype(jnp.float32)
+    return y
+
+
+def time_mix_chunked(p, x, cfg: ModelConfig, state: RWKVState = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [b, s, d] -> (out [b, s, d], final wkv state [b,h,hd,hd], x_last)."""
+    b, s, d = x.shape
+    h, hd = _dims(cfg)
+    x_first = state.tm_prev if state is not None else jnp.zeros((b, d), cfg.cdtype)
+    x_prev = jnp.concatenate([x_first[:, None], x[:, :-1]], axis=1)
+    r, k, v, g, logw = _time_mix_proj(p, x, x_prev, cfg)
+    u = p["u"].astype(jnp.float32)
+
+    chunk = min(cfg.scan_chunk, s)
+    S = (state.wkv if state is not None
+         else jnp.zeros((b, h, hd, hd), jnp.float32))
+    outs = []
+    for c0 in range(0, s, chunk):                      # last chunk may be short
+        cl = min(chunk, s - c0)
+        sl = slice(c0, c0 + cl)
+        rc = r[:, sl].astype(jnp.float32)              # [b,C,h,hd]
+        kc = k[:, sl].astype(jnp.float32)
+        vc = v[:, sl].astype(jnp.float32)
+        lw = logw[:, sl]                               # [b,C,h,hd] (<= 0)
+        lcw = jnp.cumsum(lw, axis=1)                   # inclusive log cumdecay
+        # ---- inter-chunk: r_t decays over everything before the chunk
+        rd = rc * jnp.exp(lcw - lw)                    # r_t * cw_{t-1}
+        inter = jnp.einsum("bchi,bhij->bchj", rd, S)
+        # ---- intra-chunk: exact log-space distance matrix (exponent <= 0)
+        # D[t,j,i] = exp(lcw[t-1,i] - lcw[j,i]) for j < t ; u-bonus at j == t
+        lq = (lcw - lw)[:, :, None]                    # [b,C,1,h,hd] query side
+        lk = lcw[:, None]                              # [b,1,C,h,hd] key side
+        tri = jnp.tril(jnp.ones((cl, cl), jnp.bool_), k=-1)
+        D = jnp.where(tri[None, :, :, None, None], jnp.exp(lq - lk), 0.0)
+        att = jnp.einsum("bthi,btjhi,bjhi->bthj", rc, D, kc)
+        diag = jnp.einsum("bthi,hi,bthi->bth", rc, u, kc)
+        eye_tj = jnp.eye(cl, dtype=att.dtype)[None, :, None, :]  # [1,t,1,j]
+        att = att + diag[..., None] * eye_tj
+        intra = jnp.einsum("bthj,bjhi->bthi", att, vc)
+        outs.append(inter + intra)
+        # ---- state update: S' = exp(lcw[-1]) * S + sum_j exp(lcw[-1]-lcw[j]) k_j v_j
+        decay_all = jnp.exp(lcw[:, -1])                # [b,h,hd]
+        kd = kc * jnp.exp(lcw[:, -1][:, None] - lcw)
+        S = decay_all[..., None] * S + jnp.einsum("bchi,bchj->bhij", kd, vc)
+
+    o = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    o = _head_groupnorm(p, o.reshape(b, s, h, hd), cfg)
+    o = (o.astype(cfg.cdtype) * g) @ p["wo"].astype(cfg.cdtype)
+    return o, S, x[:, -1]
+
+
+def time_mix_decode(p, x, state: RWKVState, cfg: ModelConfig
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One step. x: [b, d] -> (out [b, d], new_S, x)."""
+    b, d = x.shape
+    h, hd = _dims(cfg)
+    r, k, v, g, logw = _time_mix_proj(p, x, state.tm_prev, cfg)
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["u"].astype(jnp.float32)
+    kv = k32[..., :, None] * v32[..., None, :]          # [b,h,hd,hd]
+    out = jnp.einsum("bhi,bhij->bhj", r32, state.wkv + u[..., None] * kv)
+    S = jnp.exp(logw)[..., None] * state.wkv + kv
+    o = _head_groupnorm(p, out, cfg)
+    o = (o.astype(cfg.cdtype) * g) @ p["wo"].astype(cfg.cdtype)
+    return o, S, x
+
+
+def channel_mix(p, x, x_prev, cfg: ModelConfig):
+    """x: [..., d]; x_prev same shape (token-shifted)."""
+    dt = cfg.cdtype
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"].astype(dt)
+    xr = x + dx * p["mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    return jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * (kk @ p["wv"].astype(dt))
+
+
+def rwkv_state_init(b: int, cfg: ModelConfig) -> RWKVState:
+    h, hd = _dims(cfg)
+    return RWKVState(wkv=jnp.zeros((b, h, hd, hd), jnp.float32),
+                     tm_prev=jnp.zeros((b, cfg.d_model), cfg.cdtype),
+                     cm_prev=jnp.zeros((b, cfg.d_model), cfg.cdtype))
+
+
+def rwkv_state_specs(b: int, cfg: ModelConfig) -> RWKVState:
+    h, hd = _dims(cfg)
+    sds = jax.ShapeDtypeStruct
+    return RWKVState(wkv=sds((b, h, hd, hd), jnp.float32),
+                     tm_prev=sds((b, cfg.d_model), cfg.cdtype),
+                     cm_prev=sds((b, cfg.d_model), cfg.cdtype))
+
+
+def time_mix_recurrent_ref(p, x, cfg: ModelConfig):
+    """Token-by-token oracle for tests (python loop over time)."""
+    b, s, d = x.shape
+    st = rwkv_state_init(b, cfg)
+    outs = []
+    for t in range(s):
+        o, S, xl = time_mix_decode(p, x[:, t], st, cfg)
+        st = st._replace(wkv=S, tm_prev=xl)
+        outs.append(o)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,506 @@
+"""Decoder-only LM assembly: heterogeneous block stacks, scan-over-superblocks
+with remat, CP/TP-aware attention, KV-cache prefill/decode.
+
+The layer plan (cfg.layer_groups) is a list of (superblock, repeats); we
+``lax.scan`` over repeats with the superblock unrolled in the body.  This
+bounds HLO size for deep models and makes cost-analysis rescaling exact
+(runtime/hlo_analysis.py).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import rwkv as R
+from repro.models.common import BlockSpec, LayerGroup, ModelConfig
+from repro.models.plan import NULL_PLAN
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, spec: BlockSpec) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L.init_norm(cfg)}
+    if spec.mixer == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mamba"] = M.init_mamba(ks[0], cfg)
+    elif spec.mixer == "rwkv":
+        p["rwkv_tm"] = R.init_time_mix(ks[0], cfg)
+    if spec.ffn != "none":
+        p["norm2"] = L.init_norm(cfg)
+        if spec.ffn == "moe":
+            p["moe"] = L.init_moe(ks[1], cfg)
+        elif spec.mixer == "rwkv":
+            p["rwkv_cm"] = R.init_channel_mix(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2 + len(cfg.layer_groups))
+    params: Dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg),
+        "final_norm": L.init_norm(cfg),
+    }
+    if cfg.vision is not None:
+        kv1, kv2 = jax.random.split(jax.random.fold_in(ks[0], 7))
+        params["vis_proj"] = {
+            "w1": L.he_normal(kv1, (cfg.vision.vit_dim, cfg.d_model), cfg.pdtype),
+            "w2": L.he_normal(kv2, (cfg.d_model, cfg.d_model), cfg.pdtype),
+        }
+    for gi, g in enumerate(cfg.layer_groups):
+        def init_rep(k):
+            kk = jax.random.split(k, len(g.blocks))
+            return [init_block(kk[i], cfg, s) for i, s in enumerate(g.blocks)]
+        reps = [init_rep(jax.random.fold_in(ks[2 + gi], r))
+                for r in range(g.repeats)]
+        params[f"group{gi}"] = jax.tree.map(lambda *x: jnp.stack(x), *reps) \
+            if g.repeats > 1 else jax.tree.map(lambda x: x[None], reps[0])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# attention sub-layer (train / prefill) in the three execution modes
+# ---------------------------------------------------------------------------
+
+def _rope_theta_for(cfg: ModelConfig, spec: BlockSpec) -> float:
+    if spec.attn_kind == "swa" and cfg.rope_theta_local is not None:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+def attn_forward(p, x, cfg: ModelConfig, spec: BlockSpec, plan,
+                 return_kv: bool = False):
+    """x: [b, s, d] ("local"/"head_tp") or [b, P, sl, d] ("cp").
+    Returns (out same layout, optional (k, v) in natural [b, s, kv, hd])."""
+    mode = plan.attn_mode
+    window = spec.window if spec.attn_kind == "swa" else None
+    theta = _rope_theta_for(cfg, spec)
+
+    if mode in ("local", "head_tp"):
+        b, s, d = x.shape
+        q, k, v = L.qkv_proj(p, x, cfg)                      # [b,s,h/kv,hd]
+        pos = np.arange(s, dtype=np.int32)
+        q = L.apply_rope(q, jnp.asarray(pos), cfg, theta)
+        k = L.apply_rope(k, jnp.asarray(pos), cfg, theta)
+        q = plan.act(q, "q_bshd")
+        k = plan.act(k, "kv_bshd")
+        v = plan.act(v, "kv_bshd")
+        o = L.blocked_attention(
+            q[:, None], k, v, causal=True, window=window,
+            q_positions=pos[None, :], kv_positions=pos,
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+        o = o[:, 0].reshape(b, s, cfg.n_heads * cfg.hd)
+        out = plan.act(o @ p["wo"].astype(cfg.cdtype), "bsd")
+        return out, ((k, v) if return_kv else None)
+
+    # ---- contiguous-chunk context parallelism -----------------------------
+    b, P, sl, d = x.shape
+    s = P * sl
+    q, k, v = L.qkv_proj(p, x, cfg)                          # [b,P,sl,*,hd]
+    pos = (np.arange(P, dtype=np.int32)[:, None] * sl
+           + np.arange(sl, dtype=np.int32)[None, :])         # [P, sl]
+    q = L.apply_rope(q, jnp.asarray(pos)[None], cfg, theta)
+    k = L.apply_rope(k, jnp.asarray(pos)[None], cfg, theta)
+    q = plan.act(q, "q_bpshd")
+
+    if window is not None and plan.window_gather and P > 1:
+        # gather only the neighbor kv chunks each q chunk can see
+        nw = min(P, int(math.ceil(window / sl)) + 1)
+        idx = (np.arange(P)[:, None] - (nw - 1) + np.arange(nw)[None, :])
+        valid = idx >= 0                                      # [P, nw]
+        idxc = np.clip(idx, 0, P - 1)
+        kg = plan.act(jnp.take(k, jnp.asarray(idxc), axis=1), "kv_gather")
+        vg = plan.act(jnp.take(v, jnp.asarray(idxc), axis=1), "kv_gather")
+        # [b, P, nw, sl, kv, hd] -> flatten window dim
+        kg = kg.reshape(b, P, nw * sl, cfg.n_kv_heads, cfg.hd)
+        vg = vg.reshape(b, P, nw * sl, cfg.n_kv_heads, cfg.hd)
+        kpos = (idxc[:, :, None] * sl + np.arange(sl)[None, None, :])
+        kpos = np.where(valid[:, :, None], kpos, -10 ** 9)    # mask clipped dups
+        kpos = kpos.reshape(P, nw * sl)
+        o = _attn_per_chunk(q, kg, vg, pos, kpos, cfg, window=window)
+    else:
+        # full gather (replicate KV over the model axis), natural order
+        kf = plan.act(k.reshape(b, s, cfg.n_kv_heads, cfg.hd), "kv_rep")
+        vf = plan.act(v.reshape(b, s, cfg.n_kv_heads, cfg.hd), "kv_rep")
+        o = L.blocked_attention(
+            q, kf, vf, causal=True, window=window,
+            q_positions=pos, kv_positions=np.arange(s, dtype=np.int32),
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+    o = o.reshape(b, P, sl, cfg.n_heads * cfg.hd)
+    out = plan.act(o @ p["wo"].astype(cfg.cdtype), "cp_bpsd")
+    if return_kv:
+        return out, (k.reshape(b, s, cfg.n_kv_heads, cfg.hd),
+                     v.reshape(b, s, cfg.n_kv_heads, cfg.hd))
+    return out, None
+
+
+def _attn_per_chunk(q, kg, vg, qpos, kpos, cfg: ModelConfig, window):
+    """Per-chunk attention where each q chunk has its OWN kv set.
+    q: [b,P,sl,h,hd]; kg/vg: [b,P,skv,kv,hd]; qpos [P,sl]; kpos [P,skv]."""
+    b, P, sl, h, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    kh = L.repeat_kv(kg, h)
+    vh = L.repeat_kv(vg, h)
+    s = jnp.einsum("bpqhd,bpkhd->bphqk", q, kh,
+                   preferred_element_type=jnp.float32) * scale
+    mask = (qpos[:, None, :, None] >= kpos[:, None, None, :])
+    if window is not None:
+        mask = mask & (kpos[:, None, None, :] > qpos[:, None, :, None] - window)
+    s = jnp.where(jnp.asarray(mask)[None], s, L.NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bphqk,bpkhd->bpqhd", w.astype(vh.dtype), vh,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# one block (train / prefill)
+# ---------------------------------------------------------------------------
+
+def block_forward(p, x, cfg: ModelConfig, spec: BlockSpec, plan,
+                  return_kv: bool = False):
+    """Returns (x_out, aux_loss, kv or carry-state info)."""
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if spec.mixer == "attn":
+        o, kv = attn_forward(p["attn"], h, cfg, spec, plan, return_kv)
+        x = x + o
+    elif spec.mixer == "mamba":
+        o, mstate = M.mamba_chunked(p["mamba"], h, cfg)
+        kv = mstate if return_kv else None
+        x = x + plan.act(o, "bsd")
+    elif spec.mixer == "rwkv":
+        o, S, xl = R.time_mix_chunked(p["rwkv_tm"], h, cfg)
+        kv = (S, xl) if return_kv else None
+        x = x + plan.act(o, "bsd")
+
+    if spec.ffn == "none":
+        return x, aux, kv
+    h = L.apply_norm(p["norm2"], x, cfg)
+    if spec.ffn == "moe":
+        if getattr(plan, "moe_ep", False) and x.ndim == 3:
+            out, aux = L.apply_moe_ep(p["moe"], h, cfg, plan)
+            x = x + plan.act(out, "bsd")
+        else:
+            hf = h.reshape(h.shape[0], -1, h.shape[-1])   # [b, s(*P), d]
+            out, aux = jax.vmap(lambda t: L.apply_moe(p["moe"], t, cfg))(hf)
+            aux = aux.mean()
+            x = x + plan.act(out.reshape(x.shape),
+                             "bsd" if x.ndim == 3 else "cp_bpsd")
+    elif spec.mixer == "rwkv":
+        b, s, d = h.shape
+        prev = jnp.concatenate([jnp.zeros((b, 1, d), h.dtype), h[:, :-1]], 1)
+        x = x + plan.act(R.channel_mix(p["rwkv_cm"], h, prev, cfg), "bsd")
+        if kv is not None:
+            kv = (*kv, h[:, -1])                           # cm_prev for decode
+    else:
+        x = x + plan.act(L.apply_mlp(p["mlp"], h, cfg),
+                         "bsd" if x.ndim == 3 else "cp_bpsd")
+    return x, aux, kv
+
+
+# ---------------------------------------------------------------------------
+# full forward (train) — scan over superblocks with remat
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], plan):
+    """tokens (+ stub modality embeddings) -> x [b, s, d]."""
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    if cfg.vision is not None:
+        pe = batch["patch_embeds"].astype(cfg.cdtype)      # [b, np, vit]
+        v = jax.nn.gelu(pe @ params["vis_proj"]["w1"].astype(cfg.cdtype),
+                        approximate=True)
+        v = v @ params["vis_proj"]["w2"].astype(cfg.cdtype)
+        x = jnp.concatenate([v, x], axis=1)                # image-first layout
+    if cfg.pos_emb == "sinusoidal":
+        x = x + L.sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)
+    return plan.act(x, "bsd")
+
+
+def _remat_wrap(body, remat):
+    """remat: False | True ("full" recompute) | "dots" (save matmul outputs
+    — trades recompute FLOPs for activation memory/HBM traffic)."""
+    if not remat:
+        return body
+    if remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def lm_hidden(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+              plan=NULL_PLAN, remat: bool = True):
+    """Embeddings -> final-norm hidden states [b, s, d] (+ MoE aux)."""
+    x = _embed_inputs(params, cfg, batch, plan)
+    b, s, d = x.shape
+    cp = plan.cp if plan.attn_mode == "cp" else 1
+    if cp > 1:
+        assert s % cp == 0
+        x = plan.act(x.reshape(b, cp, s // cp, d), "cp_bpsd")
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi, g in enumerate(cfg.layer_groups):
+        gp = params[f"group{gi}"]
+
+        def body(xc, rep_params, _g=g):
+            a = jnp.zeros((), jnp.float32)
+            for bi, spec in enumerate(_g.blocks):
+                xc, ai, _ = block_forward(rep_params[bi], xc, cfg, spec, plan)
+                a = a + ai
+            return xc, a
+
+        body_fn = _remat_wrap(body, remat)
+        x, auxs = jax.lax.scan(lambda c, p_: body_fn(c, p_), x, gp)
+        aux_total = aux_total + auxs.sum()
+
+    if cp > 1:
+        x = plan.act(x.reshape(b, s, d), "bsd")
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return x, aux_total
+
+
+def lm_forward(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+               plan=NULL_PLAN, remat: bool = True):
+    """Returns (logits [b, s, vocab_pad], aux_loss scalar)."""
+    x, aux_total = lm_hidden(params, cfg, batch, plan, remat)
+    lg = L.logits(params["embed"], x, cfg)
+    return plan.act(lg, "logits"), aux_total
+
+
+def chunked_ce(embed_params, cfg: ModelConfig, hidden, targets, plan,
+               n_chunks: int = 8):
+    """Sum of next-token NLL, computed per sequence chunk under remat so the
+    full [b, s, vocab] logits tensor never materializes (critical for the
+    262k/152k-vocab architectures)."""
+    b, s, d = hidden.shape
+    n_chunks = max(1, min(n_chunks, s))
+    while s % n_chunks:
+        n_chunks -= 1
+    cs = s // n_chunks
+
+    @jax.checkpoint
+    def chunk_nll(h, t):
+        lg = L.logits(embed_params, h, cfg)             # [b, cs, Vp]
+        lg = plan.act(lg, "logits").astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, t[..., None], axis=-1)[..., 0]
+        return (logz - tgt).sum()
+
+    total = jnp.zeros((), jnp.float32)
+    for c in range(n_chunks):
+        sl = slice(c * cs, (c + 1) * cs)
+        total = total + chunk_nll(hidden[:, sl], targets[:, sl])
+    return total
+
+
+def lm_loss(params, cfg: ModelConfig, batch, plan=NULL_PLAN,
+            aux_weight: float = 0.01, remat: bool = True,
+            ce_chunks: int = 8):
+    """Next-token CE (+ MoE aux). labels = tokens shifted; stub-modality
+    prefixes (vision patches) are excluded from the loss."""
+    x, aux = lm_hidden(params, cfg, batch, plan, remat=remat)
+    tokens = batch["tokens"]
+    prefix = x.shape[1] - tokens.shape[1]                  # vision prefix len
+    h = x[:, prefix: prefix + tokens.shape[1] - 1]         # predicts t+1
+    tgt = tokens[:, 1:]
+    nll_sum = chunked_ce(params["embed"], cfg, h, tgt, plan, ce_chunks)
+    denom = float(np.prod(tgt.shape))
+    loss = nll_sum / denom
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + emit decode caches
+# ---------------------------------------------------------------------------
+
+def lm_prefill(params, cfg: ModelConfig, batch, plan=NULL_PLAN):
+    """Like lm_forward but also returns per-layer decode state (caches in the
+    two-tier layout, chunk count = plan.cache_chunks)."""
+    x = _embed_inputs(params, cfg, batch, plan)
+    b, s, d = x.shape
+    cp = plan.cp if plan.attn_mode == "cp" else 1
+    if cp > 1:
+        x = plan.act(x.reshape(b, cp, s // cp, d), "cp_bpsd")
+
+    caches: List[Any] = []
+    for gi, g in enumerate(cfg.layer_groups):
+        gp = params[f"group{gi}"]
+
+        def body(xc, rep_params, _g=g):
+            cs = []
+            for bi, spec in enumerate(_g.blocks):
+                xc, _, st = block_forward(rep_params[bi], xc, cfg, spec, plan,
+                                          return_kv=True)
+                cs.append(_to_decode_state(st, spec, cfg, s, plan))
+            return xc, tuple(cs)
+
+        x, group_caches = jax.lax.scan(lambda c, p_: body(c, p_), x, gp)
+        caches.append(group_caches)
+
+    if cp > 1:
+        x = plan.act(x.reshape(b, s, d), "bsd")
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    lg = L.logits(params["embed"], x, cfg)
+    return plan.act(lg[:, -1], "dec_logits"), tuple(caches)
+
+
+def _to_decode_state(st, spec: BlockSpec, cfg: ModelConfig, s: int, plan):
+    if spec.mixer == "attn":
+        k, v = st                                          # [b, s, kv, hd]
+        b = k.shape[0]
+        window = spec.window if spec.attn_kind == "swa" else None
+        C = plan.cache_chunks
+        cache_len = _cache_len(cfg, spec, s, plan)
+        ln = cache_len // C
+        kc = k.swapaxes(1, 2)[:, :, -cache_len:]           # [b, kv, S, hd]
+        vc = v.swapaxes(1, 2)[:, :, -cache_len:]
+        kc = kc.reshape(b, cfg.n_kv_heads, C, ln, cfg.hd)
+        vc = vc.reshape(b, cfg.n_kv_heads, C, ln, cfg.hd)
+        pos0 = s - cache_len
+        old_pos = (pos0 + jnp.arange(cache_len, dtype=jnp.int32)
+                   ).reshape(C, ln)
+        cache = L.DecodeCache(
+            k_old=plan.act(kc.astype(cfg.cdtype), "cache_old"),
+            v_old=plan.act(vc.astype(cfg.cdtype), "cache_old"),
+            old_pos=old_pos,
+            k_rec=jnp.zeros((b, cfg.n_kv_heads, L.RECENT_RING, cfg.hd),
+                            cfg.cdtype),
+            v_rec=jnp.zeros((b, cfg.n_kv_heads, L.RECENT_RING, cfg.hd),
+                            cfg.cdtype),
+            rec_pos=jnp.full((L.RECENT_RING,), -1, jnp.int32))
+        return cache
+    if spec.mixer == "mamba":
+        return st                                          # MambaState
+    if spec.mixer == "rwkv":
+        S, xl, cm_last = st
+        return R.RWKVState(wkv=S, tm_prev=xl, cm_prev=cm_last)
+    raise ValueError(spec.mixer)
+
+
+def _cache_len(cfg: ModelConfig, spec: BlockSpec, total: int, plan) -> int:
+    """Old-tier length: full context, or the SWA window (rolling)."""
+    C = plan.cache_chunks
+    if spec.attn_kind == "swa" and spec.window is not None:
+        n = min(total, spec.window)
+    else:
+        n = total
+    return -(-n // C) * C                                  # round up to chunks
+
+
+# ---------------------------------------------------------------------------
+# decode: one token through all layers, threading caches
+# ---------------------------------------------------------------------------
+
+def lm_decode_step(params, cfg: ModelConfig, caches, token, pos,
+                   plan=NULL_PLAN):
+    """token: [b] int32; pos: scalar int32 (position of `token`).
+    Returns (logits [b, vocab_pad], new_caches)."""
+    x = L.embed(params["embed"], token, cfg)               # [b, d]
+    x = plan.act(x, "dec_x")
+
+    new_caches = []
+    li = 0
+    for gi, g in enumerate(cfg.layer_groups):
+        gp = params[f"group{gi}"]
+
+        def body(xc, scan_in, _g=g):
+            rep_params, rep_caches = scan_in
+            outs = []
+            for bi, spec in enumerate(_g.blocks):
+                xc, st = block_decode(rep_params[bi], xc, rep_caches[bi],
+                                      cfg, spec, pos, plan)
+                outs.append(st)
+            return xc, tuple(outs)
+
+        x, new_group = jax.lax.scan(lambda c, s_: body(c, s_), x,
+                                    (gp, caches[gi]))
+        new_caches.append(new_group)
+        li += g.n_layers
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    lg = L.logits(params["embed"], x, cfg)
+    return plan.act(lg, "dec_logits"), tuple(new_caches)
+
+
+def block_decode(p, x, cache, cfg: ModelConfig, spec: BlockSpec, pos, plan):
+    """x: [b, d]; returns (x, new_cache)."""
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if spec.mixer == "attn":
+        theta = _rope_theta_for(cfg, spec)
+        q, k, v = L.qkv_proj(p["attn"], h[:, None], cfg)   # [b,1,h/kv,hd]
+        posa = pos[None] if pos.ndim == 0 else pos
+        q = L.apply_rope(q, posa.astype(jnp.float32), cfg, theta)[:, 0]
+        k = L.apply_rope(k, posa.astype(jnp.float32), cfg, theta)[:, 0]
+        v = v[:, 0]
+        window = spec.window if spec.attn_kind == "swa" else None
+        cache = L.cache_append_recent(cache, k, v, pos)
+        o = L.decode_attention(plan.act(q, "dec_q"), cache, pos,
+                               window=window)
+        o = o.reshape(x.shape[0], cfg.n_heads * cfg.hd)
+        x = x + plan.act(o @ p["attn"]["wo"].astype(cfg.cdtype), "dec_x")
+    elif spec.mixer == "mamba":
+        o, cache = M.mamba_decode(p["mamba"], h, cache, cfg)
+        x = x + plan.act(o, "dec_x")
+    elif spec.mixer == "rwkv":
+        o, S, xl = R.time_mix_decode(p["rwkv_tm"], h, cache, cfg)
+        cache = cache._replace(wkv=S, tm_prev=xl)
+        x = x + plan.act(o, "dec_x")
+
+    if spec.ffn == "none":
+        return x, cache
+    h = L.apply_norm(p["norm2"], x, cfg)
+    if spec.ffn == "moe":
+        # decode uses the gathered-weights path: exactly top-k active FLOPs,
+        # traffic = k/e of the expert weights (no capacity waste)
+        out = L.moe_decode_gathered(p["moe"], h, cfg)
+        x = x + plan.act(out, "dec_x")
+    elif spec.mixer == "rwkv":
+        o = R.channel_mix(p["rwkv_cm"], h, cache.cm_prev, cfg)
+        cache = cache._replace(cm_prev=h)
+        x = x + plan.act(o, "dec_x")
+    else:
+        x = x + plan.act(L.apply_mlp(p["mlp"], h, cfg), "dec_x")
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# decode-cache specs (for the dry-run: no allocation)
+# ---------------------------------------------------------------------------
+
+def decode_cache_specs(cfg: ModelConfig, b: int, seq_len: int, plan=NULL_PLAN):
+    """ShapeDtypeStruct pytree mirroring what prefill would emit, stacked per
+    scan group: [repeats, ...] per block position."""
+    out = []
+    for g in cfg.layer_groups:
+        per_block = []
+        for spec in g.blocks:
+            if spec.mixer == "attn":
+                C = plan.cache_chunks
+                ln = _cache_len(cfg, spec, seq_len, plan) // C
+                st = L.cache_specs(b, cfg.n_kv_heads, C, ln, cfg.hd,
+                                   cfg.cdtype)
+            elif spec.mixer == "mamba":
+                st = M.mamba_state_specs(b, cfg, cfg.cdtype)
+            else:
+                st = R.rwkv_state_specs(b, cfg)
+            per_block.append(_stack_specs(st, g.repeats))
+        out.append(tuple(per_block))
+    return tuple(out)
+
+
+def _stack_specs(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), tree)

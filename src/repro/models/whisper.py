@@ -1,0 +1,278 @@
+"""Whisper-style encoder-decoder transformer (whisper-tiny backbone).
+
+The conv1d audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [b, n_frames, d_model] (post-conv),
+and the encoder adds sinusoidal positions on top.  The decoder uses a
+learned position table, causal self-attention (two-tier decode cache) and
+cross-attention into the encoder states (static K/V cache at decode time).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.common import ModelConfig
+from repro.models.plan import NULL_PLAN
+
+
+class CrossCache(NamedTuple):
+    k: jnp.ndarray   # [b, kv, nf, hd]
+    v: jnp.ndarray
+
+
+class WhisperDecCache(NamedTuple):
+    self_cache: L.DecodeCache
+    cross: CrossCache
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    e = cfg.encoder
+    return cfg.replace(d_model=e.d_model, n_heads=e.n_heads,
+                       n_kv_heads=e.n_heads, d_ff=e.d_ff, head_dim=None)
+
+
+def init_whisper(key, cfg: ModelConfig) -> Dict[str, Any]:
+    e = cfg.encoder
+    ks = jax.random.split(key, 8)
+    ecfg = _enc_cfg(cfg)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm1": L.init_norm(ecfg), "attn": L.init_attention(k1, ecfg),
+                "norm2": L.init_norm(ecfg), "mlp": L.init_mlp(k2, ecfg)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"norm1": L.init_norm(cfg), "attn": L.init_attention(k1, cfg),
+                "norm_x": L.init_norm(cfg), "xattn": L.init_attention(k2, cfg),
+                "norm2": L.init_norm(cfg), "mlp": L.init_mlp(k3, cfg)}
+
+    enc = [enc_layer(jax.random.fold_in(ks[0], i)) for i in range(e.n_layers)]
+    n_dec = sum(g.n_layers for g in cfg.layer_groups)
+    dec = [dec_layer(jax.random.fold_in(ks[1], i)) for i in range(n_dec)]
+    return {
+        "embed": L.init_embedding(ks[2], cfg),
+        "pos_table": (jax.random.normal(ks[3], (cfg.max_seq, cfg.d_model),
+                                        jnp.float32) * 0.01).astype(cfg.pdtype),
+        "enc": jax.tree.map(lambda *x: jnp.stack(x), *enc),
+        "dec": jax.tree.map(lambda *x: jnp.stack(x), *dec),
+        "enc_norm": L.init_norm(ecfg),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frame_embeds: jnp.ndarray, plan=NULL_PLAN):
+    """frame_embeds: [b, nf, d_enc] -> encoder states [b, nf, d_enc]."""
+    ecfg = _enc_cfg(cfg)
+    x = frame_embeds.astype(cfg.cdtype)
+    x = x + L.sinusoidal_pos(x.shape[1], ecfg.d_model).astype(x.dtype)
+    x = plan.act(x, "enc_bsd")
+
+    def body(xc, p):
+        h = L.apply_norm(p["norm1"], xc, ecfg)
+        q, k, v = L.qkv_proj(p["attn"], h, ecfg)
+        pos = np.arange(xc.shape[1], dtype=np.int32)
+        o = L.blocked_attention(q[:, None], k, v, causal=False,
+                                q_positions=pos[None], kv_positions=pos,
+                                q_block=ecfg.attn_q_block,
+                                kv_block=ecfg.attn_kv_block)
+        o = o[:, 0].reshape(*xc.shape[:-1], -1)
+        xc = xc + plan.act(o @ p["attn"]["wo"].astype(ecfg.cdtype), "enc_bsd")
+        h = L.apply_norm(p["norm2"], xc, ecfg)
+        xc = xc + plan.act(L.apply_mlp(p["mlp"], h, ecfg), "enc_bsd")
+        return xc, ()
+
+    x, _ = jax.lax.scan(lambda c, p: jax.checkpoint(body)(c, p), x, params["enc"])
+    return L.apply_norm(params["enc_norm"], x, ecfg)
+
+
+# ---------------------------------------------------------------------------
+# decoder (teacher-forced / prefill path)
+# ---------------------------------------------------------------------------
+
+def _xattn(p, h, enc_kv: Tuple[jnp.ndarray, jnp.ndarray], cfg: ModelConfig, plan):
+    """Cross attention. h: [b, s, d]; enc_kv: (k, v) [b, nf, kv, hd]."""
+    dt = cfg.cdtype
+    q = (h @ p["wq"].astype(dt)).reshape(*h.shape[:-1], cfg.n_heads, cfg.hd)
+    k, v = enc_kv
+    pos_q = np.arange(h.shape[1], dtype=np.int32)
+    pos_k = np.arange(k.shape[1], dtype=np.int32)
+    o = L.blocked_attention(q[:, None], k, v, causal=False,
+                            q_positions=pos_q[None], kv_positions=pos_k,
+                            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+    o = o[:, 0].reshape(*h.shape[:-1], -1)
+    return plan.act(o @ p["wo"].astype(dt), "bsd")
+
+
+def _enc_kv(p, enc_states, cfg: ModelConfig):
+    """Encoder K/V for cross attention (projected once per layer)."""
+    dt = cfg.cdtype
+    k = (enc_states @ p["wk"].astype(dt)).reshape(
+        *enc_states.shape[:-1], cfg.n_kv_heads, cfg.hd)
+    v = (enc_states @ p["wv"].astype(dt)).reshape(
+        *enc_states.shape[:-1], cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def decoder_forward(params, cfg: ModelConfig, tokens, enc_states,
+                    plan=NULL_PLAN, return_caches: bool = False):
+    """tokens: [b, s]; enc_states: [b, nf, d]. Returns (logits, caches|None)."""
+    x, ys = _decoder_stack(params, cfg, tokens, enc_states, plan,
+                           return_caches)
+    lg = L.logits(params["embed"], x, cfg)
+    return plan.act(lg, "logits"), ys
+
+
+def decoder_hidden(params, cfg: ModelConfig, tokens, enc_states,
+                   plan=NULL_PLAN):
+    return _decoder_stack(params, cfg, tokens, enc_states, plan, False)[0]
+
+
+def _decoder_stack(params, cfg: ModelConfig, tokens, enc_states,
+                   plan=NULL_PLAN, return_caches: bool = False):
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    x = x + params["pos_table"].astype(x.dtype)[:s]
+    x = plan.act(x, "bsd")
+
+    def body(xc, p):
+        h = L.apply_norm(p["norm1"], xc, cfg)
+        q, k, v = L.qkv_proj(p["attn"], h, cfg)
+        pos = np.arange(s, dtype=np.int32)
+        o = L.blocked_attention(q[:, None], k, v, causal=True,
+                                q_positions=pos[None], kv_positions=pos,
+                                q_block=cfg.attn_q_block,
+                                kv_block=cfg.attn_kv_block)
+        o = o[:, 0].reshape(b, s, -1)
+        xc = xc + plan.act(o @ p["attn"]["wo"].astype(cfg.cdtype), "bsd")
+        ekv = _enc_kv(p["xattn"], enc_states, cfg)
+        h = L.apply_norm(p["norm_x"], xc, cfg)
+        xc = xc + _xattn(p["xattn"], h, ekv, cfg, plan)
+        h = L.apply_norm(p["norm2"], xc, cfg)
+        xc = xc + plan.act(L.apply_mlp(p["mlp"], h, cfg), "bsd")
+        if return_caches:
+            return xc, (k, v, ekv)
+        return xc, ()
+
+    if return_caches:
+        x, ys = jax.lax.scan(lambda c, p: body(c, p), x, params["dec"])
+    else:
+        x, ys = jax.lax.scan(lambda c, p: jax.checkpoint(body)(c, p),
+                             x, params["dec"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return x, ys
+
+
+def whisper_loss(params, cfg: ModelConfig, batch, plan=NULL_PLAN,
+                 ce_chunks: int = 8):
+    from repro.models.transformer import chunked_ce
+    enc = encode(params, cfg, batch["frame_embeds"], plan)
+    x = decoder_hidden(params, cfg, batch["tokens"], enc, plan)
+    tgt = batch["tokens"][:, 1:]
+    nll = chunked_ce(params["embed"], cfg, x[:, :-1], tgt, plan, ce_chunks)
+    loss = nll / float(np.prod(tgt.shape))
+    return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def whisper_prefill(params, cfg: ModelConfig, batch, plan=NULL_PLAN):
+    enc = encode(params, cfg, batch["frame_embeds"], plan)
+    lg, ys = decoder_forward(params, cfg, batch["tokens"], enc, plan,
+                             return_caches=True)
+    k, v, ekv = ys                                        # stacked [L, ...]
+    s = batch["tokens"].shape[1]
+    C = plan.cache_chunks
+    ln = -(-s // C)
+    pad = C * ln - s
+
+    def to_old(t):  # [L, b, s, kv, hd] -> [L, b, kv, C, ln, hd]
+        t = jnp.moveaxis(t, 3, 2)
+        t = jnp.pad(t, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        Lb = t.shape
+        return t.reshape(Lb[0], Lb[1], Lb[2], C, ln, Lb[4]).astype(cfg.cdtype)
+
+    pos = jnp.arange(C * ln, dtype=jnp.int32)
+    old_pos = jnp.where(pos < s, pos, -1).reshape(C, ln)
+    nl, b = k.shape[0], k.shape[1]
+    self_cache = L.DecodeCache(
+        k_old=plan.act(to_old(k), "cache_old_L"),
+        v_old=plan.act(to_old(v), "cache_old_L"),
+        old_pos=jnp.broadcast_to(old_pos, (nl, C, ln)),
+        k_rec=jnp.zeros((nl, b, cfg.n_kv_heads, L.RECENT_RING, cfg.hd), cfg.cdtype),
+        v_rec=jnp.zeros((nl, b, cfg.n_kv_heads, L.RECENT_RING, cfg.hd), cfg.cdtype),
+        rec_pos=jnp.full((nl, L.RECENT_RING), -1, jnp.int32))
+    cross = CrossCache(k=jnp.moveaxis(ekv[0], 3, 2), v=jnp.moveaxis(ekv[1], 3, 2))
+    return plan.act(lg[:, -1], "dec_logits"), WhisperDecCache(self_cache, cross)
+
+
+def whisper_decode_step(params, cfg: ModelConfig, caches: WhisperDecCache,
+                        token, pos, plan=NULL_PLAN):
+    """token [b]; pos scalar. Returns (logits [b, Vp], new caches)."""
+    x = L.embed(params["embed"], token, cfg)
+    x = x + jax.lax.dynamic_index_in_dim(
+        params["pos_table"], pos, keepdims=False).astype(x.dtype)
+    x = plan.act(x, "dec_x")
+
+    def body(xc, scan_in):
+        p, sc, cross = scan_in
+        h = L.apply_norm(p["norm1"], xc, cfg)
+        q, k, v = L.qkv_proj(p["attn"], h[:, None], cfg)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        sc = L.cache_append_recent(sc, k, v, pos)
+        o = L.decode_attention(plan.act(q, "dec_q"), sc, pos)
+        xc = xc + plan.act(o.reshape(xc.shape[0], -1)
+                           @ p["attn"]["wo"].astype(cfg.cdtype), "dec_x")
+        # cross attention against the static encoder cache
+        h = L.apply_norm(p["norm_x"], xc, cfg)
+        qx = (h @ p["xattn"]["wq"].astype(cfg.cdtype)).reshape(
+            xc.shape[0], cfg.n_heads, cfg.hd)
+        kx, vx = cross.k, cross.v                          # [b, kv, nf, hd]
+        g = cfg.n_heads // cfg.n_kv_heads
+        qg = qx.reshape(xc.shape[0], cfg.n_kv_heads, g, cfg.hd)
+        sx = jnp.einsum("bkgd,bknd->bkgn", qg, kx.astype(qx.dtype),
+                        preferred_element_type=jnp.float32)
+        sx = sx / math.sqrt(cfg.hd)
+        w = jax.nn.softmax(sx, -1)
+        ox = jnp.einsum("bkgn,bknd->bkgd", w.astype(qx.dtype),
+                        vx.astype(qx.dtype))
+        xc = xc + plan.act(ox.reshape(xc.shape[0], -1)
+                           @ p["xattn"]["wo"].astype(cfg.cdtype), "dec_x")
+        h = L.apply_norm(p["norm2"], xc, cfg)
+        xc = xc + plan.act(L.apply_mlp(p["mlp"], h, cfg), "dec_x")
+        return xc, sc
+
+    x, new_self = jax.lax.scan(lambda c, s_: body(c, s_), x,
+                               (params["dec"], caches.self_cache, caches.cross))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    lg = L.logits(params["embed"], x, cfg)
+    return plan.act(lg, "dec_logits"), WhisperDecCache(new_self, caches.cross)
+
+
+def whisper_cache_specs(cfg: ModelConfig, b: int, seq_len: int, plan=NULL_PLAN):
+    nl = sum(g.n_layers for g in cfg.layer_groups)
+    C = plan.cache_chunks
+    ln = -(-seq_len // C)
+    e = cfg.encoder
+    sds = jax.ShapeDtypeStruct
+    self_cache = L.DecodeCache(
+        k_old=sds((nl, b, cfg.n_kv_heads, C, ln, cfg.hd), cfg.cdtype),
+        v_old=sds((nl, b, cfg.n_kv_heads, C, ln, cfg.hd), cfg.cdtype),
+        old_pos=sds((nl, C, ln), jnp.int32),
+        k_rec=sds((nl, b, cfg.n_kv_heads, L.RECENT_RING, cfg.hd), cfg.cdtype),
+        v_rec=sds((nl, b, cfg.n_kv_heads, L.RECENT_RING, cfg.hd), cfg.cdtype),
+        rec_pos=sds((nl, L.RECENT_RING), jnp.int32))
+    cross = CrossCache(k=sds((nl, b, cfg.n_kv_heads, e.n_frames, cfg.hd), cfg.cdtype),
+                       v=sds((nl, b, cfg.n_kv_heads, e.n_frames, cfg.hd), cfg.cdtype))
+    return WhisperDecCache(self_cache, cross)

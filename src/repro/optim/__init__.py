@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (Adam, OptState, Sgd, clip_by_global_norm,
+                                    cosine_schedule, linear_warmup)
+
+__all__ = ["Adam", "Sgd", "OptState", "clip_by_global_norm",
+           "cosine_schedule", "linear_warmup"]

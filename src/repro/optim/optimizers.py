@@ -1,0 +1,110 @@
+"""Functional optimizers (pytree in/out, fully shardable — every state leaf
+inherits its parameter's sharding, so FSDP covers optimizer state too).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+@dataclass(frozen=True)
+class Adam:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(zeros, params),
+                        v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: OptState, params) -> Tuple[Any, OptState]:
+        t = state.step + 1
+        lr = self.lr(t) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            return m, v
+
+        mv = jax.tree.map(upd, grads, state.m, state.v)
+        m = jax.tree.map(lambda x: x[0], mv,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda x: x[1], mv,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def delta(p, mm, vv):
+            step = lr * (mm / c1) / (jnp.sqrt(vv / c2) + self.eps)
+            if self.weight_decay:
+                step = step + lr * self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+        new_params = jax.tree.map(delta, params, m, v)
+        return new_params, OptState(step=t, m=m, v=v)
+
+
+@dataclass(frozen=True)
+class Sgd:
+    lr: float | Callable = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        m = jax.tree.map(zeros, params) if self.momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), m=m, v=None)
+
+    def update(self, grads, state: OptState, params):
+        t = state.step + 1
+        lr = self.lr(t) if callable(self.lr) else self.lr
+        if self.momentum:
+            m = jax.tree.map(lambda mm, g: self.momentum * mm
+                             + g.astype(jnp.float32), state.m, grads)
+            new = jax.tree.map(lambda p, mm: (p.astype(jnp.float32) - lr * mm
+                                              ).astype(p.dtype), params, m)
+            return new, OptState(step=t, m=m, v=None)
+        new = jax.tree.map(lambda p, g: (p.astype(jnp.float32)
+                                         - lr * g.astype(jnp.float32)
+                                         ).astype(p.dtype), params, grads)
+        return new, OptState(step=t, m=None, v=None)
+
+
+def linear_warmup(base_lr: float, warmup: int) -> Callable:
+    def f(t):
+        return base_lr * jnp.minimum(1.0, t.astype(jnp.float32) / warmup)
+    return f
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def f(t):
+        t = t.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, t / warmup)
+        prog = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+        return jnp.where(t < warmup, warm, base_lr * cos)
+    return f

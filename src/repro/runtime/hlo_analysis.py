@@ -1,0 +1,442 @@
+"""Compiled-HLO analysis for the roofline report (DESIGN.md §7).
+
+``compiled.cost_analysis()`` on this jaxlib counts while-loop (lax.scan)
+bodies ONCE, so we parse the post-SPMD HLO text ourselves:
+
+* per-computation op lists with shapes (local, per-device — the module is
+  already partitioned),
+* while-loop trip counts (scan bounds appear as integer constants in the
+  loop condition),
+* a call-graph multiplier pass (ENTRY x1; while bodies x trips; fusion /
+  call computations inherit the caller's multiplier),
+* dot FLOPs (2 * prod(result) * prod(contracting)),
+* collective wire bytes with standard ring factors (all-reduce 2x result,
+  all-gather result, reduce-scatter operand, all-to-all / permute result),
+* an HBM-traffic proxy: operand + result bytes of top-level fusions / dots /
+  parameters (fusion boundaries approximate HBM round-trips on TPU).
+
+All numbers are PER DEVICE (post-partitioning shapes) per step.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # operand list + attributes (raw)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    by_name: Dict[str, Op] = field(default_factory=dict)
+
+
+@dataclass
+class HLOCost:
+    dot_flops: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    collective_count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    hbm_bytes: float = 0.0         # essential traffic (see analyze_hlo_text)
+    hbm_strict: float = 0.0        # everything incl. fusion IO (upper bound)
+    while_trips: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def parse_computations(txt: str) -> Dict[str, Computation]:
+    """Computation headers are non-indented lines ending in '{' containing
+    '->'; ops are indented '  %name = TYPE opcode(...)' lines."""
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in txt.splitlines():
+        if cur is None:
+            if (line and not line[0].isspace() and line.rstrip().endswith("{")
+                    and "->" in line):
+                m = _COMP_RE.match(line.replace("ENTRY ", "").lstrip())
+                if m:
+                    cur = Computation(m.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(_COMMENT_RE.sub("", line))
+        if m:
+            op = Op(name=m.group(1), type_str=m.group(2).strip(),
+                    opcode=m.group(3), rest=m.group(4))
+            cur.ops.append(op)
+            cur.by_name[op.name] = op
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands are before the closing paren of the op call
+    depth, out, cur = 1, [], []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            cur.append(ch)
+    arglist = "".join(cur)
+    return [a.strip().lstrip("%") for a in arglist.split(",") if a.strip()]
+
+
+def _while_trip(cond: Computation) -> int:
+    """lax.scan conditions compare the counter against the length constant;
+    take the largest integer constant in the condition computation."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, rdims = shape_dims(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    names = _operand_names(op.rest)
+    lhs_dims: List[int] = []
+    if names:
+        lhs_op = comp.by_name.get(names[0])
+        if lhs_op is not None:
+            _, lhs_dims = shape_dims(lhs_op.type_str)
+    contract = 1
+    if m and lhs_dims:
+        for d in m.group(1).split(","):
+            if d:
+                contract *= lhs_dims[int(d)]
+    res = 1
+    for d in rdims:
+        res *= d
+    return 2.0 * res * contract
+
+
+def _collective_bytes(op: Op, comp: Computation) -> float:
+    b_res = _effective_collective_size(op, comp)
+    if op.opcode.startswith("all-reduce"):
+        return 2.0 * b_res
+    if op.opcode.startswith("all-gather"):
+        return float(b_res)
+    if op.opcode.startswith("reduce-scatter"):
+        names = _operand_names(op.rest)
+        if names and names[0] in comp.by_name:
+            return float(shape_bytes(comp.by_name[names[0]].type_str))
+        return float(b_res)
+    return float(b_res)       # all-to-all, collective-permute
+
+
+def _effective_collective_size(op: Op, comp: Computation) -> float:
+    """Collective payload at the dtype a TPU would move: the CPU backend
+    upcasts bf16 matmul outputs to f32 before the psum and converts back
+    after — if every consumer of this collective is a narrowing convert (or
+    a convert-prefixed fusion), count the narrow width."""
+    b = float(shape_bytes(op.type_str))
+    consumers = [c for c in comp.ops if op.name in _operand_names(c.rest)]
+    if consumers:
+        conv = [c for c in consumers
+                if c.opcode == "convert" or (c.opcode == "fusion" and
+                                             c.name.startswith("convert"))]
+        if len(conv) == len(consumers):
+            smallest = min(shape_bytes(c.type_str) for c in conv)
+            if 0 < smallest < b:
+                return float(smallest)
+    # also follow the operand side: converted right before the collective
+    names = _operand_names(op.rest)
+    if names and names[0] in comp.by_name:
+        src = comp.by_name[names[0]]
+        if src.opcode == "convert" or (src.opcode == "fusion" and
+                                       src.name.startswith("convert")):
+            inner = _operand_names(src.rest)
+            if inner and inner[0] in comp.by_name:
+                sb = shape_bytes(comp.by_name[inner[0]].type_str)
+                if 0 < sb < b:
+                    return float(sb)
+    return b
+
+
+_HBM_OPS = ("fusion", "dot", "convolution", "custom-call", "concatenate",
+            "gather", "scatter", "sort", "reduce", "transpose", "copy",
+            "dynamic-update-slice", "dynamic-slice", "iota", "broadcast",
+            "reduce-window", "select-and-scatter", "cholesky",
+            "triangular-solve", "rng", "pad", "reverse", "slice")
+
+# "essential" traffic: ops whose operand/result movement survives on a TPU
+# (fusion-friendly elementwise / convert / copy chains are assumed folded
+# into their producers by Mosaic/XLA-TPU; f32 upcast wrappers that the CPU
+# backend inserts around bf16 dots are counted at their bf16 source width)
+_ESSENTIAL_OPS = ("dot", "convolution", "custom-call", "concatenate",
+                  "gather", "scatter", "sort", "dynamic-update-slice",
+                  "dynamic-slice", "reduce-window", "slice")
+
+
+def _effective_operand_bytes(on: str, comp: Computation) -> float:
+    """Operand bytes at the dtype the TPU would actually stream: follow one
+    level of convert/copy/bitcast (CPU inserts f32 upcasts around bf16
+    dots)."""
+    op = comp.by_name.get(on)
+    if op is None:
+        return 0.0
+    b = shape_bytes(op.type_str)
+    if op.opcode in ("convert", "copy", "bitcast") or (
+            op.opcode == "fusion" and op.name.startswith(
+                ("convert", "copy", "bitcast"))):
+        srcs = _operand_names(op.rest)
+        if srcs and srcs[0] in comp.by_name:
+            return min(b, shape_bytes(comp.by_name[srcs[0]].type_str))
+    return b
+
+
+def _essential_bytes(op: Op, comp: Computation) -> float:
+    if op.opcode in ("dynamic-slice", "slice"):
+        return 2.0 * shape_bytes(op.type_str)
+    if op.opcode == "dynamic-update-slice":
+        names = _operand_names(op.rest)
+        upd = (shape_bytes(comp.by_name[names[1]].type_str)
+               if len(names) > 1 and names[1] in comp.by_name else 0)
+        return 2.0 * upd
+    total = float(shape_bytes(op.type_str))
+    for on in _operand_names(op.rest)[:8]:
+        total += _effective_operand_bytes(on, comp)
+    return total
+
+
+def analyze_hlo_text(txt: str) -> HLOCost:
+    comps = parse_computations(txt)
+    cost = HLOCost()
+
+    # ---- multiplier pass over the call graph --------------------------
+    mult: Dict[str, float] = defaultdict(float)
+    mains = [n for n in comps if n.startswith("main")]
+    if mains:
+        entry = mains[0]
+    else:
+        referenced = set()
+        for c in comps.values():
+            for op in c.ops:
+                for m in re.finditer(
+                        r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)",
+                        op.rest):
+                    referenced.add(m.group(1))
+        roots = [n for n in comps if n not in referenced]
+        entry = roots[0] if roots else next(iter(comps))
+
+    stack = [(entry, 1.0)]
+    seen = set()
+    while stack:
+        name, m0 = stack.pop()
+        if name not in comps:
+            continue
+        mult[name] += m0
+        comp = comps[name]
+        for op in comp.ops:
+            if op.opcode == "while":
+                mm = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                mt = _TRIP_RE.search(op.rest)          # XLA annotates the
+                if mt:                                  # known trip count
+                    trips = int(mt.group(1))
+                elif mm and mm.group(1) in comps:
+                    trips = _while_trip(comps[mm.group(1)])
+                else:
+                    trips = 1
+                cost.while_trips[mb.group(1) if mb else name] = trips
+                if mb:
+                    stack.append((mb.group(1), m0 * trips))
+                if mm:
+                    stack.append((mm.group(1), m0 * trips))
+            else:
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)",
+                                     op.rest):
+                    stack.append((m.group(1), m0))
+
+    # ---- accumulate ----------------------------------------------------
+    for name, comp in comps.items():
+        k = mult.get(name, 0.0)
+        if k == 0.0:
+            continue
+        for op in comp.ops:
+            if op.opcode == "dot":
+                cost.dot_flops += k * _dot_flops(op, comp)
+            for coll in COLLECTIVES:
+                if op.opcode == coll or op.opcode == coll + "-start":
+                    b = _collective_bytes(op, comp)
+                    cost.collective_bytes[coll] += k * b
+                    cost.collective_count[coll] += int(k)
+            if op.opcode in _HBM_OPS and not name.startswith(
+                    ("fused", "wrapped")):
+                b = _hbm_op_bytes(op, comp, comps)
+                cost.hbm_strict += k * b
+                if op.opcode in _ESSENTIAL_OPS:
+                    cost.hbm_bytes += k * _essential_bytes(op, comp)
+            for coll in COLLECTIVES:
+                if op.opcode.startswith(coll):
+                    cost.hbm_bytes += k * shape_bytes(op.type_str)
+                    break
+    return cost
+
+
+def _hbm_op_bytes(op: Op, comp: Computation,
+                  comps: Dict[str, Computation]) -> float:
+    """HBM-traffic estimate for one top-level op.
+
+    In-place patterns (dynamic-update-slice on a scan carry, fusions that
+    merely dynamic-slice out of a big carried buffer) count only the slice
+    actually touched — otherwise a 24-iteration scan appears to rewrite its
+    6 GiB residual stack every step."""
+    res = shape_bytes(op.type_str)
+    names = _operand_names(op.rest)[:12]
+    operands = [(on, shape_bytes(comp.by_name[on].type_str))
+                for on in names if on in comp.by_name]
+    if op.opcode in ("broadcast", "iota"):
+        return float(res)
+    if op.opcode in ("dynamic-slice", "slice"):
+        return 2.0 * res                       # read + write of the slice
+    if op.opcode == "dynamic-update-slice":
+        upd = operands[1][1] if len(operands) > 1 else 0
+        return 2.0 * upd                       # slice-sized read + write
+    if op.opcode == "fusion":
+        return _fusion_bytes(op, operands, res, comps)
+    return float(res + sum(b for _, b in operands))
+
+
+def _fusion_bytes(op: Op, operands, res: float,
+                  comps: Dict[str, Computation]) -> float:
+    """Look inside the fused computation: a parameter consumed only by
+    (dynamic-)slice/gather ops is read slice-by-slice, not wholesale; a
+    dynamic-update-slice root writes its update, not the whole buffer."""
+    m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+    fc = comps.get(m.group(1)) if m else None
+    if fc is None:
+        return float(res + sum(b for _, b in operands))
+    # map parameter index -> parameter op name
+    pnames: Dict[int, str] = {}
+    for fop in fc.ops:
+        if fop.opcode == "parameter":
+            pm = re.match(r"(\d+)", fop.rest)
+            if pm:
+                pnames[int(pm.group(1))] = fop.name
+    total = 0.0
+    for i, (_, ob) in enumerate(operands):
+        pname = pnames.get(i)
+        if pname is None:
+            total += ob
+            continue
+        consumers = [fop for fop in fc.ops
+                     if pname in _operand_names(fop.rest)]
+        if consumers and all(c.opcode in ("dynamic-slice", "slice", "gather",
+                                          "bitcast", "dynamic-update-slice")
+                             for c in consumers):
+            eff = 0.0
+            for c in consumers:
+                if c.opcode == "dynamic-update-slice":
+                    # reading the buffer only to update in place: no read
+                    continue
+                eff += shape_bytes(c.type_str)
+            total += min(ob, eff)
+        else:
+            total += ob
+    # write side: DUS root writes only the update slice
+    root = fc.ops[-1] if fc.ops else None
+    if root is not None and root.opcode == "dynamic-update-slice":
+        upd_names = _operand_names(root.rest)
+        upd = (shape_bytes(fc.by_name[upd_names[1]].type_str)
+               if len(upd_names) > 1 and upd_names[1] in fc.by_name else 0)
+        total += upd
+    else:
+        total += res
+    return total
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (hardware constants fixed by the task spec: TPU v5e-like)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per chip, one direction class)
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(per_device_flops: float, per_device_hbm: float,
+                   per_device_coll: float) -> Roofline:
+    return Roofline(
+        compute_s=per_device_flops / PEAK_FLOPS,
+        memory_s=per_device_hbm / HBM_BW,
+        collective_s=per_device_coll / ICI_BW,
+        flops=per_device_flops, hbm_bytes=per_device_hbm,
+        coll_bytes=per_device_coll)

@@ -1,0 +1,135 @@
+"""Distributed train/serve step builders (jit + GSPMD).
+
+``make_train_step`` returns a jitted (params, opt_state, batch) ->
+(params, opt_state, metrics) with full in/out shardings derived from the
+MeshPlan; ``make_prefill_step`` / ``make_decode_step`` build the serving
+steps.  These are exactly what launch/dryrun.py lowers for every
+(architecture x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.models.registry import Model, build_model
+from repro.optim import Adam, clip_by_global_norm
+from repro.runtime.sharding import MeshPlan
+
+
+def make_train_step(model: Model, plan: MeshPlan, optimizer=None,
+                    clip_norm: float = 1.0, remat: bool = True,
+                    accum: int = 1):
+    """accum > 1: the batch carries a leading microbatch dim
+    [accum, b/accum, ...]; gradients are accumulated over a scan (bounds the
+    activation working set — the standard memory/throughput knob)."""
+    optimizer = optimizer or Adam(lr=3e-4)
+
+    def grads_of(params, mbatch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, mbatch, plan=plan, remat=remat)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+            def mb_step(g_acc, mbatch):
+                (loss, metrics), g = grads_of(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return g_acc, (loss, metrics)
+
+            grads, (losses, ms) = jax.lax.scan(mb_step, g0, batch)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def microbatch_specs(batch_specs, accum: int):
+    """[b, ...] ShapeDtypeStructs -> [accum, b/accum, ...]."""
+    def split(s):
+        assert s.shape[0] % accum == 0, (s.shape, accum)
+        return jax.ShapeDtypeStruct((accum, s.shape[0] // accum,
+                                     *s.shape[1:]), s.dtype)
+    return jax.tree.map(split, batch_specs)
+
+
+def shardings_for_train(model: Model, plan: MeshPlan, optimizer, batch_specs,
+                        accum: int = 1):
+    """(in_shardings, out_shardings) for jit(train_step)."""
+    p_specs = model.param_specs()
+    p_sh = plan.param_shardings(p_specs)
+    opt_specs = jax.eval_shape(optimizer.init, p_specs)
+    o_sh = _opt_shardings(opt_specs, p_sh, plan)
+    b_sh = plan.batch_shardings(batch_specs, lead_dims=1 if accum > 1 else 0)
+    rep = NamedSharding(plan.mesh, P())
+    m_sh = {"loss": rep, "grad_norm": rep, "ce": rep, "aux": rep}
+    return (p_sh, o_sh, b_sh), (p_sh, o_sh, m_sh)
+
+
+def _opt_shardings(opt_specs, param_shardings, plan: MeshPlan):
+    """m/v mirror the parameter shardings; step is replicated."""
+    rep = NamedSharding(plan.mesh, P())
+
+    def walk(spec_node, sh_node):
+        return jax.tree.map(lambda s, sh: sh, spec_node, sh_node)
+
+    from repro.optim import OptState
+    return OptState(step=rep,
+                    m=(walk(opt_specs.m, param_shardings)
+                       if opt_specs.m is not None else None),
+                    v=(walk(opt_specs.v, param_shardings)
+                       if opt_specs.v is not None else None))
+
+
+def make_prefill_step(model: Model, plan: MeshPlan):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, plan=plan)
+    return prefill_step
+
+
+def make_decode_step(model: Model, plan: MeshPlan):
+    def decode_step(params, caches, token, pos):
+        return model.decode_step(params, caches, token, pos, plan=plan)
+    return decode_step
+
+
+def shardings_for_decode(model: Model, plan: MeshPlan, cache_specs,
+                         batch: int):
+    p_sh = plan.param_shardings(model.param_specs())
+    c_sh = plan.cache_shardings(cache_specs)
+    tok_sh = NamedSharding(plan.mesh, plan._fit(P(plan.data_axis), (batch,)))
+    pos_sh = NamedSharding(plan.mesh, P())
+    vp = padded_vocab_of(model)
+    lg_sh = NamedSharding(plan.mesh,
+                          plan._fit(plan.act_spec("dec_logits"), (batch, vp)))
+    return (p_sh, c_sh, tok_sh, pos_sh), (lg_sh, c_sh)
+
+
+def padded_vocab_of(model: Model) -> int:
+    from repro.models.layers import padded_vocab
+    return padded_vocab(model.cfg)
+
+
+def shardings_for_prefill(model: Model, plan: MeshPlan, batch_specs, cache_specs):
+    p_sh = plan.param_shardings(model.param_specs())
+    b_sh = plan.batch_shardings(batch_specs)
+    c_sh = plan.cache_shardings(cache_specs)
+    lg_sh = NamedSharding(plan.mesh, plan.act_spec("dec_logits"))
+    return (p_sh, b_sh), (lg_sh, c_sh)

@@ -1,0 +1,150 @@
+"""VC-ASGD at pod scale (DESIGN.md §4): client islands = pods.
+
+Each island holds its own full parameter/optimizer replica (leading ``pod``
+dim, sharded over the pod mesh axis; inner dims follow the single-pod
+MeshPlan).  One **VC round** =
+
+  1. ``k`` local train steps per island — vmapped over the pod dim, so there
+     is NO cross-pod collective inside the round (the paper's asynchronous,
+     barrier-free client training),
+  2. assimilation — Eq. 2 as a single weighted reduction over the pod axis,
+     with a survivor mask: islands that died this round (preemption) simply
+     get weight zero and the weights renormalize (fault tolerance is
+     algebraic, not protocol-level),
+  3. redistribution — the new server copy is broadcast back over pods (the
+     paper's clients always start a subtask from the server snapshot).
+
+The optional compressed path ships int8 top-k deltas with error feedback
+(core/compression.py) instead of raw weights across the DCN.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import vc_asgd as V
+from repro.models.registry import Model
+from repro.optim import Adam, clip_by_global_norm
+from repro.runtime.sharding import MeshPlan
+
+
+def island_weights(n_pods: int, alpha: float, survivors: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 2 weights [w_0..w_{n-1}] (island order = arrival order) with dead
+    islands zeroed; returns (w_islands [n_pods], w_server scalar)."""
+    j = jnp.arange(n_pods, dtype=jnp.float32)
+    w = (1.0 - alpha) * alpha ** (n_pods - 1.0 - j)
+    w = w * survivors.astype(jnp.float32)
+    return w, 1.0 - w.sum()
+
+
+def make_vc_round(model: Model, plan: MeshPlan, n_pods: int,
+                  local_steps: int = 4, optimizer=None,
+                  clip_norm: float = 1.0, pod_axis: str = "pod"):
+    """Returns vc_round(server, islands, opts, batches, alpha, survivors)
+    -> (server', islands', opts', metrics).
+
+    islands/opts carry a leading [n_pods] dim; batches carry
+    [n_pods, local_steps, ...]."""
+    optimizer = optimizer or Adam(lr=3e-4)
+
+    def local_train(params, opt_state, steps_batch):
+        """k local steps on one island (scan over steps)."""
+        def step(carry, batch):
+            p, o = carry
+            (loss, _), grads = jax.value_and_grad(
+                lambda pp: model.loss(pp, batch, plan=plan), has_aux=True)(p)
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+            p, o = optimizer.update(grads, o, p)
+            return (p, o), loss
+        (params, opt_state), losses = jax.lax.scan(
+            step, (params, opt_state), steps_batch)
+        return params, opt_state, losses.mean()
+
+    def vc_round(server, islands, opts, batches, alpha, survivors):
+        # 1) island-local training, no cross-pod sync
+        islands, opts, losses = jax.vmap(local_train)(islands, opts, batches)
+        # 2) Eq. 2 assimilation over the pod axis (one fused reduction)
+        w, w_s = island_weights(n_pods, alpha, survivors)
+
+        def merge(s, isl):
+            wi = w.reshape((n_pods,) + (1,) * (isl.ndim - 1)).astype(jnp.float32)
+            # select-before-multiply: a dead island may hold inf/nan (it
+            # crashed mid-step) and 0 * inf would poison the server
+            contrib = jnp.sum(jnp.where(wi > 0.0,
+                                        wi * isl.astype(jnp.float32), 0.0),
+                              axis=0)
+            return (w_s * s.astype(jnp.float32) + contrib).astype(s.dtype)
+
+        server = jax.tree.map(merge, server, islands)
+        # 3) redistribution: every island restarts from the server snapshot
+        islands = jax.tree.map(
+            lambda s, isl: jnp.broadcast_to(s[None], isl.shape).astype(isl.dtype),
+            server, islands)
+        return server, islands, opts, {"loss": losses.mean()}
+
+    return vc_round
+
+
+def island_shardings(model: Model, plan: MeshPlan, n_pods: int,
+                     optimizer, pod_axis: str = "pod"):
+    """Shardings: server replicated over pod / sharded inner; islands carry a
+    leading pod-sharded dim."""
+    p_specs = model.param_specs()
+    inner = plan.param_shardings(p_specs)
+
+    def lift(ns: NamedSharding) -> NamedSharding:
+        return NamedSharding(plan.mesh, P(pod_axis, *ns.spec))
+
+    server_sh = inner
+    island_sh = jax.tree.map(lift, inner)
+    opt_specs = jax.eval_shape(optimizer.init, p_specs)
+    from repro.optim import OptState
+    opt_sh = OptState(step=NamedSharding(plan.mesh, P(pod_axis)),
+                      m=jax.tree.map(lift, inner),
+                      v=jax.tree.map(lift, inner))
+    return server_sh, island_sh, opt_sh
+
+
+def compressed_assimilate(server, islands, alpha, survivors, *,
+                          density: float = 0.05, residuals=None):
+    """Delta-form Eq. 2 with top-k + int8 compression and error feedback —
+    what actually crosses the DCN between pods.  Returns (server', residuals').
+    Pure-jnp reference; the fused kernels live in kernels/."""
+    from repro.core import compression as C
+    n = islands_leading_dim(islands)
+    w, w_s = island_weights(n, alpha, survivors)
+
+    def one_leaf(s, isl, res):
+        s32 = s.astype(jnp.float32)
+        out = w_s * s32
+        new_res = []
+        for j in range(n):
+            delta = isl[j].astype(jnp.float32) - s32
+            if res is not None:
+                delta = delta + res[j]
+            payload, r = C.compress_delta(delta, density=density)
+            deq = C.decompress_delta(payload)
+            out = out + w[j] * (s32 + deq)
+            new_res.append(r)
+        return out.astype(s.dtype), jnp.stack(new_res)
+
+    flat_s, tdef = jax.tree.flatten(server)
+    flat_i = jax.tree.leaves(islands)
+    flat_r = (jax.tree.leaves(residuals) if residuals is not None
+              else [None] * len(flat_s))
+    merged, residuals_out = [], []
+    for s, isl, r in zip(flat_s, flat_i, flat_r):
+        m, nr = one_leaf(s, isl, r)
+        merged.append(m)
+        residuals_out.append(nr)
+    return jax.tree.unflatten(tdef, merged), jax.tree.unflatten(tdef, residuals_out)
+
+
+def islands_leading_dim(islands) -> int:
+    return jax.tree.leaves(islands)[0].shape[0]

@@ -1,0 +1,46 @@
+"""Compression invariants: error feedback conserves the delta exactly;
+round-trips bound quantization error; ratios are as advertised."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 999), density=st.floats(0.01, 0.5))
+def test_error_feedback_conserves_delta(seed, density):
+    """transmitted + residual == delta exactly (up to quantization error
+    already inside `transmitted`): delta - residual == dequant(payload)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (257, 33)) * 2
+    payload, residual = C.compress_delta(x, density=density)
+    deq = C.decompress_delta(payload)
+    np.testing.assert_allclose(np.asarray(x - residual), np.asarray(deq),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_topk_selects_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 1.0])
+    payload, res = C.compress_delta(x, density=0.34)       # k = 2
+    deq = np.asarray(C.decompress_delta(payload))
+    nz = np.flatnonzero(deq)
+    assert set(nz) == {1, 3}
+
+
+def test_quant_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (10000,)) * 7
+    q, s = C.quantize_int8(x)
+    deq = C.dequantize_int8(q, s, x.size)
+    per_block_scale = np.repeat(np.asarray(s), 256)[: x.size]
+    assert (np.abs(np.asarray(x) - np.asarray(deq))
+            <= per_block_scale * 0.5 + 1e-7).all()
+
+
+def test_compression_ratio():
+    x = jax.random.normal(jax.random.PRNGKey(1), (100_000,))
+    payload, _ = C.compress_delta(x, density=0.05)
+    ratio = C.compression_ratio(payload)
+    # 5% density, ~5 bytes/kept value (1B q + 4B idx + scale amortized):
+    # ratio = 4n / (5 * 0.05n) = 16
+    assert 14.0 < ratio < 18.0

@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret mode on
+CPU) against its ref.py pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+
+RNG = jax.random.PRNGKey(42)
+
+
+def keys(n):
+    return jax.random.split(RNG, n)
+
+
+TOL = {jnp.float32: 2e-6, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("shape", [(17,), (255, 9), (1024, 64), (3, 5, 7, 11)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("alpha", [0.0, 0.5, 0.95, 1.0])
+def test_fused_lerp(shape, dtype, alpha):
+    k1, k2 = keys(2)
+    s = jax.random.normal(k1, shape, dtype)
+    c = jax.random.normal(k2, shape, dtype)
+    got = K.fused_lerp(s, c, alpha)
+    want = R.vc_asgd_lerp(s, c, alpha)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+@pytest.mark.parametrize("shape", [(513,), (64, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_dc_lerp(shape, dtype):
+    k1, k2, k3, k4 = keys(4)
+    s = jax.random.normal(k1, shape, dtype)
+    c = jax.random.normal(k2, shape, dtype)
+    g = jax.random.normal(k3, shape, dtype)
+    b = jax.random.normal(k4, shape, dtype)
+    got = K.fused_dc_lerp(s, c, g, b, 0.9, 0.05)
+    want = R.vc_asgd_dc_lerp(s, c, g, b, 0.9, 0.05)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=4 * TOL[dtype], atol=4 * TOL[dtype])
+
+
+@pytest.mark.parametrize("hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=True, window=64),
+    dict(causal=False), dict(causal=True, softcap=20.0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(hkv, kwargs, dtype):
+    h, kv = hkv
+    k1, k2, k3 = keys(3)
+    q = (jax.random.normal(k1, (2, h, 256, 32), jnp.float32) * 0.3).astype(dtype)
+    k = (jax.random.normal(k2, (2, kv, 256, 32), jnp.float32) * 0.3).astype(dtype)
+    v = jax.random.normal(k3, (2, kv, 256, 32), jnp.float32).astype(dtype)
+    got = K.flash_attention(q, k, v, q_block=128, kv_block=64, **kwargs)
+    want = R.attention(q, k, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0.05 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=0.05 if dtype == jnp.bfloat16 else 2e-5)
+
+
+@pytest.mark.parametrize("T", [1, 7, 64])
+@pytest.mark.parametrize("hd", [8, 64])
+def test_wkv6(T, hd):
+    k1, k2, k3, k4, k5 = keys(5)
+    b, h = 2, 3
+    r = jax.random.normal(k1, (b, h, T, hd)) * 0.4
+    k = jax.random.normal(k2, (b, h, T, hd)) * 0.4
+    v = jax.random.normal(k3, (b, h, T, hd))
+    w = jax.nn.sigmoid(jax.random.normal(k4, (b, h, T, hd))) * 0.6 + 0.35
+    u = jax.random.normal(k5, (h, hd)) * 0.2
+    got = K.wkv6(r, k, v, w, u)
+    want = R.wkv6(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("di,ds,T", [(128, 8, 16), (256, 16, 33), (128, 4, 5)])
+def test_mamba_scan(di, ds, T):
+    ks = keys(6)
+    b = 2
+    u = jax.random.normal(ks[0], (b, T, di)) * 0.4
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, T, di)))
+    B = jax.random.normal(ks[2], (b, T, ds)) * 0.4
+    C = jax.random.normal(ks[3], (b, T, ds)) * 0.4
+    A = -jnp.exp(jax.random.normal(ks[4], (di, ds)) * 0.3)
+    D = jnp.ones((di,))
+    got = K.mamba_scan(u, dt, B, C, A, D, d_block=128)
+    want = R.mamba_scan(u, dt, B, C, A, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n", [7, 256, 8191, 100_000])
+def test_quantize_roundtrip(n):
+    x = jax.random.normal(keys(1)[0], (n,)) * 5.0
+    q1, s1 = K.quantize_int8(x)
+    q2, s2 = R.quantize_int8(x)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    d1 = K.dequantize_int8(q1, s1, n)
+    d2 = R.dequantize_int8(q2, s2, n)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+    # quantization error bounded by half a scale step per block
+    err = np.abs(np.asarray(d1) - np.asarray(x))
+    smax = np.asarray(s1).max()
+    assert err.max() <= smax * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("n,tau", [(100, 0.5), (9000, 1.5)])
+def test_threshold_sparsify(n, tau):
+    x = jax.random.normal(keys(1)[0], (n,)) * 2
+    k1, r1 = K.threshold_sparsify(x, tau)
+    k2, r2 = R.threshold_sparsify(x, tau)
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(k2))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2))
+    # exact error-feedback identity
+    np.testing.assert_allclose(np.asarray(k1 + r1), np.asarray(x))

@@ -1,0 +1,228 @@
+"""Per-architecture smoke tests (reduced configs) + numerical equivalences:
+prefill+decode == full forward, CP chunking invariance, chunked linear
+recurrences == step recurrences, blocked attention == plain softmax."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.configs.shapes import SHAPES, cell_applicable
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import rwkv as R
+from repro.models.plan import NullPlan
+from repro.models.registry import build_model
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, b, s, key=RNG):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.vision is not None:
+        batch["patch_embeds"] = jax.random.normal(
+            key, (b, cfg.vision.n_patches, cfg.vision.vit_dim), jnp.float32)
+    if cfg.encoder is not None:
+        batch["frame_embeds"] = jax.random.normal(
+            key, (b, cfg.encoder.n_frames, cfg.encoder.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train step on CPU; shapes + finite."""
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    b, s = 2, 32
+    batch = _batch_for(cfg, b, s)
+    lg = model.forward(params, batch)
+    prefix = cfg.vision.n_patches if cfg.vision is not None else 0
+    assert lg.shape == (b, s + prefix, L.padded_vocab(cfg))
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_prefill_decode_consistency(arch):
+    """decode(t=s) logits == forward logits at position s (drop-free MoE)."""
+    cfg = get_reduced(arch).replace(compute_dtype="float32", scan_chunk=8)
+    if cfg.moe:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(RNG)
+    b, s = 2, 24
+    batch = _batch_for(cfg, b, s + 1)
+    full = model.forward(params, batch)
+    b0 = dict(batch)
+    b0["tokens"] = batch["tokens"][:, :s]
+    lg_pref, caches = model.prefill(params, b0)
+    prefix = cfg.vision.n_patches if cfg.vision is not None else 0
+    lg_dec, _ = model.decode_step(params, caches, batch["tokens"][:, s],
+                                  jnp.asarray(s + prefix, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_pref),
+                               np.asarray(full[:, prefix + s - 1]),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(lg_dec),
+                               np.asarray(full[:, prefix + s]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "gemma3-4b"])
+@pytest.mark.parametrize("cp", [2, 4])
+def test_cp_chunking_invariance(arch, cp):
+    """Context-parallel layout is numerically identical to local attention."""
+    cfg = get_reduced(arch).replace(compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    batch = _batch_for(cfg, 2, 64)
+    lg1 = model.forward(params, batch, plan=NullPlan())
+    lg2 = model.forward(params, batch, plan=NullPlan(attn_mode="cp", cp=cp))
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_cp_window_gather_equals_full():
+    """SWA via neighbor-chunk gather == SWA via full attention."""
+    cfg = get_reduced("gemma3-4b").replace(compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    batch = _batch_for(cfg, 2, 64)
+    a = model.forward(params, batch,
+                      plan=NullPlan(attn_mode="cp", cp=4, window_gather=True))
+    b = model.forward(params, batch,
+                      plan=NullPlan(attn_mode="cp", cp=4, window_gather=False))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_chunked_vs_recurrent():
+    cfg = get_reduced("rwkv6-1.6b").replace(compute_dtype="float32",
+                                            scan_chunk=8)
+    p = R.init_time_mix(RNG, cfg)
+    x = jax.random.normal(RNG, (2, 37, cfg.d_model)) * 0.5   # odd length
+    o1, _, _ = R.time_mix_chunked(p, x, cfg)
+    o2 = R.time_mix_recurrent_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_chunked_vs_recurrent():
+    cfg = get_reduced("jamba-v0.1-52b").replace(compute_dtype="float32",
+                                                scan_chunk=8)
+    p = M.init_mamba(RNG, cfg)
+    x = jax.random.normal(RNG, (2, 29, cfg.d_model)) * 0.5
+    y1, _ = M.mamba_chunked(p, x, cfg)
+    y2 = M.mamba_recurrent_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 24),
+                                           (False, None)])
+def test_blocked_attention_vs_plain(causal, window):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (2, 1, 64, 4, 16)) * 0.4
+    k = jax.random.normal(ks[1], (2, 64, 2, 16)) * 0.4
+    v = jax.random.normal(ks[2], (2, 64, 2, 16))
+    got = L.blocked_attention(q, k, v, causal=causal, window=window,
+                              q_block=16, kv_block=16)
+    # plain reference via kernels ref (layout adaptation)
+    from repro.kernels import ref as KR
+    want = KR.attention(q[:, 0].transpose(0, 2, 1, 3),
+                        k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                        causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(want.transpose(0, 2, 1, 3)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_two_tier_compaction():
+    """Attention over (old tier + recent ring) == attention over a cache
+    where the ring has been compacted into the old tier."""
+    cfg = get_reduced("internlm2-1.8b").replace(compute_dtype="float32")
+    b, kv, C, ln, hd = 2, 2, 2, 16, 16
+    ks = jax.random.split(RNG, 8)
+    cache = L.make_decode_cache(b, kv, C, ln, hd, jnp.float32, prefilled=20)
+    cache = cache._replace(
+        k_old=jax.random.normal(ks[0], cache.k_old.shape),
+        v_old=jax.random.normal(ks[1], cache.v_old.shape))
+    # append 3 tokens to the ring
+    for i in range(3):
+        kn = jax.random.normal(ks[2 + i], (b, kv, hd))
+        vn = jax.random.normal(ks[5 + i], (b, kv, hd))
+        cache = L.cache_append_recent(cache, kn, vn,
+                                      jnp.asarray(20 + i, jnp.int32))
+    q = jax.random.normal(ks[7], (b, 4, hd)) * 0.4
+    pos = jnp.asarray(22, jnp.int32)
+    out1 = L.decode_attention(q, cache, pos)
+    compacted = L.compact_cache(cache, pos)
+    out2 = L.decode_attention(q, compacted, pos)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+    assert int(compacted.rec_pos.max()) == -1           # ring emptied
+
+
+def test_cell_applicability_matrix():
+    """long_500k runs for ssm/hybrid/bounded-window archs, skips for pure
+    full-attention stacks; every other cell runs for every arch."""
+    runs, skips = set(), set()
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for cell in SHAPES.values():
+            (skips if cell_applicable(cfg, cell) else runs).add(
+                (arch, cell.name))
+    assert len(runs) + len(skips) == 40
+    expected_skips = {("stablelm-3b", "long_500k"),
+                      ("internlm2-1.8b", "long_500k"),
+                      ("qwen2.5-14b", "long_500k"),
+                      ("internvl2-2b", "long_500k"),
+                      ("whisper-tiny", "long_500k"),
+                      # granite's MoE changes only the FFN — attention is
+                      # dense-full, so 500k decode has no bounded mechanism
+                      ("granite-moe-1b-a400m", "long_500k")}
+    assert skips == expected_skips
+
+
+def test_moe_ep_equals_dense_dispatch():
+    """Expert-parallel dispatch (incl. virtual-expert f-splitting) is
+    numerically identical to the dense capacity path."""
+    import dataclasses
+    cfg = get_reduced("mixtral-8x7b").replace(compute_dtype="float32")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
+                                              ep_virtual=2))
+    p = L.init_moe(RNG, cfg)
+    x = jax.random.normal(RNG, (4, 8, cfg.d_model), jnp.float32)
+    o_ep, _ = L.apply_moe_ep(p, x, cfg, NullPlan(moe_ep=True, ep=2))
+    o_ref, _ = jax.vmap(lambda t: L.apply_moe(p, t, cfg))(x)
+    np.testing.assert_allclose(np.asarray(o_ep), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_virtual_experts_forward_consistency():
+    """A model built with ep_virtual=2 matches its own prefill/decode."""
+    import dataclasses
+    cfg = get_reduced("granite-moe-1b-a400m").replace(
+        compute_dtype="float32", scan_chunk=8)
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
+                                              ep_virtual=2))
+    model = build_model(cfg)
+    params = model.init(RNG)
+    batch = {"tokens": jax.random.randint(RNG, (2, 17), 0, cfg.vocab_size)}
+    full = model.forward(params, batch)
+    lg_p, caches = model.prefill(params, {"tokens": batch["tokens"][:, :16]})
+    lg_d, _ = model.decode_step(params, caches, batch["tokens"][:, 16],
+                                jnp.asarray(16, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(full[:, 15]),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(lg_d), np.asarray(full[:, 16]),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,113 @@
+"""Scheduler + work-generator invariants, hypothesis-driven: no subtask is
+ever lost, timeouts requeue, epochs complete, sticky affinity holds."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import Scheduler
+from repro.core.work_generator import WorkGenerator, auto_split, split_dataset
+
+
+def test_split_dataset_partition():
+    sp = split_dataset(1000, 7, seed=3)
+    assert sp.shard_sizes.sum() == 1000
+    assert sp.shard_sizes.min() >= 1000 // 7
+    assert len(set(range(7)) - set(sp.shard_index.tolist())) == 0
+
+
+def test_auto_split_bounds():
+    assert auto_split(50_000, 5, 2) == 20
+    assert auto_split(100, 50, 8, min_shard=10) == 10   # capped by min shard
+
+
+def test_epoch_rollover_and_completion():
+    gen = WorkGenerator(n_shards=3, max_epochs=2)
+    sched = Scheduler(gen, timeout_s=100, tasks_per_client=3)
+    done_epochs = 0
+    t = 0.0
+    while not gen.exhausted and t < 1000:
+        units = sched.request_work(0, t)
+        for u in units:
+            sched.complete(u.uid, t + 1)
+            if gen.complete(u):
+                done_epochs += 1
+        t += 2
+    assert done_epochs == 2
+    assert gen.exhausted
+
+
+def test_timeout_reassignment():
+    gen = WorkGenerator(n_shards=2, max_epochs=1)
+    sched = Scheduler(gen, timeout_s=10, tasks_per_client=2)
+    units = sched.request_work(0, 0.0)
+    assert len(units) == 2 and not gen.pending
+    expired = sched.expire_timeouts(11.0)
+    assert len(expired) == 2
+    assert len(gen.pending) == 2                     # requeued
+    assert sched.reassignments == 2
+    # a late result for an expired unit is ignored
+    assert sched.complete(units[0].uid, 12.0) is None
+
+
+def test_client_failure_requeues_all():
+    gen = WorkGenerator(n_shards=4, max_epochs=1)
+    sched = Scheduler(gen, timeout_s=100, tasks_per_client=4)
+    sched.request_work(7, 0.0)
+    lost = sched.fail_client(7, 1.0)
+    assert len(lost) == 4
+    assert len(gen.pending) == 4
+    assert sched.client_load[7] == 0
+    assert sched.client_rel[7] < 1.0                 # reliability decayed
+
+
+def test_sticky_affinity_prefers_cached_shards():
+    gen = WorkGenerator(n_shards=4, max_epochs=3)
+    sched = Scheduler(gen, timeout_s=100, tasks_per_client=1)
+    u1 = sched.request_work(0, 0.0)[0]
+    sched.complete(u1.uid, 1.0)
+    gen.complete(u1)
+    # next epoch: other shards pending too, but client 0 cached u1.shard
+    # complete the rest of epoch 1 via client 1
+    sched2 = sched
+    while gen.epoch == 1:
+        u = sched2.request_work(1, 2.0)
+        if not u:
+            break
+        sched2.complete(u[0].uid, 3.0)
+        gen.complete(u[0])
+    got = sched.request_work(0, 4.0)[0]
+    assert got.shard == u1.shard                      # sticky preference
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_shards=st.integers(1, 6), n_clients=st.integers(1, 4),
+       tpc=st.integers(1, 3), fail_every=st.integers(3, 9),
+       seed=st.integers(0, 99))
+def test_no_subtask_lost_under_random_failures(n_shards, n_clients, tpc,
+                                               fail_every, seed):
+    """Whatever the failure pattern, every epoch eventually completes with
+    every shard assimilated exactly (fault tolerance, §III-B)."""
+    import random
+    rng = random.Random(seed)
+    gen = WorkGenerator(n_shards=n_shards, max_epochs=2)
+    sched = Scheduler(gen, timeout_s=50, tasks_per_client=tpc)
+    t, it = 0.0, 0
+    shards_done = set()
+    while not gen.exhausted and it < 3000:
+        it += 1
+        cid = rng.randrange(n_clients)
+        if it % fail_every == 0:
+            sched.fail_client(cid, t)
+            t += 1
+            continue
+        sched.expire_timeouts(t)
+        for u in sched.request_work(cid, t):
+            if rng.random() < 0.3:
+                continue                              # lost in flight: times out
+            sched.complete(u.uid, t + 1)
+            if u.epoch == gen.epoch:
+                shards_done.add((u.epoch, u.shard))
+            gen.complete(u)
+        t += 60 if it % 5 == 0 else 1                 # advance past timeouts
+    assert gen.exhausted, "epochs must complete despite failures"

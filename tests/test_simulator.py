@@ -1,0 +1,110 @@
+"""End-to-end behaviour of the VC system simulator: convergence, fault
+tolerance under preemption, consistency trade-offs, baselines."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import (DCASGD, Downpour, EASGDPersistent, SyncBSP,
+                                  VCASGD)
+from repro.core.simulator import SimConfig, run_simulation, run_single_instance
+from repro.core.tasks import MLPTask, make_classification_data
+from repro.core.vc_asgd import var_alpha
+
+
+@pytest.fixture(scope="module")
+def task_data():
+    return MLPTask(), make_classification_data(n_train=3000, n_val=600)
+
+
+def _cfg(**kw):
+    base = dict(n_param_servers=2, n_clients=3, tasks_per_client=2,
+                n_shards=12, max_epochs=5, local_steps=2,
+                subtask_compute_s=120.0, seed=1)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def test_vc_asgd_converges(task_data):
+    task, data = task_data
+    res = run_simulation(task, data, VCASGD(0.95), _cfg())
+    assert res.epochs_done == 5
+    accs = [p.acc_mean for p in res.points]
+    assert accs[-1] > accs[0] + 0.1          # real learning happened
+    assert accs[-1] > 0.3
+
+
+def test_preemption_still_completes(task_data):
+    """The paper's core claim: training completes on preemptible clients."""
+    task, data = task_data
+    res = run_simulation(task, data, VCASGD(0.95),
+                         _cfg(preemptible=True, mean_lifetime_s=900.0,
+                              n_clients=5))
+    assert res.epochs_done == 5
+    assert res.preemptions > 0               # failures actually happened
+    assert res.final_accuracy > 0.3
+
+
+def test_eventual_vs_strong(task_data):
+    """Eventual loses some updates but keeps comparable accuracy; strong
+    loses none but queues (the §IV-D trade-off)."""
+    task, data = task_data
+    re_ = run_simulation(task, data, VCASGD(0.95), _cfg(consistency="eventual",
+                                                        tasks_per_client=4))
+    rs = run_simulation(task, data, VCASGD(0.95), _cfg(consistency="strong",
+                                                       tasks_per_client=4))
+    assert rs.store_stats.lost_updates == 0
+    assert re_.store_stats.lost_updates >= 0
+    assert rs.store_stats.queue_wait_s >= 0
+    assert abs(re_.final_accuracy - rs.final_accuracy) < 0.15
+
+
+def test_var_alpha_runs(task_data):
+    task, data = task_data
+    res = run_simulation(task, data, VCASGD(var_alpha()), _cfg())
+    assert res.epochs_done == 5
+    assert res.final_accuracy > 0.3
+
+
+@pytest.mark.parametrize("scheme_fn", [
+    lambda: Downpour(server_lr=0.5),
+    lambda: DCASGD(server_lr=0.5, lam=0.05),
+    lambda: EASGDPersistent(beta=0.05),
+])
+def test_baselines_run(task_data, scheme_fn):
+    task, data = task_data
+    res = run_simulation(task, data, scheme_fn(), _cfg(max_epochs=3))
+    assert res.epochs_done == 3
+    assert np.isfinite(res.final_accuracy)
+
+
+def test_sync_bsp_runs(task_data):
+    task, data = task_data
+    cfg = _cfg(max_epochs=3)
+    res = run_simulation(task, data, SyncBSP(cfg.n_shards), cfg)
+    assert res.epochs_done == 3
+
+
+def test_single_instance_baseline(task_data):
+    task, data = task_data
+    res = run_single_instance(task, data, max_epochs=5, steps_per_epoch=60)
+    accs = [p.acc_mean for p in res.points]
+    assert accs[-1] > accs[0]
+
+
+def test_determinism(task_data):
+    task, data = task_data
+    r1 = run_simulation(task, data, VCASGD(0.9), _cfg(max_epochs=2))
+    r2 = run_simulation(task, data, VCASGD(0.9), _cfg(max_epochs=2))
+    assert r1.wall_time_s == r2.wall_time_s
+    assert r1.final_accuracy == r2.final_accuracy
+
+
+def test_more_servers_reduce_backlog(task_data):
+    """Fig. 3's shape: with Tn high, P1 backlogs; P3 strictly faster."""
+    task, data = task_data
+    r1 = run_simulation(task, data, VCASGD(0.95),
+                        _cfg(n_param_servers=1, tasks_per_client=8,
+                             max_epochs=3, server_proc_s=6.0))
+    r3 = run_simulation(task, data, VCASGD(0.95),
+                        _cfg(n_param_servers=3, tasks_per_client=8,
+                             max_epochs=3, server_proc_s=6.0))
+    assert r3.points[-1].t_complete < r1.points[-1].t_complete

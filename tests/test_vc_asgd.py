@@ -1,0 +1,116 @@
+"""Property tests of the paper's update rule (Eq. 1 / Eq. 2) — hypothesis
+drives alphas, client counts and orderings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vc_asgd as V
+
+SHAPE = (13, 7)
+
+
+def tree_of(key, n=2):
+    ks = jax.random.split(key, n)
+    return {"a": jax.random.normal(ks[0], SHAPE),
+            "b": {"c": jax.random.normal(ks[1], (5,))}}
+
+
+@settings(max_examples=30, deadline=None)
+@given(alpha=st.floats(0.0, 1.0), n=st.integers(1, 8), seed=st.integers(0, 99))
+def test_eq2_equals_folded_eq1(alpha, n, seed):
+    """assimilate_many (Eq. 2 closed form) == folding Eq. 1 n times in
+    arrival order."""
+    key = jax.random.PRNGKey(seed)
+    server = tree_of(key)
+    clients = [tree_of(jax.random.fold_in(key, i + 1)) for i in range(n)]
+    folded = server
+    for c in clients:
+        folded = V.vc_asgd_update(folded, c, alpha)
+    closed = V.assimilate_many(server, clients, alpha)
+    for l1, l2 in zip(jax.tree.leaves(folded), jax.tree.leaves(closed)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(alpha=st.floats(0.0, 1.0), n=st.integers(0, 20))
+def test_weights_are_convex(alpha, n):
+    assert V.is_convex_combination(n, alpha, atol=1e-7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(alpha=st.floats(0.01, 0.99), n=st.integers(2, 6), seed=st.integers(0, 50))
+def test_order_sensitivity_matches_eq2(alpha, n, seed):
+    """Eq. 2 weights are (1-a)*a^{n-1-j}: later arrivals weigh MORE."""
+    w = V.assimilation_weights(n, alpha)
+    assert all(w[j + 1] >= w[j] - 1e-12 for j in range(1, n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(0.1, 0.99), seed=st.integers(0, 50),
+       drop=st.lists(st.booleans(), min_size=4, max_size=4))
+def test_fault_tolerance_dropping_any_subset(alpha, seed, drop):
+    """Dropping any subset of client results leaves a valid server state
+    bounded by the max norm of the participants (convexity) — the paper's
+    fault-tolerance claim in algebraic form."""
+    key = jax.random.PRNGKey(seed)
+    server = tree_of(key)
+    clients = [tree_of(jax.random.fold_in(key, i + 1)) for i in range(4)]
+    survivors = [c for c, d in zip(clients, drop) if not d]
+    out = V.assimilate_many(server, survivors, alpha)
+    bound = max(float(V.tree_max_abs(t)) for t in [server] + clients)
+    assert float(V.tree_max_abs(out)) <= bound + 1e-5
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(out))
+
+
+def test_delta_form_identity():
+    key = jax.random.PRNGKey(0)
+    server = tree_of(key)
+    client = tree_of(jax.random.fold_in(key, 1))
+    delta = jax.tree.map(lambda c, s: c - s, client, server)
+    direct = V.vc_asgd_update(server, client, 0.9)
+    via_delta = V.vc_asgd_update_delta(server, delta, 0.9)
+    for l1, l2 in zip(jax.tree.leaves(direct), jax.tree.leaves(via_delta)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6)
+
+
+def test_var_alpha_schedule():
+    """The paper's alpha_e = e/(e+1): 0.5 at e=1, ~0.976 at e=40, rising."""
+    f = V.var_alpha()
+    assert f(1) == 0.5
+    assert abs(f(40) - 40 / 41) < 1e-12
+    vals = [f(e) for e in range(1, 41)]
+    assert all(b > a for a, b in zip(vals, vals[1:]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(alpha=st.floats(0.5, 0.999), stale=st.integers(0, 10),
+       gamma=st.floats(0.1, 0.95))
+def test_staleness_alpha_bounds(alpha, stale, gamma):
+    a_eff = V.staleness_alpha(alpha, stale, gamma)
+    assert alpha - 1e-12 <= a_eff <= 1.0
+    # more staleness -> smaller client weight
+    assert V.staleness_alpha(alpha, stale + 1, gamma) >= a_eff - 1e-12
+
+
+def test_kernel_backed_update_matches():
+    key = jax.random.PRNGKey(3)
+    server = tree_of(key)
+    client = tree_of(jax.random.fold_in(key, 9))
+    a = V.vc_asgd_update(server, client, 0.93, use_kernel=False)
+    b = V.vc_asgd_update(server, client, 0.93, use_kernel=True)
+    for l1, l2 in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6,
+                                   atol=1e-6)
+
+
+def test_dc_gradient_shape_and_zero_lam():
+    key = jax.random.PRNGKey(5)
+    g = tree_of(key)
+    wn = tree_of(jax.random.fold_in(key, 1))
+    wb = tree_of(jax.random.fold_in(key, 2))
+    out = V.dc_asgd_gradient(g, wn, wb, lam=0.0)
+    for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(g)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2))
