@@ -8,7 +8,9 @@ the same harness times the Mosaic kernels.
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import Callable, Dict
 
 import jax
@@ -72,4 +74,110 @@ def bench_kernels() -> Dict[str, Dict]:
                                 - R.vc_asgd_lerp(sp, cp, 0.9))))
     out["pallas_vs_ref_lerp"] = {"us_per_call": 0.0,
                                  "derived": f"maxerr={err:.1e}"}
+    return out
+
+
+def bench_flat_assimilate(*, n_clients: int = 4, write_json: bool = True
+                          ) -> Dict[str, Dict]:
+    """flat_vs_treemap: the FlatParams bus (core/flat.py) against the
+    per-leaf tree walk it replaced.
+
+    (a) Eq. 2 assimilation — n sequential per-leaf tree.map lerp folds vs
+        ONE fused pass over the stacked [n_clients, N] flat buffer;
+    (b) compressed assimilation — the per-leaf × per-island top-k loop
+        (compressed_assimilate_per_leaf) vs ONE global top-k per island on
+        the flat bus;
+    (c) launch-count evidence that the fused Pallas path is a single
+        ``pallas_call`` for the whole multi-leaf model.
+
+    Writes results/BENCH_flat_assimilate.json so the perf trajectory of the
+    flat path is recorded from this PR onward.
+    """
+    from repro.core import flat as F
+    from repro.core import vc_asgd as V
+    from repro.kernels import vc_asgd_update as VK
+    from repro.runtime.vc_runtime import (compressed_assimilate,
+                                          compressed_assimilate_per_leaf)
+
+    key = jax.random.PRNGKey(0)
+    # multi-leaf model, heterogeneous leaf sizes (~2.1M params over 24 leaves)
+    sizes = [(256, 256), (1024, 64), (64,), (512, 512), (128, 1024), (1024,)]
+    tree = {}
+    for rep in range(4):
+        for i, shp in enumerate(sizes):
+            k2 = jax.random.fold_in(key, rep * 16 + i)
+            tree[f"layer{rep}/p{i}"] = jax.random.normal(k2, shp, jnp.float32)
+    n_leaves = len(jax.tree.leaves(tree))
+    n_params = sum(x.size for x in jax.tree.leaves(tree))
+    clients = [jax.tree.map(
+        lambda x, c=c: x + 0.01 * jax.random.normal(
+            jax.random.fold_in(key, 1000 + c), x.shape), tree)
+        for c in range(n_clients)]
+    alpha = 0.9
+
+    fp = F.flatten(tree)
+    cbuf = jnp.stack([F.flatten_like(c, fp.spec) for c in clients])
+
+    # (a) Eq. 2: per-leaf folds vs one flat pass (both XLA-jitted; on this
+    # CPU container the Pallas path runs interpret-mode, so the jnp flat
+    # form is the apples-to-apples timing — see module docstring)
+    def per_leaf(s, cs):
+        folded = s
+        for c in cs:
+            folded = V.vc_asgd_update(folded, c, alpha)
+        return folded
+
+    us_tree = _time(per_leaf, tree, clients, iters=20)
+    us_flat = _time(lambda s, cb: V.assimilate_many_flat(s, cb, alpha),
+                    fp, cbuf, iters=20)
+
+    # (c) launch counts through the Pallas entry points (trace-time)
+    VK.reset_launch_count()
+    V.assimilate_many_flat(fp, cbuf, alpha, use_kernel=True)
+    launches_flat = VK.launch_count()
+    VK.reset_launch_count()
+    for c in clients:
+        V.vc_asgd_update(tree, c, alpha, use_kernel=True)
+    launches_per_leaf = VK.launch_count()
+
+    # (b) compressed assimilation: per-leaf × per-island loop vs flat global
+    # (both jitted + warmed via _time, like (a) — a cold eager call would
+    # mostly measure tracing the 24x4 per-leaf top-k graphs)
+    islands = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
+    surv = jnp.ones((n_clients,), bool)
+
+    us_comp_leaf = _time(
+        lambda t, i: compressed_assimilate_per_leaf(t, i, alpha, surv,
+                                                    density=0.05)[0],
+        tree, islands, iters=3)
+    us_comp_flat = _time(
+        lambda t, i: compressed_assimilate(t, i, alpha, surv,
+                                           density=0.05)[0],
+        tree, islands, iters=3)
+
+    out = {
+        # no commas in derived: run.py prints name,us_per_call,derived CSV
+        "model": {"us_per_call": 0.0,
+                  "derived": f"{n_leaves} leaves / {int(n_params)} params / "
+                             f"{n_clients} clients / padded={fp.spec.padded}"},
+        "assimilate_treemap": {"us_per_call": round(us_tree, 1),
+                               "derived": f"{n_leaves * n_clients} lerps"},
+        "assimilate_flat": {"us_per_call": round(us_flat, 1),
+                            "derived":
+                            f"speedup={us_tree / max(us_flat, 1e-9):.2f}x"},
+        "pallas_launches": {"us_per_call": 0.0,
+                            "derived": f"flat={launches_flat} "
+                                       f"per_leaf={launches_per_leaf}"},
+        "compressed_per_leaf": {"us_per_call": round(us_comp_leaf, 1),
+                                "derived":
+                                f"{n_leaves}x{n_clients} topk calls"},
+        "compressed_flat": {"us_per_call": round(us_comp_flat, 1),
+                            "derived": f"speedup="
+                            f"{us_comp_leaf / max(us_comp_flat, 1e-9):.2f}x"},
+    }
+    if write_json:
+        results = Path(__file__).resolve().parents[1] / "results"
+        results.mkdir(exist_ok=True)
+        (results / "BENCH_flat_assimilate.json").write_text(
+            json.dumps(out, indent=1))
     return out

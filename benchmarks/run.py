@@ -26,7 +26,7 @@ def main(argv=None) -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import paper_figs as F
-    from benchmarks.kernel_bench import bench_kernels
+    from benchmarks.kernel_bench import bench_flat_assimilate, bench_kernels
 
     benches = {
         "fig2": lambda: F.fig2_distributed(quick),
@@ -36,6 +36,7 @@ def main(argv=None) -> None:
         "consistency": lambda: F.consistency_bench(quick),
         "cost": lambda: F.cost_bench(quick),
         "kernels": bench_kernels,
+        "flat": bench_flat_assimilate,
     }
 
     print("name,us_per_call,derived")
@@ -49,7 +50,7 @@ def main(argv=None) -> None:
         out = RESULTS / f"bench_{name}.json"
         out.write_text(json.dumps(res, indent=1, default=str))
         claims = res.pop("_claims", None) if isinstance(res, dict) else None
-        if name == "kernels":
+        if name in ("kernels", "flat"):
             for k, v in res.items():
                 print(f"{name}.{k},{v['us_per_call']},{v['derived']}")
         else:

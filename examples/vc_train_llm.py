@@ -65,9 +65,9 @@ def main():
 
     n_dev = len(jax.devices())
     tp = 2 if n_dev >= 4 else 1
-    mesh = jax.make_mesh((args.islands, max(1, n_dev // (args.islands * tp)),
-                          tp), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((args.islands, max(1, n_dev // (args.islands * tp)),
+                             tp), ("pod", "data", "model"))
     plan = MeshPlan.build(cfg, mesh)
     opt = Adam(lr=cosine_schedule(3e-4, warmup=20,
                                   total=args.rounds * args.local_steps))

@@ -1,4 +1,6 @@
 from repro.checkpoint.store import (CheckpointManager, load_checkpoint,
-                                    save_checkpoint)
+                                    load_flat_checkpoint, save_checkpoint,
+                                    save_flat_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager",
+           "save_flat_checkpoint", "load_flat_checkpoint"]

@@ -8,6 +8,11 @@ the paper's whole point), so checkpoints are snapshots of
 cursor).  ``CheckpointManager.restore_or_init`` is what every launcher
 calls first: a preempted coordinator resumes exactly where the last
 assimilation left off.
+
+Server state on the FlatParams bus (core/flat.py) takes the flat path:
+``save_flat_checkpoint`` writes the TreeSpec offset table in the header
+and the parameter set as ONE contiguous buffer (no leaf-by-leaf packing);
+the manager routes FlatParams there automatically.
 """
 from __future__ import annotations
 
@@ -78,6 +83,66 @@ def load_checkpoint(path: str | Path, tree_like) -> Tuple[Any, Dict]:
     return jax.tree.unflatten(treedef, out), header.get("extra", {})
 
 
+# ---------------------------------------------------------------------------
+# flat-bus checkpoints (core/flat.py): ONE contiguous buffer write instead
+# of leaf-by-leaf packing.  The TreeSpec offset table rides in the header;
+# the treedef itself (not serializable) is re-derived from `tree_like` at
+# load, exactly like load_checkpoint.
+# ---------------------------------------------------------------------------
+
+def save_flat_checkpoint(path: str | Path, fp, extra: Optional[Dict] = None
+                         ) -> None:
+    """Atomic save of a FlatParams: header (layout + extra) + one buffer."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    buf = np.asarray(jax.device_get(fp.buf))
+    if buf.dtype == jnp.bfloat16:
+        buf_dtype, raw = "bfloat16", buf.view(np.uint16).tobytes()
+    else:
+        buf_dtype, raw = str(buf.dtype), buf.tobytes()
+    header = {"flat": fp.spec.meta(), "buf_dtype": buf_dtype,
+              "treedef": str(fp.spec.treedef), "extra": extra or {}}
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(header, use_bin_type=True))
+            f.write(msgpack.packb(raw, use_bin_type=True))
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_flat_checkpoint(path: str | Path, like) -> Tuple[Any, Dict]:
+    """Restore a FlatParams saved by save_flat_checkpoint.
+
+    ``like`` supplies the treedef: a FlatParams, a TreeSpec, or a template
+    tree with the same structure.  The stored offset table is validated
+    against it (shape/offset mismatch -> ValueError, not silent garbage)."""
+    from repro.core import flat as F
+    path = Path(path)
+    if isinstance(like, F.FlatParams):
+        spec = like.spec
+    elif isinstance(like, F.TreeSpec):
+        spec = like
+    else:
+        spec = F.tree_spec(like)
+    with open(path, "rb") as f:
+        unpacker = msgpack.Unpacker(f, raw=False, max_buffer_size=2 ** 31)
+        header = next(unpacker)
+        raw = next(unpacker)
+    meta = header["flat"]
+    if (tuple(tuple(s) for s in meta["shapes"]) != spec.shapes
+            or tuple(meta["offsets"]) != spec.offsets
+            or meta["n"] != spec.n or meta["padded"] != spec.padded):
+        raise ValueError(f"flat checkpoint layout mismatch: {path}")
+    if header["buf_dtype"] == "bfloat16":
+        buf = jnp.asarray(np.frombuffer(raw, np.uint16).view(jnp.bfloat16))
+    else:
+        buf = jnp.asarray(np.frombuffer(raw, np.dtype(header["buf_dtype"])))
+    return F.FlatParams(buf, spec), header.get("extra", {})
+
+
 class CheckpointManager:
     """Rolling checkpoints with async save and retention.
 
@@ -99,10 +164,15 @@ class CheckpointManager:
 
     def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
         self.wait()
+        from repro.core import flat as F
+        flat = isinstance(tree, F.FlatParams)
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
-            save_checkpoint(self._path(step), host_tree, extra)
+            if flat:
+                save_flat_checkpoint(self._path(step), host_tree, extra)
+            else:
+                save_checkpoint(self._path(step), host_tree, extra)
             self._gc()
 
         if self.async_save:
@@ -131,8 +201,12 @@ class CheckpointManager:
         """Resume from the newest checkpoint or initialize fresh.
         Returns (tree, extra, step)."""
         self.wait()
+        from repro.core import flat as F
         step = self.latest_step()
         if step is None:
             return init_fn(), {}, 0
-        tree, extra = load_checkpoint(self._path(step), tree_like)
+        if isinstance(tree_like, (F.FlatParams, F.TreeSpec)):
+            tree, extra = load_flat_checkpoint(self._path(step), tree_like)
+        else:
+            tree, extra = load_checkpoint(self._path(step), tree_like)
         return tree, extra, step

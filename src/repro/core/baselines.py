@@ -1,6 +1,12 @@
 """Server parameter-update schemes: VC-ASGD plus every baseline the paper
 discusses (§II-B, §III-C), behind one interface the simulator drives.
 
+Server state rides the flat bus (core/flat.py): ``state["params"]`` is a
+``FlatParams`` — ONE contiguous buffer — so every scheme's update is a
+single fused pass over the whole model, the same code path the pod-scale
+runtime uses (core/vc_asgd.py flat forms).  Clients remain tree-world
+(they train real models); payloads are flattened once at assimilation.
+
 * VC-ASGD    — Eq. 1 lerp per arriving result; alpha schedule per epoch.
 * Downpour   — clients push accumulated deltas (n_push == one subtask), the
                server applies them directly (Dean et al. [4]).
@@ -14,12 +20,13 @@ discusses (§II-B, §III-C), behind one interface the simulator drives.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import flat as F
 from repro.core import vc_asgd as V
 
 
@@ -38,17 +45,31 @@ class ResultMeta:
         return max(0, self.server_version - self.read_version)
 
 
+def as_flat(params) -> F.FlatParams:
+    """Coerce a tree onto the flat bus (no-op for FlatParams)."""
+    return params if isinstance(params, F.FlatParams) else F.flatten(params)
+
+
+def as_tree(params):
+    """Inverse boundary: what clients/evaluators consume."""
+    return F.unflatten(params) if isinstance(params, F.FlatParams) else params
+
+
 class ServerScheme:
     """Stateless-client contract: a client downloads server params, trains
     on its shard, uploads a payload; the server assimilates payloads in
     arrival order.  Fault tolerance == dropping any subset of payloads
-    leaves the server state valid."""
+    leaves the server state valid.
+
+    ``state["params"]`` is a FlatParams; ``client_payload`` receives and
+    returns trees (the client side); ``assimilate`` flattens the payload
+    onto the server's layout and updates the flat buffer in one pass."""
 
     name = "base"
     requires_all_clients = False    # True -> not fault tolerant (BSP/EASGD-p)
 
     def init_state(self, params0) -> Dict[str, Any]:
-        return {"params": params0, "version": 0}
+        return {"params": as_flat(params0), "version": 0}
 
     def params_for_client(self, state):
         return state["params"]
@@ -75,7 +96,9 @@ class VCASGD(ServerScheme):
         a = self.alpha(meta.epoch)
         if self.staleness_gamma is not None:
             a = V.staleness_alpha(a, meta.staleness, self.staleness_gamma)
-        state["params"] = V.vc_asgd_update(state["params"], payload, a)
+        fp = as_flat(state["params"])
+        c_buf = F.flatten_like(payload, fp.spec)
+        state["params"] = V.vc_asgd_update_flat(fp, c_buf, a)
         state["version"] += 1
         return state
 
@@ -92,8 +115,9 @@ class Downpour(ServerScheme):
         return jax.tree.map(lambda t, s: t - s, trained, start)
 
     def assimilate(self, state, payload, meta: ResultMeta):
-        state["params"] = jax.tree.map(
-            lambda p, d: p + self.server_lr * d, state["params"], payload)
+        fp = as_flat(state["params"])
+        d_buf = F.flatten_like(payload, fp.spec)
+        state["params"] = fp.with_buf(fp.buf + self.server_lr * d_buf)
         state["version"] += 1
         return state
 
@@ -106,23 +130,21 @@ class DCASGD(Downpour):
         super().__init__(server_lr)
         self.lam = lam
         self.name = "dc-asgd"
-        self._backups: Dict[int, Any] = {}
+        self._backups: Dict[int, F.FlatParams] = {}
 
     def params_for_client(self, state):
         return state["params"]
 
     def note_handout(self, cid: int, params):
-        self._backups[cid] = params
+        self._backups[cid] = as_flat(params)
 
     def assimilate(self, state, payload, meta: ResultMeta):
-        backup = self._backups.get(meta.cid, state["params"])
+        fp = as_flat(state["params"])
+        backup = as_flat(self._backups.get(meta.cid, fp))
         # payload is a delta ~ -lr * accumulated grad; compensate elementwise
-        comp = jax.tree.map(
-            lambda d, wn, wb: d + self.lam * d * d *
-            jnp.sign(d) * (wn - wb),
-            payload, state["params"], backup)
-        state["params"] = jax.tree.map(
-            lambda p, d: p + self.server_lr * d, state["params"], comp)
+        d = F.flatten_like(payload, fp.spec)
+        comp = d + self.lam * d * d * jnp.sign(d) * (fp.buf - backup.buf)
+        state["params"] = fp.with_buf(fp.buf + self.server_lr * comp)
         state["version"] += 1
         return state
 
@@ -139,7 +161,7 @@ class EASGDPersistent(ServerScheme):
     def __init__(self, beta: float = 0.001):
         self.beta = beta
         self.name = "easgd-persistent"
-        self.replicas: Dict[int, Any] = {}
+        self.replicas: Dict[int, F.FlatParams] = {}
 
     def params_for_client(self, state, cid: Optional[int] = None):
         if cid is not None and cid in self.replicas:
@@ -147,12 +169,11 @@ class EASGDPersistent(ServerScheme):
         return state["params"]
 
     def assimilate(self, state, payload, meta: ResultMeta):
-        center = state["params"]
-        diff = jax.tree.map(lambda x, c: x - c, payload, center)
-        state["params"] = jax.tree.map(
-            lambda c, d: c + self.beta * d, center, diff)
-        self.replicas[meta.cid] = jax.tree.map(
-            lambda x, d: x - self.beta * d, payload, diff)
+        center = as_flat(state["params"])
+        x_buf = F.flatten_like(payload, center.spec)
+        diff = x_buf - center.buf
+        state["params"] = center.with_buf(center.buf + self.beta * diff)
+        self.replicas[meta.cid] = center.with_buf(x_buf - self.beta * diff)
         state["version"] += 1
         return state
 
@@ -162,22 +183,23 @@ class EASGDPersistent(ServerScheme):
 
 class SyncBSP(ServerScheme):
     """Bulk-synchronous: buffer weights until EVERY shard of the round has
-    reported, then average.  Under preemption the barrier stalls until
-    timeout reassignment refills the missing shards."""
+    reported, then average — one fused mean over the stacked flat buffers.
+    Under preemption the barrier stalls until timeout reassignment refills
+    the missing shards."""
 
     requires_all_clients = True
 
     def __init__(self, n_shards: int):
         self.n_shards = n_shards
         self.name = "sync-bsp"
-        self._buf: Dict[int, Any] = {}
+        self._buf: Dict[int, jnp.ndarray] = {}
 
     def assimilate(self, state, payload, meta: ResultMeta):
-        self._buf[meta.shard] = payload
+        fp = as_flat(state["params"])
+        self._buf[meta.shard] = F.flatten_like(payload, fp.spec)
         if len(self._buf) == self.n_shards:
-            ws = list(self._buf.values())
-            state["params"] = jax.tree.map(
-                lambda *xs: sum(xs) / len(xs), *ws)
+            stacked = jnp.stack(list(self._buf.values()))
+            state["params"] = fp.with_buf(stacked.mean(axis=0))
             state["version"] += 1
             self._buf.clear()
         return state

@@ -11,10 +11,15 @@ gzip.  At LLM scale the assimilation payload is the parameter *delta*
 
 Both have pure-jnp forms here and fused Pallas kernels (kernels/topk_mask,
 kernels/quantize) for the TPU hot path.
+
+Two selection granularities: ``compress_delta`` (per-tensor, the original
+form) and ``compress_flat``/``compress_tree_global`` — ONE top-k over the
+whole model on the FlatParams bus (core/flat.py), which retains at least
+as much update mass at equal density and is what the runtime ships.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,20 +61,14 @@ def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, n: int,
 
 def compress_delta(delta: jnp.ndarray, *, density: float = 0.05,
                    block: int = 256) -> Tuple[CompressedDelta, jnp.ndarray]:
-    """Top-k + int8. Returns (payload, residual) — residual is the error-
-    feedback carry (what was NOT transmitted, plus quantization error)."""
-    flat = delta.reshape(-1).astype(jnp.float32)
-    k = max(1, int(flat.size * density))
-    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
-    sel = flat[idx]
-    q, scales = quantize_int8(sel, block)
-    deq = dequantize_int8(q, scales, k, block)
-    transmitted = jnp.zeros_like(flat).at[idx].set(deq)
-    residual = (flat - transmitted).reshape(delta.shape)
-    payload = CompressedDelta(values=q, scales=scales,
-                              indices=idx.astype(jnp.int32),
-                              shape=delta.shape, density=density)
-    return payload, residual
+    """Top-k + int8 on one tensor. Returns (payload, residual) — residual is
+    the error-feedback carry (what was NOT transmitted, plus quantization
+    error).  Thin shape-preserving wrapper over compress_flat (one canonical
+    top-k/quantize/error-feedback pipeline)."""
+    payload, residual = compress_flat(delta.reshape(-1), density=density,
+                                      block=block)
+    return (payload._replace(shape=delta.shape),
+            residual.reshape(delta.shape))
 
 
 def decompress_delta(p: CompressedDelta) -> jnp.ndarray:
@@ -79,6 +78,59 @@ def decompress_delta(p: CompressedDelta) -> jnp.ndarray:
     deq = dequantize_int8(p.values, p.scales, p.values.size)
     flat = jnp.zeros((n,), jnp.float32).at[p.indices].set(deq)
     return flat.reshape(p.shape)
+
+
+# ---------------------------------------------------------------------------
+# flat-bus forms (core/flat.py): ONE global top-k over the whole model.
+# A global (whole-model) magnitude top-k at density d never keeps a smaller
+# mass than per-leaf top-k at the same d: the per-leaf selection is a
+# feasible point of the global selection problem.  This is the Hivemind-
+# style flat, globally-sparsified update buffer.
+# ---------------------------------------------------------------------------
+
+def compress_flat(delta_buf: jnp.ndarray, *, density: float = 0.05,
+                  block: int = 256, logical_n: Optional[int] = None,
+                  residual: Optional[jnp.ndarray] = None
+                  ) -> Tuple[CompressedDelta, jnp.ndarray]:
+    """Global top-k + int8 with error feedback on a flat [padded] buffer.
+
+    ``logical_n`` (spec.n) sizes k so tail padding never inflates the
+    density budget; ``residual`` is the error-feedback carry from the
+    previous round (added to the delta BEFORE selection, so nothing is
+    permanently lost).  Returns (payload, new_residual [padded])."""
+    flat = delta_buf.reshape(-1).astype(jnp.float32)
+    if residual is not None:
+        flat = flat + residual.reshape(-1).astype(jnp.float32)
+    n = int(logical_n) if logical_n is not None else flat.size
+    k = max(1, min(n, int(n * density)))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    q, scales = quantize_int8(sel, block)
+    deq = dequantize_int8(q, scales, k, block)
+    transmitted = jnp.zeros_like(flat).at[idx].set(deq)
+    new_residual = flat - transmitted
+    payload = CompressedDelta(values=q, scales=scales,
+                              indices=idx.astype(jnp.int32),
+                              shape=(flat.size,), density=density)
+    return payload, new_residual
+
+
+def decompress_flat(p: CompressedDelta) -> jnp.ndarray:
+    """Rebuild the dense flat [padded] buffer from a global payload."""
+    return decompress_delta(p)
+
+
+def compress_tree_global(delta_tree, *, density: float = 0.05,
+                         block: int = 256,
+                         residual: Optional[jnp.ndarray] = None):
+    """Whole-model compression of a delta TREE through the flat bus.
+    Returns (payload, new_residual_buf, spec) — decompress with
+    ``flat.unflatten(FlatParams(decompress_flat(p), spec))``."""
+    from repro.core import flat as F
+    fp = F.flatten(delta_tree)
+    payload, res = compress_flat(fp.buf, density=density, block=block,
+                                 logical_n=fp.spec.n, residual=residual)
+    return payload, res, fp.spec
 
 
 def payload_bytes(p: CompressedDelta) -> int:

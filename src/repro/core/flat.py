@@ -1,0 +1,197 @@
+"""FlatParams — one contiguous parameter bus for the whole assimilation path.
+
+The server update (Eq. 1/2) is purely memory-bound: every assimilation
+streams the entire parameter set through HBM once.  Walking the parameter
+*tree* leaf-by-leaf (one lerp / one ``pallas_call`` / one top-k per leaf)
+leaves that bandwidth on the table and compresses worse than a global
+top-k.  ``FlatParams`` collapses the tree into a single 1-D buffer so that
+assimilation, compression and checkpointing each become ONE pass over ONE
+contiguous array — the layout Hivemind-style systems ship on the wire.
+
+Buffer layout / alignment contract
+----------------------------------
+
+* Leaves are packed back-to-back in ``jax.tree.flatten`` order, each leaf
+  raveled C-contiguously and cast to the buffer's compute dtype
+  (``float32`` by default; assimilation math is f32 regardless of the
+  storage dtype, exactly like the per-leaf path).
+* ``TreeSpec`` is the offset table: per-leaf ``(offset, size, shape,
+  dtype)`` plus the original treedef.  ``offsets[i] + sizes[i] ==
+  offsets[i+1]`` — no inter-leaf padding, so the buffer is bit-identical
+  to the concatenation of the raveled leaves.
+* The buffer tail is zero-padded up to a multiple of ``BLOCK`` (the
+  Pallas grid tile, 8192 = 8·1024 elements, a multiple of the 8×128 TPU
+  vector tile).  Kernels therefore launch a single blocked grid over the
+  whole model with no per-call pad-and-reshape.  Zero padding is a fixed
+  point of every flat op (lerp, delta add, weighted reduction), so the
+  tail stays zero and never leaks into leaves.
+* ``spec.n`` is the logical element count (sum of leaf sizes);
+  ``spec.padded`` is the physical buffer length.  Compression computes k
+  from ``spec.n`` so padding never inflates the density budget.
+
+Round-trip: ``unflatten(flatten(tree)) == tree`` with dtypes preserved.
+bf16 and f32 leaves round-trip exactly (widening casts); integer leaves
+round-trip exactly for |x| < 2**24 (f32 mantissa) — parameter/optimizer
+trees in this repo satisfy that (step counters, token ids).
+
+``FlatParams`` is registered as a pytree (buffer = child, spec = static
+aux data), so it passes through ``jit``/``vmap`` and the checkpoint layer
+unchanged.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Pallas grid tile of the flat kernels (kernels/vc_asgd_update.py imports
+# this constant): multiple of the 8x128 vector tile.
+BLOCK = 8 * 1024
+
+
+@dataclass(frozen=True)
+class TreeSpec:
+    """Static description of a flattened tree: the leaf offset table."""
+
+    treedef: Any                          # jax treedef (hashable)
+    shapes: Tuple[Tuple[int, ...], ...]   # per-leaf shapes
+    dtypes: Tuple[str, ...]               # per-leaf storage dtypes (names)
+    offsets: Tuple[int, ...]              # element offset of each leaf
+    sizes: Tuple[int, ...]                # element count of each leaf
+    n: int                                # logical elements (sum of sizes)
+    padded: int                           # physical length (BLOCK multiple)
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.shapes)
+
+    def meta(self) -> dict:
+        """JSON-serializable layout (checkpoint header; no treedef)."""
+        return {"shapes": [list(s) for s in self.shapes],
+                "dtypes": list(self.dtypes),
+                "offsets": list(self.offsets),
+                "n": self.n, "padded": self.padded}
+
+
+@dataclass(frozen=True)
+class FlatParams:
+    """One contiguous 1-D parameter buffer plus its TreeSpec."""
+
+    buf: jnp.ndarray                      # [spec.padded], compute dtype
+    spec: TreeSpec
+
+    def with_buf(self, buf) -> "FlatParams":
+        return FlatParams(buf, self.spec)
+
+    def tree(self):
+        return unflatten(self)
+
+
+jax.tree_util.register_pytree_node(
+    FlatParams,
+    lambda fp: ((fp.buf,), fp.spec),
+    lambda spec, children: FlatParams(children[0], spec))
+
+
+def _padded_len(n: int, pad_to: int) -> int:
+    return max(pad_to, -(-n // pad_to) * pad_to)
+
+
+def tree_spec(tree, *, pad_to: int = BLOCK) -> TreeSpec:
+    """Layout of `tree` on the flat bus (no data movement)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot flatten an empty tree")
+    shapes = tuple(tuple(int(d) for d in jnp.shape(l)) for l in leaves)
+    dtypes = tuple(str(jnp.asarray(l).dtype) for l in leaves)
+    sizes = tuple(math.prod(s) for s in shapes)
+    offsets, off = [], 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+    return TreeSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    offsets=tuple(offsets), sizes=sizes, n=off,
+                    padded=_padded_len(off, pad_to))
+
+
+def flatten(tree, *, dtype=jnp.float32, pad_to: int = BLOCK) -> FlatParams:
+    """Pack every leaf into one contiguous buffer (tail zero-padded)."""
+    spec = tree_spec(tree, pad_to=pad_to)
+    leaves = jax.tree.leaves(tree)
+    parts = [jnp.asarray(l).reshape(-1).astype(dtype) for l in leaves]
+    pad = spec.padded - spec.n
+    if pad:
+        parts.append(jnp.zeros((pad,), dtype))
+    return FlatParams(jnp.concatenate(parts), spec)
+
+
+def unflatten(fp: FlatParams):
+    """Rebuild the tree, casting each leaf back to its recorded dtype."""
+    spec = fp.spec
+    leaves = [fp.buf[o:o + s].reshape(shape).astype(jnp.dtype(dt))
+              for o, s, shape, dt in zip(spec.offsets, spec.sizes,
+                                         spec.shapes, spec.dtypes)]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def flatten_batched(tree, *, dtype=jnp.float32, pad_to: int = BLOCK
+                    ) -> Tuple[jnp.ndarray, TreeSpec]:
+    """Flatten a tree whose every leaf carries a leading batch dim (e.g.
+    [n_islands, ...]) into a stacked [batch, padded] buffer.  The returned
+    spec describes ONE row (leaf shapes without the leading dim)."""
+    leaves = jax.tree.leaves(tree)
+    b = leaves[0].shape[0]
+    row = jax.tree.map(lambda l: l[0], tree)
+    spec = tree_spec(row, pad_to=pad_to)
+    parts = [jnp.asarray(l).reshape(b, -1).astype(dtype) for l in leaves]
+    pad = spec.padded - spec.n
+    if pad:
+        parts.append(jnp.zeros((b, pad), dtype))
+    return jnp.concatenate(parts, axis=1), spec
+
+
+def unflatten_batched(buf: jnp.ndarray, spec: TreeSpec, *, dtype=None):
+    """Inverse of flatten_batched: [batch, padded] -> tree with leading dim.
+
+    ``dtype`` overrides the recorded leaf dtypes (e.g. f32 for error-
+    feedback residuals, which must NOT be truncated to the params'
+    storage dtype between rounds)."""
+    b = buf.shape[0]
+    leaves = [buf[:, o:o + s].reshape((b,) + shape)
+              .astype(jnp.dtype(dt) if dtype is None else dtype)
+              for o, s, shape, dt in zip(spec.offsets, spec.sizes,
+                                         spec.shapes, spec.dtypes)]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def flatten_like(tree, spec: TreeSpec, *, dtype=jnp.float32) -> jnp.ndarray:
+    """Flatten `tree` onto an EXISTING layout, asserting it matches.
+    Returns just the buffer (the caller already holds the spec)."""
+    leaves = jax.tree.leaves(tree)
+    shapes = tuple(tuple(int(d) for d in jnp.shape(l)) for l in leaves)
+    if shapes != spec.shapes:
+        raise ValueError(
+            f"tree layout mismatch: {shapes} vs spec {spec.shapes}")
+    parts = [jnp.asarray(l).reshape(-1).astype(dtype) for l in leaves]
+    pad = spec.padded - spec.n
+    if pad:
+        parts.append(jnp.zeros((pad,), dtype))
+    return jnp.concatenate(parts)
+
+
+def zeros_like_flat(spec: TreeSpec, *, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.zeros((spec.padded,), dtype)
+
+
+def stack_flats(flats: Sequence[FlatParams]) -> jnp.ndarray:
+    """[n, padded] client matrix for the fused Eq. 2 reduction."""
+    if not flats:
+        raise ValueError("need at least one FlatParams")
+    spec0 = flats[0].spec
+    for f in flats[1:]:
+        if f.spec.shapes != spec0.shapes or f.spec.padded != spec0.padded:
+            raise ValueError("FlatParams layouts differ")
+    return jnp.stack([f.buf for f in flats])

@@ -28,7 +28,7 @@ import jax
 import numpy as np
 
 from repro.core.baselines import (EASGDPersistent, ResultMeta, ServerScheme,
-                                  SyncBSP)
+                                  SyncBSP, as_flat, as_tree)
 from repro.core.consistency import EventualStore, StoreStats, StrongStore
 from repro.core.preemption import (ClientModel, LatencyModel, PreemptionModel,
                                    make_fleet)
@@ -117,7 +117,11 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
     for c in fleet:
         c.spawn(0.0)
 
-    params0 = task.init_params(key)
+    # server state rides the flat bus (core/flat.py): the store versions ONE
+    # contiguous buffer (the paper's Redis value IS one blob), and every
+    # scheme's update is a single fused pass — the same code path as the
+    # pod-scale runtime.  Clients stay tree-world; as_tree() is the boundary.
+    params0 = as_flat(task.init_params(key))
     eventual = cfg.consistency == "eventual"
     store = EventualStore(params0) if eventual else StrongStore(params0)
     state = scheme.init_state(params0)
@@ -199,6 +203,7 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
             idx = shards[unit.shard]
             if isinstance(scheme, EASGDPersistent):
                 base = scheme.params_for_client(state, cid)
+            base = as_tree(base)
             trained = task.client_train(
                 base, data.x_train[idx], data.y_train[idx],
                 steps=unit.local_steps * max(1, len(idx) // task.batch),
@@ -229,7 +234,7 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
             ps_busy[ps] = t_commit
             assimilated += 1
 
-            acc = task.evaluate(store.head(), data.x_val, data.y_val)
+            acc = task.evaluate(as_tree(store.head()), data.x_val, data.y_val)
             epoch_accs.setdefault(unit.epoch, []).append(acc)
 
             rolled = gen.complete(unit)
@@ -245,7 +250,7 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
                     target_hit = True
             dispatch(cid, t_commit)
 
-    final_acc = task.evaluate(store.head(), data.x_val, data.y_val)
+    final_acc = task.evaluate(as_tree(store.head()), data.x_val, data.y_val)
     return SimResult(
         points=points, wall_time_s=t_now,
         epochs_done=len(points), final_accuracy=final_acc,

@@ -95,6 +95,90 @@ def assimilate_many(server, clients: Sequence, alpha: float):
 
 
 # ---------------------------------------------------------------------------
+# Flat-bus forms (core/flat.py): the whole model as ONE contiguous buffer.
+# These are what the runtime/simulator actually execute — the per-leaf
+# tree.map forms above remain as the reference semantics.
+# ---------------------------------------------------------------------------
+
+def vc_asgd_update_flat(server, client, alpha: float | jnp.ndarray,
+                        use_kernel: bool = False):
+    """Eq. 1 on the flat bus: one lerp over the whole model.
+
+    ``server`` is a FlatParams; ``client`` is a FlatParams or a raw buffer
+    with the same layout.  Returns a FlatParams.  With ``use_kernel=True``
+    the single blocked Pallas grid (kernels/vc_asgd_update) performs the
+    pass — ONE launch for the whole model, not one per leaf."""
+    from repro.core.flat import FlatParams
+    c = client.buf if isinstance(client, FlatParams) else client
+    if use_kernel:
+        from repro.kernels import ops as K
+        return server.with_buf(K.fused_lerp_flat(server.buf, c, alpha))
+    a = jnp.asarray(alpha, jnp.float32)
+    s32 = server.buf.astype(jnp.float32)
+    return server.with_buf(
+        (a * s32 + (1.0 - a) * c.astype(jnp.float32)).astype(server.buf.dtype))
+
+
+def vc_asgd_update_delta_flat(server, delta, alpha: float | jnp.ndarray):
+    """Delta form on the flat bus: W_s <- W_s + (1-alpha) * delta."""
+    from repro.core.flat import FlatParams
+    d = delta.buf if isinstance(delta, FlatParams) else delta
+    a = jnp.asarray(alpha, jnp.float32)
+    s32 = server.buf.astype(jnp.float32)
+    return server.with_buf(
+        (s32 + (1.0 - a) * d.astype(jnp.float32)).astype(server.buf.dtype))
+
+
+def assimilate_many_flat(server, clients, alpha: float,
+                         weights: Optional[Sequence[float]] = None,
+                         use_kernel: bool = False):
+    """Eq. 2 on the flat bus: ONE fused weighted reduction over a stacked
+    [n_clients, N] buffer instead of n sequential per-leaf lerps.
+
+    ``clients`` is a [n, padded] matrix (stack_flats) or a list of
+    FlatParams.  ``weights`` overrides the Eq. 2 weights — this is how the
+    staleness-damped variant rides the same pass (per-client effective
+    alphas collapse into per-client weights).  Accumulation order matches
+    ``assimilate_many`` exactly, so the result is bit-for-bit identical to
+    the per-leaf fold in f32."""
+    from repro.core.flat import FlatParams, stack_flats
+    if isinstance(clients, (list, tuple)):
+        if len(clients) == 0:
+            return server
+        clients = stack_flats(clients) if isinstance(clients[0], FlatParams) \
+            else jnp.stack(clients)
+    n = clients.shape[0]
+    if n == 0:
+        return server
+    w = list(weights) if weights is not None else assimilation_weights(n, alpha)
+    if len(w) != n + 1:
+        raise ValueError(f"need {n + 1} weights, got {len(w)}")
+    if use_kernel:
+        from repro.kernels import ops as K
+        return server.with_buf(K.fused_assimilate_flat(server.buf, clients, w))
+    acc = w[0] * server.buf.astype(jnp.float32)
+    for j in range(n):
+        acc = acc + w[j + 1] * clients[j].astype(jnp.float32)
+    return server.with_buf(acc.astype(server.buf.dtype))
+
+
+def staleness_weights(n: int, alpha: float, staleness, gamma: float = 0.7
+                      ) -> List[float]:
+    """Per-client Eq. 2 weights with staleness damping folded in: client j's
+    effective alpha is staleness_alpha(alpha, staleness[j]); the weights are
+    the exact fold of Eq. 1 with those alphas, so the damped variant rides
+    the same fused flat reduction."""
+    alphas = [staleness_alpha(alpha, float(s), gamma) for s in staleness]
+    cw: List[float] = []
+    for j in range(n):
+        w = 1.0 - alphas[j]
+        for a in alphas[j + 1:]:
+            w *= a
+        cw.append(w)
+    return [math.prod(alphas)] + cw
+
+
+# ---------------------------------------------------------------------------
 # alpha schedules
 # ---------------------------------------------------------------------------
 

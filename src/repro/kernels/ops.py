@@ -34,6 +34,25 @@ def fused_dc_lerp(server, client, grad, backup, alpha, lam=0.04):
                                interpret=_interpret())
 
 
+def fused_lerp_flat(server_buf, client_buf, alpha):
+    """Eq. 1 over the whole flat bus (core/flat.py) — ONE launch."""
+    return _vc.vc_asgd_lerp_flat(server_buf, client_buf, alpha,
+                                 interpret=_interpret())
+
+
+def fused_dc_lerp_flat(server_buf, client_buf, grad_buf, backup_buf, alpha,
+                       lam=0.04):
+    return _vc.vc_asgd_dc_lerp_flat(server_buf, client_buf, grad_buf,
+                                    backup_buf, alpha, lam,
+                                    interpret=_interpret())
+
+
+def fused_assimilate_flat(server_buf, clients_buf, weights):
+    """Eq. 2 over [n_clients, N] stacked flat buffers — ONE launch."""
+    return _vc.assimilate_flat(server_buf, clients_buf, weights,
+                               interpret=_interpret())
+
+
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                     q_block=256, kv_block=256):
     return _fa.flash_attention(q, k, v, causal=causal, window=window,

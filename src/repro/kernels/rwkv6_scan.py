@@ -20,19 +20,23 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, *, seq: int):
     u = u_ref[0].astype(jnp.float32)                         # [hd]
     hd = u.shape[0]
 
+    # NOTE: scalar positions must be pl.dslice(0, 1), not bare Python ints —
+    # the state-discharge rule only accepts Slice/array indices.
+    _01 = (pl.dslice(0, 1), pl.dslice(0, 1))
+
     def step(t, S):
-        r = pl.load(r_ref, (0, 0, pl.ds(t, 1), slice(None)))[0] \
+        r = pl.load(r_ref, _01 + (pl.ds(t, 1), slice(None)))[0, 0, 0] \
             .astype(jnp.float32)                             # [hd]
-        k = pl.load(k_ref, (0, 0, pl.ds(t, 1), slice(None)))[0] \
+        k = pl.load(k_ref, _01 + (pl.ds(t, 1), slice(None)))[0, 0, 0] \
             .astype(jnp.float32)
-        v = pl.load(v_ref, (0, 0, pl.ds(t, 1), slice(None)))[0] \
+        v = pl.load(v_ref, _01 + (pl.ds(t, 1), slice(None)))[0, 0, 0] \
             .astype(jnp.float32)
-        w = pl.load(w_ref, (0, 0, pl.ds(t, 1), slice(None)))[0] \
+        w = pl.load(w_ref, _01 + (pl.ds(t, 1), slice(None)))[0, 0, 0] \
             .astype(jnp.float32)                             # decay in (0,1)
         kv = k[:, None] * v[None, :]                         # [hd, hd]
         out = ((S + u[:, None] * kv) * r[:, None]).sum(axis=0)
-        pl.store(o_ref, (0, 0, pl.ds(t, 1), slice(None)),
-                 out[None, :].astype(o_ref.dtype))
+        pl.store(o_ref, _01 + (pl.ds(t, 1), slice(None)),
+                 out[None, None, None, :].astype(o_ref.dtype))
         return w[:, None] * S + kv
 
     S0 = jnp.zeros((hd, hd), jnp.float32)

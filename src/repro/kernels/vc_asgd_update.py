@@ -1,22 +1,49 @@
-"""Fused VC-ASGD server assimilation kernel (Eq. 1) — the paper's hot op.
+"""Fused VC-ASGD server assimilation kernels (Eq. 1/2) — the paper's hot op.
 
 The server update ``W_s <- a*W_s + (1-a)*W_c`` is purely memory-bound: at
 LLM scale the whole parameter set must stream through the chip once per
 assimilation.  The fusion opportunities are (a) the lerp itself, (b) the
-optional DC-ASGD delay-compensation term, and (c) the staleness-damped
-effective alpha — one HBM pass for all streams instead of several.
+optional DC-ASGD delay-compensation term, (c) the staleness-damped
+effective alpha, and (d) the whole Eq. 2 multi-client reduction — one HBM
+pass for all streams instead of several.
 
-TPU adaptation (DESIGN.md §2): parameters are flattened to 1-D and tiled
-into (1, 8192)-element VMEM blocks (multiples of the 8x128 vector tile);
-the grid walks the flat buffer.  Scalars (alpha, lam) ride in ANY memory.
+TPU adaptation (DESIGN.md §2): parameters ride the flat bus
+(core/flat.py): one contiguous 1-D buffer, zero-padded to a BLOCK
+multiple, tiled into (1, BLOCK)-element VMEM blocks (multiples of the
+8x128 vector tile); the grid walks the flat buffer.  Scalars (alpha, lam,
+Eq. 2 weights) ride in ANY memory.  The ``*_flat`` entry points take
+pre-padded buffers and launch exactly ONE ``pallas_call`` for the whole
+model; the legacy per-tensor entry points pad-and-reshape on the way in.
+
+``launch_count()`` counts ``pallas_call`` invocations (trace-time) — the
+benchmark/test evidence that the flat path is one launch per assimilation
+while the per-leaf path is one per leaf.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK = 8 * 1024            # elements per grid step; multiple of 8*128
+from repro.core.flat import BLOCK
+
+_launches = 0
+
+
+def launch_count() -> int:
+    return _launches
+
+
+def reset_launch_count() -> None:
+    global _launches
+    _launches = 0
+
+
+def _note_launch() -> None:
+    global _launches
+    _launches += 1
 
 
 def _lerp_kernel(scal_ref, s_ref, c_ref, o_ref):
@@ -39,6 +66,17 @@ def _dc_lerp_kernel(scal_ref, s_ref, c_ref, g_ref, b_ref, o_ref):
     o_ref[...] = (a * s + (1.0 - a) * c_comp).astype(o_ref.dtype)
 
 
+def _assimilate_kernel(w_ref, s_ref, c_ref, o_ref, *, n_clients: int):
+    """Eq. 2: acc = w0*s + sum_j w_{j+1}*c_j, accumulated in arrival order
+    (bit-identical to folding Eq. 1) over one [n_clients, 1, BLOCK] tile."""
+    acc = w_ref[0] * s_ref[...].astype(jnp.float32)          # [1, BLOCK]
+    for j in range(n_clients):
+        cj = pl.load(c_ref, (pl.dslice(j, 1), pl.dslice(0, 1),
+                             slice(None)))[0]                # [1, BLOCK]
+        acc = acc + w_ref[j + 1] * cj.astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
 def _blocked_call(kernel, scalars, arrays, *, interpret: bool):
     """Flatten every operand to [nb, BLOCK] (zero-padded) and run the grid."""
     x0 = arrays[0]
@@ -54,6 +92,7 @@ def _blocked_call(kernel, scalars, arrays, *, interpret: bool):
 
     flats = [prep(x) for x in arrays]
     scal = jnp.stack([jnp.asarray(s, jnp.float32).reshape(()) for s in scalars])
+    _note_launch()
     out = pl.pallas_call(
         kernel,
         grid=(nb,),
@@ -71,7 +110,7 @@ def _blocked_call(kernel, scalars, arrays, *, interpret: bool):
 
 def vc_asgd_lerp(server: jnp.ndarray, client: jnp.ndarray, alpha,
                  *, interpret: bool = True) -> jnp.ndarray:
-    """W_s <- alpha*W_s + (1-alpha)*W_c, one fused pass."""
+    """W_s <- alpha*W_s + (1-alpha)*W_c, one fused pass over one tensor."""
     return _blocked_call(_lerp_kernel, [alpha], [server, client],
                          interpret=interpret)
 
@@ -81,3 +120,65 @@ def vc_asgd_dc_lerp(server, client, grad, backup, alpha, lam=0.04,
     """Fused DC-ASGD + lerp (one HBM pass over four streams)."""
     return _blocked_call(_dc_lerp_kernel, [alpha, lam],
                          [server, client, grad, backup], interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# flat-bus entry points: pre-padded contiguous buffers, ONE launch each
+# ---------------------------------------------------------------------------
+
+def _check_flat(buf: jnp.ndarray) -> int:
+    if buf.ndim != 1 or buf.size % BLOCK:
+        raise ValueError(
+            f"flat buffer must be 1-D and a BLOCK({BLOCK}) multiple, "
+            f"got shape {buf.shape}")
+    return buf.size // BLOCK
+
+
+def vc_asgd_lerp_flat(server: jnp.ndarray, client: jnp.ndarray, alpha,
+                      *, interpret: bool = True) -> jnp.ndarray:
+    """Eq. 1 over the whole flat bus in one blocked grid (no pad/reshape)."""
+    _check_flat(server)
+    return _blocked_call(_lerp_kernel, [alpha], [server, client],
+                         interpret=interpret)
+
+
+def vc_asgd_dc_lerp_flat(server, client, grad, backup, alpha, lam=0.04,
+                         *, interpret: bool = True) -> jnp.ndarray:
+    """DC-ASGD variant riding the same single-launch flat pass."""
+    _check_flat(server)
+    return _blocked_call(_dc_lerp_kernel, [alpha, lam],
+                         [server, client, grad, backup], interpret=interpret)
+
+
+def assimilate_flat(server: jnp.ndarray, clients: jnp.ndarray, weights,
+                    *, interpret: bool = True) -> jnp.ndarray:
+    """Eq. 2 as ONE fused weighted reduction: server [N] + clients [n, N]
+    -> [N] in a single ``pallas_call`` whose grid walks the flat buffer;
+    each tile reduces all n client streams in arrival order (bit-identical
+    to the per-leaf fold in f32).  ``weights`` = [w_server, w_0..w_{n-1}]
+    (assimilation_weights or the staleness-damped variant)."""
+    nb = _check_flat(server)
+    n_clients = int(clients.shape[0])
+    if clients.shape != (n_clients, server.size):
+        raise ValueError(f"clients must be [n, {server.size}], "
+                         f"got {clients.shape}")
+    if len(weights) != n_clients + 1:
+        raise ValueError(f"need {n_clients + 1} weights, got {len(weights)}")
+    w = jnp.stack([jnp.asarray(x, jnp.float32).reshape(()) for x in weights])
+    s2 = server.reshape(nb, BLOCK)
+    c3 = clients.reshape(n_clients, nb, BLOCK)
+    kern = functools.partial(_assimilate_kernel, n_clients=n_clients)
+    _note_launch()
+    out = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((n_clients, 1, BLOCK), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, BLOCK), server.dtype),
+        interpret=interpret,
+    )(w, s2, c3)
+    return out.reshape(-1)

@@ -60,8 +60,8 @@ def main(argv=None):
     n_dev = len(jax.devices())
     assert n_pods * dm[0] * dm[1] <= n_dev, \
         f"need {n_pods * dm[0] * dm[1]} devices, have {n_dev}"
-    mesh = jax.make_mesh((n_pods, dm[0], dm[1]), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((n_pods, dm[0], dm[1]), ("pod", "data", "model"))
     plan = MeshPlan.build(cfg, mesh, data_axis="data")
     optimizer = Adam(lr=args.lr)
     alpha_fn = var_alpha() if args.alpha == "var" else \

@@ -15,7 +15,9 @@ MeshPlan).  One **VC round** =
      paper's clients always start a subtask from the server snapshot).
 
 The optional compressed path ships int8 top-k deltas with error feedback
-(core/compression.py) instead of raw weights across the DCN.
+(core/compression.py) instead of raw weights across the DCN — globally
+sparsified over the whole model on the FlatParams bus (core/flat.py), one
+compression + one accumulate per island.
 """
 from __future__ import annotations
 
@@ -113,9 +115,54 @@ def island_shardings(model: Model, plan: MeshPlan, n_pods: int,
 
 def compressed_assimilate(server, islands, alpha, survivors, *,
                           density: float = 0.05, residuals=None):
-    """Delta-form Eq. 2 with top-k + int8 compression and error feedback —
-    what actually crosses the DCN between pods.  Returns (server', residuals').
-    Pure-jnp reference; the fused kernels live in kernels/."""
+    """Delta-form Eq. 2 with GLOBAL (whole-model) top-k + int8 compression
+    and error feedback — what actually crosses the DCN between pods.
+
+    Flat-bus path (core/flat.py): the server and every island are flattened
+    once, each island ships ONE globally-sparsified delta buffer (k chosen
+    over the whole model, not per leaf — strictly no worse mass retention
+    at equal density), and the weighted Eq. 2 reduction happens on the
+    contiguous buffer.  One compression + one accumulate per island instead
+    of the per-leaf × per-island loop.  Returns (server', residuals') with
+    the same tree-in/tree-out contract as before (residuals island-major).
+    """
+    from repro.core import compression as C
+    from repro.core import flat as F
+    n = islands_leading_dim(islands)
+    w, w_s = island_weights(n, alpha, survivors)
+
+    fp = F.flatten(server)
+    isl_buf, spec = F.flatten_batched(islands)
+    if spec.shapes != fp.spec.shapes:
+        raise ValueError("island layout does not match server layout")
+    res_buf = (F.flatten_batched(residuals)[0] if residuals is not None
+               else None)
+
+    s32 = fp.buf
+    out = w_s * s32
+    new_res = []
+    for j in range(n):
+        delta = isl_buf[j] - s32
+        payload, r = C.compress_flat(
+            delta, density=density, logical_n=spec.n,
+            residual=None if res_buf is None else res_buf[j])
+        deq = C.decompress_flat(payload)
+        out = out + w[j] * (s32 + deq)
+        new_res.append(r)
+    server_out = F.unflatten(fp.with_buf(out))
+    # residuals carry in f32 (like the per-leaf reference): truncating the
+    # error-feedback carry to the params' storage dtype would lose it
+    residuals_out = F.unflatten_batched(jnp.stack(new_res), spec,
+                                        dtype=jnp.float32)
+    return server_out, residuals_out
+
+
+def compressed_assimilate_per_leaf(server, islands, alpha, survivors, *,
+                                   density: float = 0.05, residuals=None):
+    """Pre-flat reference: per-leaf top-k in a per-leaf × per-island Python
+    loop.  Kept as the numerical/perf baseline for the flat path (see
+    benchmarks/kernel_bench.py::bench_flat_assimilate); compresses worse
+    than the global top-k at equal density."""
     from repro.core import compression as C
     n = islands_leading_dim(islands)
     w, w_s = island_weights(n, alpha, survivors)

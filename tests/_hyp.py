@@ -1,0 +1,38 @@
+"""Hypothesis import guard (ISSUE 1 satellite): the property tests skip
+cleanly where `hypothesis` is absent, while the deterministic tests in the
+same files keep running — a fallback instead of a module-level
+``pytest.importorskip`` (which would skip the whole file).
+
+Usage in test modules:
+
+    from _hyp import given, settings, st
+
+With hypothesis installed this is a passthrough.  Without it, ``@given``
+replaces the test with a skip, and ``st.*`` return inert placeholders so
+module-level strategy expressions still evaluate.
+"""
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (property test)")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _InertStrategies:
+        """st.floats(...), st.integers(...), ... evaluate to None."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _InertStrategies()

@@ -6,6 +6,8 @@ from pathlib import Path
 # — smoke tests and benches must see 1 device (multi-device tests spawn
 # subprocesses).
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+# tests/ itself, for the _hyp hypothesis-fallback helper
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 import jax  # noqa: E402
 

@@ -3,7 +3,7 @@ round-trips bound quantization error; ratios are as advertised."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import compression as C
 

@@ -1,0 +1,264 @@
+"""FlatParams (core/flat.py) — the contiguous parameter bus: round-trip
+across mixed dtypes, flat Eq. 1/Eq. 2 vs the per-leaf tree.map forms
+(bit-for-bit in f32 under matching compilation), single-launch fused
+assimilation, global-vs-per-leaf compression quality, and flat
+checkpointing with dtypes preserved."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, load_flat_checkpoint,
+                              save_flat_checkpoint)
+from repro.core import compression as C
+from repro.core import flat as F
+from repro.core import vc_asgd as V
+from repro.kernels import vc_asgd_update as VK
+
+
+def mixed_tree(key):
+    ks = jax.random.split(key, 4)
+    return {"w": jax.random.normal(ks[0], (33, 17), jnp.float32),
+            "b": (jax.random.normal(ks[1], (9,), jnp.bfloat16),
+                  jnp.arange(-3, 11, dtype=jnp.int32)),
+            "deep": {"m": jax.random.normal(ks[2], (2, 3, 4), jnp.float32),
+                     "v": jax.random.normal(ks[3], (130,), jnp.bfloat16)}}
+
+
+def f32_tree(key, n_extra=0):
+    ks = jax.random.split(key, 3)
+    return {"a": jax.random.normal(ks[0], (130, 7)) + n_extra,
+            "b": {"c": jax.random.normal(ks[1], (55,)),
+                  "d": jax.random.normal(ks[2], (3, 3))}}
+
+
+# ---------------------------------------------------------------------------
+# layout + round trip
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_mixed_dtypes():
+    tree = mixed_tree(jax.random.PRNGKey(0))
+    fp = F.flatten(tree)
+    back = F.unflatten(fp)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_layout_contract():
+    """Leaves pack back-to-back; tail padded to a BLOCK multiple of zeros."""
+    tree = mixed_tree(jax.random.PRNGKey(1))
+    fp = F.flatten(tree)
+    spec = fp.spec
+    assert spec.padded % F.BLOCK == 0 and spec.padded >= spec.n
+    for i in range(spec.num_leaves - 1):
+        assert spec.offsets[i] + spec.sizes[i] == spec.offsets[i + 1]
+    assert spec.offsets[0] == 0
+    assert spec.offsets[-1] + spec.sizes[-1] == spec.n
+    np.testing.assert_array_equal(np.asarray(fp.buf[spec.n:]), 0.0)
+    # the buffer IS the concatenation of the raveled leaves
+    cat = np.concatenate([np.asarray(l, np.float32).ravel()
+                          for l in jax.tree.leaves(tree)])
+    np.testing.assert_array_equal(np.asarray(fp.buf[:spec.n]), cat)
+
+
+def test_flatten_batched_roundtrip():
+    tree = f32_tree(jax.random.PRNGKey(2))
+    islands = jax.tree.map(lambda x: jnp.stack([x, x + 1.0, x * 2.0]), tree)
+    buf, spec = F.flatten_batched(islands)
+    assert buf.shape == (3, spec.padded)
+    back = F.unflatten_batched(buf, spec)
+    for a, b in zip(jax.tree.leaves(islands), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flatten_like_rejects_mismatched_layout():
+    fp = F.flatten(f32_tree(jax.random.PRNGKey(3)))
+    with pytest.raises(ValueError):
+        F.flatten_like({"a": jnp.zeros((2, 2))}, fp.spec)
+
+
+def test_flatparams_is_a_pytree():
+    fp = F.flatten(f32_tree(jax.random.PRNGKey(4)))
+    doubled = jax.jit(lambda p: jax.tree.map(lambda x: 2 * x, p))(fp)
+    assert isinstance(doubled, F.FlatParams)
+    np.testing.assert_allclose(np.asarray(doubled.buf),
+                               2 * np.asarray(fp.buf))
+
+
+# ---------------------------------------------------------------------------
+# flat Eq. 1 / Eq. 2 vs per-leaf forms
+# ---------------------------------------------------------------------------
+
+def test_flat_eq1_matches_treemap():
+    key = jax.random.PRNGKey(5)
+    server = mixed_tree(key)
+    client = mixed_tree(jax.random.fold_in(key, 1))
+    ref = V.vc_asgd_update(server, client, 0.9)
+    fp = F.flatten(server)
+    out = F.unflatten(V.vc_asgd_update_flat(fp, F.flatten_like(client, fp.spec),
+                                            0.9))
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_flat_eq1_delta_matches_treemap():
+    key = jax.random.PRNGKey(6)
+    server = f32_tree(key)
+    delta = f32_tree(jax.random.fold_in(key, 1))
+    ref = V.vc_asgd_update_delta(server, delta, 0.8)
+    fp = F.flatten(server)
+    out = F.unflatten(V.vc_asgd_update_delta_flat(
+        fp, F.flatten_like(delta, fp.spec), 0.8))
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_eq2_bit_exact_vs_per_leaf_fold():
+    """assimilate_many_flat (jnp) == per-leaf assimilate_many bit-for-bit
+    in f32 — identical accumulation order, same elementwise ops."""
+    key = jax.random.PRNGKey(7)
+    server = f32_tree(key)
+    clients = [f32_tree(jax.random.fold_in(key, i + 1)) for i in range(4)]
+    ref = V.assimilate_many(server, clients, 0.83)
+    fp = F.flatten(server)
+    cbuf = jnp.stack([F.flatten_like(c, fp.spec) for c in clients])
+    out = F.unflatten(V.assimilate_many_flat(fp, cbuf, 0.83))
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_eq2_kernel_single_launch_and_bit_exact():
+    """The fused Pallas path: ONE launch for the whole multi-leaf model,
+    bit-for-bit equal to the per-leaf Eq. 2 fold compiled the same way
+    (both jitted — XLA contracts mul+add to FMA under jit)."""
+    key = jax.random.PRNGKey(8)
+    server = f32_tree(key)
+    clients = [f32_tree(jax.random.fold_in(key, i + 1)) for i in range(3)]
+    fp = F.flatten(server)
+    cbuf = jnp.stack([F.flatten_like(c, fp.spec) for c in clients])
+
+    VK.reset_launch_count()
+    out_k = V.assimilate_many_flat(fp, cbuf, 0.77, use_kernel=True)
+    assert VK.launch_count() == 1          # whole model, one pallas_call
+
+    # per-leaf path through the kernel: one launch per leaf
+    VK.reset_launch_count()
+    V.vc_asgd_update(server, clients[0], 0.77, use_kernel=True)
+    assert VK.launch_count() == len(jax.tree.leaves(server))
+
+    ref = jax.jit(lambda s, cs: V.assimilate_many(s, cs, 0.77))(server, clients)
+    out_tree = F.unflatten(out_k)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out_tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_staleness_weights_match_damped_fold():
+    key = jax.random.PRNGKey(9)
+    server = f32_tree(key)
+    clients = [f32_tree(jax.random.fold_in(key, i + 1)) for i in range(3)]
+    staleness = [0, 2, 1]
+    folded = server
+    for c, s in zip(clients, staleness):
+        folded = V.vc_asgd_update(folded, c, V.staleness_alpha(0.9, s))
+    w = V.staleness_weights(3, 0.9, staleness)
+    assert abs(sum(w) - 1.0) < 1e-9
+    fp = F.flatten(server)
+    cbuf = jnp.stack([F.flatten_like(c, fp.spec) for c in clients])
+    out = F.unflatten(V.assimilate_many_flat(fp, cbuf, 0.9, weights=w))
+    for a, b in zip(jax.tree.leaves(folded), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# global compression on the flat bus
+# ---------------------------------------------------------------------------
+
+def test_global_topk_ratio_at_least_per_leaf():
+    """Global top-k at density d retains >= the |mass| of per-leaf top-k at
+    the same density (per-leaf selection is feasible for the global
+    problem), so its residual is no larger."""
+    key = jax.random.PRNGKey(10)
+    # heterogeneous leaf scales: per-leaf top-k wastes budget on small leaves
+    tree = {"big": 5.0 * jax.random.normal(key, (300,)),
+            "small": 0.01 * jax.random.normal(jax.random.fold_in(key, 1),
+                                              (300,))}
+    density = 0.1
+    # per-leaf reference
+    per_leaf_res = 0.0
+    for leaf in jax.tree.leaves(tree):
+        _, res = C.compress_delta(leaf, density=density)
+        per_leaf_res += float(jnp.sum(jnp.square(res)))
+    fp = F.flatten(tree)
+    _, res_flat = C.compress_flat(fp.buf, density=density, logical_n=fp.spec.n)
+    global_res = float(jnp.sum(jnp.square(res_flat)))
+    assert global_res <= per_leaf_res + 1e-6
+
+
+def test_compress_flat_error_feedback_conserves():
+    """delta - residual == dequant(payload), exactly as the per-leaf form."""
+    key = jax.random.PRNGKey(11)
+    fp = F.flatten(f32_tree(key))
+    delta = jax.random.normal(jax.random.fold_in(key, 1), fp.buf.shape)
+    delta = delta.at[fp.spec.n:].set(0.0)          # padding carries nothing
+    payload, res = C.compress_flat(delta, density=0.2, logical_n=fp.spec.n)
+    deq = C.decompress_flat(payload)
+    np.testing.assert_allclose(np.asarray(delta - res), np.asarray(deq),
+                               rtol=1e-5, atol=1e-6)
+    # residual carry is applied before selection on the next round
+    payload2, res2 = C.compress_flat(jnp.zeros_like(delta), density=0.2,
+                                     logical_n=fp.spec.n, residual=res)
+    np.testing.assert_allclose(np.asarray(res - res2),
+                               np.asarray(C.decompress_flat(payload2)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_compress_tree_global_roundtrip_shape():
+    tree = f32_tree(jax.random.PRNGKey(12))
+    payload, res, spec = C.compress_tree_global(tree, density=0.3)
+    dense = C.decompress_flat(payload)
+    assert dense.shape == (spec.padded,)
+    back = F.unflatten(F.FlatParams(dense, spec))
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+
+
+# ---------------------------------------------------------------------------
+# flat checkpointing
+# ---------------------------------------------------------------------------
+
+def test_flat_checkpoint_roundtrip(tmp_path):
+    tree = mixed_tree(jax.random.PRNGKey(13))
+    fp = F.flatten(tree)
+    save_flat_checkpoint(tmp_path / "f.msgpack", fp, {"round": 3})
+    fp2, extra = load_flat_checkpoint(tmp_path / "f.msgpack", fp)
+    assert extra["round"] == 3
+    assert fp2.buf.dtype == fp.buf.dtype
+    np.testing.assert_array_equal(np.asarray(fp.buf), np.asarray(fp2.buf))
+    # dtypes preserved through the full unflatten
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(F.unflatten(fp2))):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_flat_checkpoint_layout_mismatch_raises(tmp_path):
+    fp = F.flatten(f32_tree(jax.random.PRNGKey(14)))
+    save_flat_checkpoint(tmp_path / "f.msgpack", fp)
+    other = F.flatten({"z": jnp.zeros((7,))})
+    with pytest.raises(ValueError):
+        load_flat_checkpoint(tmp_path / "f.msgpack", other)
+
+
+def test_manager_routes_flatparams(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    fp = F.flatten(mixed_tree(jax.random.PRNGKey(15)))
+    mgr.save(1, fp, {"round": 1})
+    restored, extra, step = mgr.restore_or_init(fp, lambda: None)
+    assert step == 1 and extra["round"] == 1
+    assert isinstance(restored, F.FlatParams)
+    np.testing.assert_array_equal(np.asarray(restored.buf), np.asarray(fp.buf))

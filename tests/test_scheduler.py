@@ -3,7 +3,7 @@ ever lost, timeouts requeue, epochs complete, sticky affinity holds."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.scheduler import Scheduler
 from repro.core.work_generator import WorkGenerator, auto_split, split_dataset
