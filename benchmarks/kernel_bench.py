@@ -181,3 +181,91 @@ def bench_flat_assimilate(*, n_clients: int = 4, write_json: bool = True
         (results / "BENCH_flat_assimilate.json").write_text(
             json.dumps(out, indent=1))
     return out
+
+
+def bench_flat_adam(*, write_json: bool = True) -> Dict[str, Dict]:
+    """flat_vs_treemap for the OPTIMIZER: Adam with m/v as lanes of the
+    FlatParams bus (Adam.update_flat) against the per-leaf tree.map path
+    (Adam.update) it mirrors bit-for-bit.
+
+    (a) wall-clock of one whole-model Adam step, both XLA-jitted (on this
+        CPU container the Pallas path runs interpret-mode, so the jnp flat
+        form is the apples-to-apples timing);
+    (b) launch-count evidence that the fused Pallas path
+        (kernels/vc_asgd_update.py::adam_update_flat) performs the whole
+        multi-leaf update in a SINGLE ``pallas_call``;
+    (c) one-pass checkpoint size/shape of the (params | m | v) record
+        (checkpoint/store.py::save_train_checkpoint).
+
+    Writes results/BENCH_flat_adam.json — the perf trajectory of the flat
+    optimizer path is recorded from PR 2 onward.
+    """
+    import tempfile
+
+    from repro.checkpoint import save_train_checkpoint
+    from repro.core import flat as F
+    from repro.kernels import vc_asgd_update as VK
+    from repro.optim import Adam
+
+    key = jax.random.PRNGKey(0)
+    # same ~2.1M-param / 24-leaf model as bench_flat_assimilate
+    sizes = [(256, 256), (1024, 64), (64,), (512, 512), (128, 1024), (1024,)]
+    tree = {}
+    for rep in range(4):
+        for i, shp in enumerate(sizes):
+            k2 = jax.random.fold_in(key, rep * 16 + i)
+            tree[f"layer{rep}/p{i}"] = jax.random.normal(k2, shp, jnp.float32)
+    n_leaves = len(jax.tree.leaves(tree))
+    n_params = sum(x.size for x in jax.tree.leaves(tree))
+    grads = jax.tree.map(
+        lambda x: 0.01 * jax.random.normal(jax.random.fold_in(key, 999),
+                                           x.shape), tree)
+
+    opt = Adam(lr=1e-3, weight_decay=0.01)
+    state_t = opt.init(tree)
+    fp = F.flatten(tree)
+    fos = opt.init_flat(fp)
+    gbuf = F.flatten_like(grads, fp.spec)
+
+    # (a) one Adam step: per-leaf tree walk vs one flat pass (both jitted)
+    us_tree = _time(lambda g, s, p: opt.update(g, s, p)[0],
+                    grads, state_t, tree, iters=20)
+    us_flat = _time(lambda g, s, p: opt.update_flat(g, s, p)[0],
+                    gbuf, fos, fp, iters=20)
+
+    # (b) launch counts through the fused Pallas path (trace-time)
+    VK.reset_launch_count()
+    opt.update_flat(gbuf, fos, fp, use_kernel=True)
+    launches_flat = VK.launch_count()
+
+    # (c) the one-pass train record: (params | m | v) as one contiguous blob
+    with tempfile.TemporaryDirectory() as d:
+        path = Path(d) / "train.msgpack"
+        t0 = time.perf_counter()
+        save_train_checkpoint(path, fp, fos)
+        us_ckpt = (time.perf_counter() - t0) * 1e6
+        ckpt_bytes = path.stat().st_size
+
+    out = {
+        # no commas in derived: run.py prints name,us_per_call,derived CSV
+        "model": {"us_per_call": 0.0,
+                  "derived": f"{n_leaves} leaves / {int(n_params)} params / "
+                             f"padded={fp.spec.padded}"},
+        "adam_treemap": {"us_per_call": round(us_tree, 1),
+                         "derived": f"{n_leaves} leaf walks x3 trees"},
+        "adam_flat": {"us_per_call": round(us_flat, 1),
+                      "derived":
+                      f"speedup={us_tree / max(us_flat, 1e-9):.2f}x"},
+        "pallas_launches": {"us_per_call": 0.0,
+                            "derived": f"flat={launches_flat} "
+                                       f"(vs {n_leaves} per-leaf)"},
+        "train_ckpt_one_pass": {"us_per_call": round(us_ckpt, 1),
+                                "derived": f"{ckpt_bytes} bytes single "
+                                           f"record (params|m|v)"},
+    }
+    if write_json:
+        results = Path(__file__).resolve().parents[1] / "results"
+        results.mkdir(exist_ok=True)
+        (results / "BENCH_flat_adam.json").write_text(
+            json.dumps(out, indent=1))
+    return out

@@ -20,13 +20,15 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale horizons (40 epochs, 50 shards)")
     ap.add_argument("--only", default="",
-                    help="comma list: fig2,fig3,fig4,fig6,consistency,cost,kernels")
+                    help="comma list: fig2,fig3,fig4,fig6,consistency,cost,"
+                         "kernels,flat,flat_adam")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import paper_figs as F
-    from benchmarks.kernel_bench import bench_flat_assimilate, bench_kernels
+    from benchmarks.kernel_bench import (bench_flat_adam,
+                                         bench_flat_assimilate, bench_kernels)
 
     benches = {
         "fig2": lambda: F.fig2_distributed(quick),
@@ -37,6 +39,7 @@ def main(argv=None) -> None:
         "cost": lambda: F.cost_bench(quick),
         "kernels": bench_kernels,
         "flat": bench_flat_assimilate,
+        "flat_adam": bench_flat_adam,
     }
 
     print("name,us_per_call,derived")
@@ -50,7 +53,7 @@ def main(argv=None) -> None:
         out = RESULTS / f"bench_{name}.json"
         out.write_text(json.dumps(res, indent=1, default=str))
         claims = res.pop("_claims", None) if isinstance(res, dict) else None
-        if name in ("kernels", "flat"):
+        if name in ("kernels", "flat", "flat_adam"):
             for k, v in res.items():
                 print(f"{name}.{k},{v['us_per_call']},{v['derived']}")
         else:

@@ -1,6 +1,9 @@
 from repro.checkpoint.store import (CheckpointManager, load_checkpoint,
-                                    load_flat_checkpoint, save_checkpoint,
-                                    save_flat_checkpoint)
+                                    load_flat_checkpoint,
+                                    load_train_checkpoint, save_checkpoint,
+                                    save_flat_checkpoint,
+                                    save_train_checkpoint)
 
 __all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager",
-           "save_flat_checkpoint", "load_flat_checkpoint"]
+           "save_flat_checkpoint", "load_flat_checkpoint",
+           "save_train_checkpoint", "load_train_checkpoint"]

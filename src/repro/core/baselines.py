@@ -55,34 +55,77 @@ def as_tree(params):
     return F.unflatten(params) if isinstance(params, F.FlatParams) else params
 
 
+def _payload_buf(fp: F.FlatParams, payload) -> jnp.ndarray:
+    """Boundary-only conversion: a payload still in tree form is flattened
+    exactly ONCE here; flat payloads (the simulator's hot path — it
+    flattens the trained tree once per result and every scheme then works
+    on buffers) pass through untouched."""
+    if isinstance(payload, F.FlatParams):
+        return payload.buf
+    if isinstance(payload, jnp.ndarray):
+        return payload
+    return F.flatten_like(payload, fp.spec)
+
+
+def easgd_elastic_update(center_buf: jnp.ndarray, replicas_buf: jnp.ndarray,
+                         beta: float, *, use_kernel: bool = False):
+    """One fused elastic round over the whole pod: center [N] and replicas
+    [n, N] move toward each other in a single pass.  The jnp form IS the
+    oracle (kernels/ref.py ``easgd_elastic`` — one definition, no drift);
+    ``use_kernel=True`` routes through the single-launch Pallas kernel."""
+    if use_kernel:
+        from repro.kernels import ops as K
+        return K.fused_easgd_flat(center_buf, replicas_buf, beta)
+    from repro.kernels import ref as R
+    return R.easgd_elastic(center_buf, replicas_buf, beta)
+
+
 class ServerScheme:
     """Stateless-client contract: a client downloads server params, trains
     on its shard, uploads a payload; the server assimilates payloads in
     arrival order.  Fault tolerance == dropping any subset of payloads
     leaves the server state valid.
 
-    ``state["params"]`` is a FlatParams; ``client_payload`` receives and
-    returns trees (the client side); ``assimilate`` flattens the payload
-    onto the server's layout and updates the flat buffer in one pass."""
+    ``state["params"]`` is a FlatParams; conversions happen at the BOUNDARY
+    only: the simulator unflattens once per dispatch (clients train real
+    trees) and flattens the trained tree once per result; ``payload_flat``
+    and ``assimilate`` then stay in buffer-world — a scheme performs ZERO
+    tree<->bus conversions per round (core/flat.py counts them;
+    tests/test_simulator.py pins the per-result budget)."""
 
     name = "base"
     requires_all_clients = False    # True -> not fault tolerant (BSP/EASGD-p)
+    has_local_replicas = False      # True -> params_for_client needs the cid
 
     def init_state(self, params0) -> Dict[str, Any]:
         return {"params": as_flat(params0), "version": 0}
 
-    def params_for_client(self, state):
+    def params_for_client(self, state, cid: Optional[int] = None):
         return state["params"]
 
     def client_payload(self, trained, start):
-        """What travels client -> server. Default: full weights (the paper)."""
+        """Tree-world legacy form of ``payload_flat`` (kept for direct
+        scheme use outside the simulator). Default: full weights."""
         return trained
+
+    def payload_flat(self, trained_buf: jnp.ndarray, start: F.FlatParams):
+        """What travels client -> server, on the bus: ``trained_buf`` is
+        the trained tree flattened once at the boundary, ``start`` the
+        flat params the client trained from.  Default: full weights."""
+        return trained_buf
 
     def assimilate(self, state, payload, meta: ResultMeta) -> Dict[str, Any]:
         raise NotImplementedError
 
     def on_epoch(self, state, epoch: int) -> None:
         pass
+
+    def drop_client(self, cid: int) -> None:
+        """Preemption hook: schemes with client-local state lose it here."""
+
+    def note_handout(self, cid: int, params) -> None:
+        """Hook: the server handed ``params`` to client ``cid`` (DC-ASGD
+        keeps them as the delay-compensation backup)."""
 
 
 class VCASGD(ServerScheme):
@@ -97,7 +140,7 @@ class VCASGD(ServerScheme):
         if self.staleness_gamma is not None:
             a = V.staleness_alpha(a, meta.staleness, self.staleness_gamma)
         fp = as_flat(state["params"])
-        c_buf = F.flatten_like(payload, fp.spec)
+        c_buf = _payload_buf(fp, payload)
         state["params"] = V.vc_asgd_update_flat(fp, c_buf, a)
         state["version"] += 1
         return state
@@ -114,9 +157,12 @@ class Downpour(ServerScheme):
     def client_payload(self, trained, start):
         return jax.tree.map(lambda t, s: t - s, trained, start)
 
+    def payload_flat(self, trained_buf, start: F.FlatParams):
+        return trained_buf - start.buf
+
     def assimilate(self, state, payload, meta: ResultMeta):
         fp = as_flat(state["params"])
-        d_buf = F.flatten_like(payload, fp.spec)
+        d_buf = _payload_buf(fp, payload)
         state["params"] = fp.with_buf(fp.buf + self.server_lr * d_buf)
         state["version"] += 1
         return state
@@ -132,9 +178,6 @@ class DCASGD(Downpour):
         self.name = "dc-asgd"
         self._backups: Dict[int, F.FlatParams] = {}
 
-    def params_for_client(self, state):
-        return state["params"]
-
     def note_handout(self, cid: int, params):
         self._backups[cid] = as_flat(params)
 
@@ -142,7 +185,7 @@ class DCASGD(Downpour):
         fp = as_flat(state["params"])
         backup = as_flat(self._backups.get(meta.cid, fp))
         # payload is a delta ~ -lr * accumulated grad; compensate elementwise
-        d = F.flatten_like(payload, fp.spec)
+        d = _payload_buf(fp, payload)
         comp = d + self.lam * d * d * jnp.sign(d) * (fp.buf - backup.buf)
         state["params"] = fp.with_buf(fp.buf + self.server_lr * comp)
         state["version"] += 1
@@ -157,6 +200,7 @@ class EASGDPersistent(ServerScheme):
     assumes updates from all clients."""
 
     requires_all_clients = True
+    has_local_replicas = True
 
     def __init__(self, beta: float = 0.001):
         self.beta = beta
@@ -170,7 +214,7 @@ class EASGDPersistent(ServerScheme):
 
     def assimilate(self, state, payload, meta: ResultMeta):
         center = as_flat(state["params"])
-        x_buf = F.flatten_like(payload, center.spec)
+        x_buf = _payload_buf(center, payload)
         diff = x_buf - center.buf
         state["params"] = center.with_buf(center.buf + self.beta * diff)
         self.replicas[meta.cid] = center.with_buf(x_buf - self.beta * diff)
@@ -179,6 +223,88 @@ class EASGDPersistent(ServerScheme):
 
     def drop_client(self, cid: int) -> None:
         self.replicas.pop(cid, None)       # preemption loses the replica
+
+
+class EASGDFlatPod(ServerScheme):
+    """EASGD at pod scale on the flat bus: the elastic center is ONE
+    contiguous buffer and all replicas live in one [n_replicas, N] matrix;
+    when every replica of the round has reported, a single fused elastic
+    update (``easgd_elastic_update`` / the single-launch Pallas kernel)
+    moves center and all replicas at once — no per-client dict, no leaf
+    walk.  Like every elastic scheme the round is synchronous, so it is
+    NOT fault tolerant: a preempted client's replica resets to the center
+    and the round barrier re-waits for it.
+
+    One client per replica slot: the fleet size must equal ``n_replicas``
+    (slot = cid % n_replicas, and a slot claimed by one cid rejects
+    payloads from another — silently overwriting a colliding client's
+    round, or waiting forever on a slot no client maps to, would corrupt
+    the barrier)."""
+
+    requires_all_clients = True
+    has_local_replicas = True
+
+    def __init__(self, n_replicas: int, beta: float = 0.05,
+                 use_kernel: bool = False):
+        self.n_replicas = n_replicas
+        self.beta = beta
+        self.use_kernel = use_kernel
+        self.name = "easgd-flat-pod"
+        self.replicas: Optional[jnp.ndarray] = None     # [n_replicas, padded]
+        # rows arriving mid-round buffer here (one dict entry per slot, like
+        # SyncBSP._buf) and stack ONCE at the barrier — updating the
+        # [n_replicas, N] matrix per payload would copy it n times per round
+        self._pending: Dict[int, jnp.ndarray] = {}
+        self._lost: set = set()            # preempted slots restart from center
+        self._slot_owner: Dict[int, int] = {}
+
+    def _slot(self, cid: int) -> int:
+        slot = cid % self.n_replicas
+        owner = self._slot_owner.setdefault(slot, cid)
+        if owner != cid:
+            raise ValueError(
+                f"EASGDFlatPod needs one client per replica slot "
+                f"(n_replicas={self.n_replicas}): cid {cid} collides with "
+                f"cid {owner} on slot {slot}")
+        return slot
+
+    def init_state(self, params0) -> Dict[str, Any]:
+        state = super().init_state(params0)
+        buf = state["params"].buf
+        self.replicas = jnp.tile(buf[None, :], (self.n_replicas, 1))
+        self._pending.clear()
+        self._lost.clear()
+        self._slot_owner.clear()
+        return state
+
+    def params_for_client(self, state, cid: Optional[int] = None):
+        fp = state["params"]
+        if cid is None or self.replicas is None \
+                or self._slot(cid) in self._lost:
+            return fp
+        return fp.with_buf(self.replicas[self._slot(cid)])
+
+    def assimilate(self, state, payload, meta: ResultMeta):
+        fp = as_flat(state["params"])
+        slot = self._slot(meta.cid)
+        self._pending[slot] = _payload_buf(fp, payload)
+        self._lost.discard(slot)
+        if len(self._pending) == self.n_replicas:
+            stacked = jnp.stack([self._pending[s]
+                                 for s in range(self.n_replicas)])
+            center, self.replicas = easgd_elastic_update(
+                fp.buf, stacked, self.beta, use_kernel=self.use_kernel)
+            state["params"] = fp.with_buf(center)
+            state["version"] += 1
+            self._pending.clear()
+        return state
+
+    def drop_client(self, cid: int) -> None:
+        if self.replicas is None:
+            return
+        slot = self._slot(cid)
+        self._pending.pop(slot, None)      # the barrier re-waits for it
+        self._lost.add(slot)
 
 
 class SyncBSP(ServerScheme):
@@ -196,7 +322,7 @@ class SyncBSP(ServerScheme):
 
     def assimilate(self, state, payload, meta: ResultMeta):
         fp = as_flat(state["params"])
-        self._buf[meta.shard] = F.flatten_like(payload, fp.spec)
+        self._buf[meta.shard] = _payload_buf(fp, payload)
         if len(self._buf) == self.n_shards:
             stacked = jnp.stack(list(self._buf.values()))
             state["params"] = fp.with_buf(stacked.mean(axis=0))

@@ -51,6 +51,29 @@ import jax.numpy as jnp
 # this constant): multiple of the 8x128 vector tile.
 BLOCK = 8 * 1024
 
+# tree<->bus conversion counters: flatten/unflatten are the BOUNDARY of the
+# flat world, and the hot loops (simulator assimilation, vc rounds) must
+# cross it a bounded number of times per round.  tests/test_simulator.py
+# asserts the exact per-result budget against these.
+_conversions = {"flatten": 0, "unflatten": 0}
+
+
+def conversion_counts() -> dict:
+    return dict(_conversions)
+
+
+def reset_conversion_counts() -> None:
+    _conversions["flatten"] = 0
+    _conversions["unflatten"] = 0
+
+
+def _note_flatten() -> None:
+    _conversions["flatten"] += 1
+
+
+def _note_unflatten() -> None:
+    _conversions["unflatten"] += 1
+
 
 @dataclass(frozen=True)
 class TreeSpec:
@@ -96,6 +119,53 @@ jax.tree_util.register_pytree_node(
     lambda spec, children: FlatParams(children[0], spec))
 
 
+@dataclass(frozen=True)
+class FlatOptState:
+    """Adam moments as two extra lanes of the parameter bus.
+
+    ``m``/``v`` are [spec.padded] f32 buffers with the SAME TreeSpec as the
+    parameters they track — leaf i's moments live at the same
+    ``offsets[i]:offsets[i]+sizes[i]`` slice as leaf i itself, so island
+    redistribution and checkpointing move (params, m, v) as three
+    contiguous lanes of one record instead of walking three trees.  The
+    zero tail is a fixed point of the Adam update (g=0 -> m=v=0 -> step=0),
+    so padding never leaks.  ``step`` is the shared scalar step counter.
+    """
+
+    m: jnp.ndarray                        # [spec.padded], float32
+    v: jnp.ndarray                        # [spec.padded], float32
+    step: jnp.ndarray                     # scalar int32
+    spec: TreeSpec
+
+    def leaf_m(self):
+        """m as a tree (debug/inspection boundary — not the hot path).
+        Moments stay f32 regardless of the params' storage dtypes."""
+        return _unflatten_f32(self.m, self.spec)
+
+    def leaf_v(self):
+        return _unflatten_f32(self.v, self.spec)
+
+
+jax.tree_util.register_pytree_node(
+    FlatOptState,
+    lambda s: ((s.m, s.v, s.step), s.spec),
+    lambda spec, ch: FlatOptState(ch[0], ch[1], ch[2], spec))
+
+
+def _unflatten_f32(buf: jnp.ndarray, spec: TreeSpec):
+    _note_unflatten()
+    leaves = [buf[o:o + s].reshape(shape)
+              for o, s, shape in zip(spec.offsets, spec.sizes, spec.shapes)]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def init_opt_state(spec: TreeSpec) -> FlatOptState:
+    """Fresh Adam lanes for a parameter bus with layout ``spec``."""
+    return FlatOptState(m=jnp.zeros((spec.padded,), jnp.float32),
+                        v=jnp.zeros((spec.padded,), jnp.float32),
+                        step=jnp.zeros((), jnp.int32), spec=spec)
+
+
 def _padded_len(n: int, pad_to: int) -> int:
     return max(pad_to, -(-n // pad_to) * pad_to)
 
@@ -119,6 +189,7 @@ def tree_spec(tree, *, pad_to: int = BLOCK) -> TreeSpec:
 
 def flatten(tree, *, dtype=jnp.float32, pad_to: int = BLOCK) -> FlatParams:
     """Pack every leaf into one contiguous buffer (tail zero-padded)."""
+    _note_flatten()
     spec = tree_spec(tree, pad_to=pad_to)
     leaves = jax.tree.leaves(tree)
     parts = [jnp.asarray(l).reshape(-1).astype(dtype) for l in leaves]
@@ -130,6 +201,7 @@ def flatten(tree, *, dtype=jnp.float32, pad_to: int = BLOCK) -> FlatParams:
 
 def unflatten(fp: FlatParams):
     """Rebuild the tree, casting each leaf back to its recorded dtype."""
+    _note_unflatten()
     spec = fp.spec
     leaves = [fp.buf[o:o + s].reshape(shape).astype(jnp.dtype(dt))
               for o, s, shape, dt in zip(spec.offsets, spec.sizes,
@@ -142,6 +214,7 @@ def flatten_batched(tree, *, dtype=jnp.float32, pad_to: int = BLOCK
     """Flatten a tree whose every leaf carries a leading batch dim (e.g.
     [n_islands, ...]) into a stacked [batch, padded] buffer.  The returned
     spec describes ONE row (leaf shapes without the leading dim)."""
+    _note_flatten()
     leaves = jax.tree.leaves(tree)
     b = leaves[0].shape[0]
     row = jax.tree.map(lambda l: l[0], tree)
@@ -159,6 +232,7 @@ def unflatten_batched(buf: jnp.ndarray, spec: TreeSpec, *, dtype=None):
     ``dtype`` overrides the recorded leaf dtypes (e.g. f32 for error-
     feedback residuals, which must NOT be truncated to the params'
     storage dtype between rounds)."""
+    _note_unflatten()
     b = buf.shape[0]
     leaves = [buf[:, o:o + s].reshape((b,) + shape)
               .astype(jnp.dtype(dt) if dtype is None else dtype)
@@ -170,6 +244,7 @@ def unflatten_batched(buf: jnp.ndarray, spec: TreeSpec, *, dtype=None):
 def flatten_like(tree, spec: TreeSpec, *, dtype=jnp.float32) -> jnp.ndarray:
     """Flatten `tree` onto an EXISTING layout, asserting it matches.
     Returns just the buffer (the caller already holds the spec)."""
+    _note_flatten()
     leaves = jax.tree.leaves(tree)
     shapes = tuple(tuple(int(d) for d in jnp.shape(l)) for l in leaves)
     if shapes != spec.shapes:

@@ -54,6 +54,36 @@ class PreemptionModel:
         return float(rng.exponential(self.mean_lifetime_s))
 
 
+@dataclass(frozen=True)
+class KillSchedule:
+    """Deterministic coordinator-kill injection for the fault-injection
+    harness (core/simulator.py::run_preemptible_training): the coordinator
+    'dies' immediately before executing each listed global step, losing
+    ALL in-memory state — recovery must come entirely from the last
+    one-pass train checkpoint (checkpoint/store.py).  Each kill fires
+    once; steps re-reached after a restore are not re-killed."""
+
+    kill_steps: tuple = ()
+
+    @classmethod
+    def at(cls, *steps: int) -> "KillSchedule":
+        return cls(kill_steps=tuple(sorted(set(int(s) for s in steps))))
+
+    @classmethod
+    def exponential(cls, mean_interval_steps: float, horizon: int,
+                    seed: int = 0) -> "KillSchedule":
+        """Memoryless kill times (the spot-reclaim model of
+        PreemptionModel, in steps instead of seconds)."""
+        rng = np.random.default_rng(seed)
+        steps, t = [], 0.0
+        while True:
+            t += float(rng.exponential(mean_interval_steps))
+            if t >= horizon:
+                break
+            steps.append(int(t))
+        return cls.at(*steps)
+
+
 @dataclass
 class LatencyModel:
     """WAN-ish transfer latency: base RTT + size/bandwidth + lognormal jitter

@@ -27,8 +27,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core.baselines import (EASGDPersistent, ResultMeta, ServerScheme,
-                                  SyncBSP, as_flat, as_tree)
+from repro.core import flat
+from repro.core.baselines import ResultMeta, ServerScheme, as_flat, as_tree
 from repro.core.consistency import EventualStore, StoreStats, StrongStore
 from repro.core.preemption import (ClientModel, LatencyModel, PreemptionModel,
                                    make_fleet)
@@ -174,8 +174,7 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
                 lost = sched.fail_client(c.cid, t_now)
                 if lost:
                     preemptions += 1
-                if isinstance(scheme, EASGDPersistent):
-                    scheme.drop_client(c.cid)
+                scheme.drop_client(c.cid)
                 c.spawn(t_now + cfg.restart_delay_s)
                 push(t_now + cfg.restart_delay_s, _RESPAWN, c.cid)
 
@@ -198,17 +197,24 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
 
             # ---- client-side REAL training --------------------------------
             # the client trained from the params it downloaded at dispatch
-            # time: the store snapshot as of t_dispatch
-            base, _ = store.read_at(t_dispatch)
+            # time: the store snapshot as of t_dispatch.  Conversions happen
+            # at the boundary ONLY: one unflatten per dispatch (the client
+            # trains a real tree), one flatten per result (the trained tree
+            # onto the bus); the scheme then stays in buffer-world.
+            base_fp, _ = store.read_at(t_dispatch)
             idx = shards[unit.shard]
-            if isinstance(scheme, EASGDPersistent):
-                base = scheme.params_for_client(state, cid)
-            base = as_tree(base)
+            if scheme.has_local_replicas:
+                base_fp = scheme.params_for_client(state, cid)
+            base_fp = as_flat(base_fp)
+            # DC-ASGD keeps the handed-out copy as its compensation backup
+            scheme.note_handout(cid, base_fp)
+            base = as_tree(base_fp)
             trained = task.client_train(
                 base, data.x_train[idx], data.y_train[idx],
                 steps=unit.local_steps * max(1, len(idx) // task.batch),
                 seed=cfg.seed * 1000003 + unit.uid)
-            payload_w = scheme.client_payload(trained, base)
+            trained_buf = flat.flatten_like(trained, base_fp.spec)
+            payload_w = scheme.payload_flat(trained_buf, base_fp)
 
             # ---- server-side assimilation ---------------------------------
             ps = next(ps_rr)
@@ -257,6 +263,92 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
         store_stats=store.stats, reassignments=sched.reassignments,
         preemptions=preemptions, results_assimilated=assimilated,
         cost_hours=t_now / 3600.0)
+
+
+@dataclass
+class PreemptibleTrainResult:
+    """Trajectory of run_preemptible_training: ``losses[step]`` is the loss
+    of global step `step` (recomputed steps overwrite with — by
+    construction — identical values), so two runs compare at matching
+    steps regardless of how often either was killed."""
+    losses: Dict[int, float]
+    restores: int
+    recomputed_steps: int
+    steps_done: int
+    final_params: Any                      # FlatParams
+
+    def trajectory(self) -> List[Tuple[int, float]]:
+        return sorted(self.losses.items())
+
+
+def run_preemptible_training(task, data, *, steps: int = 40, batch: int = 64,
+                             ckpt_every: int = 10, ckpt_dir,
+                             kill_schedule=None, seed: int = 0,
+                             use_kernel: bool = False, on_step=None
+                             ) -> PreemptibleTrainResult:
+    """Kill-and-restore harness on the flat bus — the correctness argument
+    for the one-pass train checkpoints (checkpoint/store.py).
+
+    A coordinator trains with params + Adam state as lanes of ONE
+    contiguous buffer (runtime/train.py::make_flat_train_step), writing a
+    single-record checkpoint every ``ckpt_every`` steps.  At every step
+    listed in ``kill_schedule`` (core/preemption.py::KillSchedule) the
+    coordinator 'dies': all in-memory state is discarded and training
+    resumes from the last checkpoint — params AND m/v/step restored
+    atomically from one record.  Batches are keyed by the GLOBAL step
+    index, so a restored run recomputes the lost steps bit-identically
+    and the loss trajectory at matching steps equals the uninterrupted
+    run's (tests/test_simulator.py asserts this)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.optim import Adam
+    from repro.runtime.train import make_flat_train_step
+
+    fp0 = as_flat(task.init_params(jax.random.PRNGKey(seed)))
+    opt = Adam(lr=task.lr)
+    fos0 = opt.init_flat(fp0)
+    step_fn = make_flat_train_step(
+        lambda p, b: task._loss(p, b[0], b[1]), opt, use_kernel=use_kernel)
+
+    def batch_for(step: int):
+        k = jax.random.fold_in(jax.random.PRNGKey(seed + 987654), step)
+        idx = np.asarray(jax.random.randint(k, (batch,), 0,
+                                            len(data.x_train)))
+        return (jax.numpy.asarray(data.x_train[idx]),
+                jax.numpy.asarray(data.y_train[idx]))
+
+    # sync saves: the 'process' may die right after a step, and the resume
+    # guarantee is only as strong as the last COMMITTED record
+    mgr = CheckpointManager(ckpt_dir, async_save=False)
+    (fp, fos), _, step = mgr.restore_train_or_init(fp0, lambda: (fp0, fos0))
+
+    kills = list(kill_schedule.kill_steps) if kill_schedule is not None else []
+    losses: Dict[int, float] = {}
+    restores = recomputed = 0
+    max_reached = step
+    while step < steps:
+        if kills and step == kills[0]:
+            kills.pop(0)
+            # preemption: in-memory state is gone; the last one-pass record
+            # is the ONLY survivor
+            (fp, fos), _, step = mgr.restore_train_or_init(
+                fp0, lambda: (fp0, fos0))
+            restores += 1
+            continue
+        fp, fos, loss = step_fn(fp, fos, batch_for(step))
+        if step < max_reached:
+            recomputed += 1
+        losses[step] = float(loss)
+        step += 1
+        max_reached = max(max_reached, step)
+        if step % ckpt_every == 0:
+            mgr.save_train(step, fp, fos, {"step": step})
+        if on_step is not None:
+            # host-side hook (pacing/telemetry in the SIGKILL harness —
+            # tests/test_checkpoint.py kills the process mid-run here)
+            on_step(step)
+    return PreemptibleTrainResult(losses=losses, restores=restores,
+                                  recomputed_steps=recomputed,
+                                  steps_done=max_reached, final_params=fp)
 
 
 def run_single_instance(task, data, *, max_epochs: int = 40,

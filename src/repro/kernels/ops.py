@@ -53,6 +53,19 @@ def fused_assimilate_flat(server_buf, clients_buf, weights):
                                interpret=_interpret())
 
 
+def fused_adam_flat(p_buf, g_buf, m_buf, v_buf, lr, b1, b2, eps,
+                    weight_decay, c1, c2):
+    """Whole-model Adam (params + m/v lanes of the flat bus) — ONE launch."""
+    return _vc.adam_update_flat(p_buf, g_buf, m_buf, v_buf, lr, b1, b2, eps,
+                                weight_decay, c1, c2, interpret=_interpret())
+
+
+def fused_easgd_flat(center_buf, replicas_buf, beta):
+    """Elastic EASGD round: center [N] + replicas [n, N] — ONE launch."""
+    return _vc.easgd_elastic_flat(center_buf, replicas_buf, beta,
+                                  interpret=_interpret())
+
+
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                     q_block=256, kv_block=256):
     return _fa.flash_attention(q, k, v, causal=causal, window=window,

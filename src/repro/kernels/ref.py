@@ -24,6 +24,33 @@ def vc_asgd_dc_lerp(server, client, grad, backup, alpha, lam=0.04):
     return (a * s + (1 - a) * c_comp).astype(server.dtype)
 
 
+def adam_update(p, g, m, v, *, lr, b1, b2, eps, c1, c2, weight_decay=0.0):
+    """One Adam step (bias-corrected; c1 = 1-b1^t, c2 = 1-b2^t precomputed
+    by the caller, like the fused kernel's scalar lane).  Returns
+    (p', m', v') with m/v in f32 and p' in p's dtype."""
+    g = g.astype(jnp.float32)
+    m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+    v = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+    step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+    if weight_decay:
+        step = step + lr * weight_decay * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+
+def easgd_elastic(center, replicas, beta):
+    """Simultaneous elastic update (Zhang et al. [17], pod-scale round):
+    center [N], replicas [n, N] ->
+      center' = center + beta * sum_j (x_j - center)
+      x_j'    = x_j    - beta * (x_j - center)
+    """
+    c = center.astype(jnp.float32)
+    x = replicas.astype(jnp.float32)
+    diff = x - c[None, :]
+    c_new = c + beta * diff.sum(axis=0)
+    x_new = x - beta * diff
+    return c_new.astype(center.dtype), x_new.astype(replicas.dtype)
+
+
 def attention(q, k, v, *, causal=True, window=None, softcap=None):
     """q: [b, h, sq, hd]; k/v: [b, kvh, skv, hd] (GQA repeat)."""
     b, h, sq, hd = q.shape

@@ -77,6 +77,41 @@ def _assimilate_kernel(w_ref, s_ref, c_ref, o_ref, *, n_clients: int):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def _adam_kernel(scal_ref, p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref,
+                 vo_ref):
+    """Fused Adam: m/v moment update + bias-corrected step + weight decay in
+    one pass over four streams; scal = [lr, b1, b2, eps, wd, c1, c2] with
+    c1 = 1-b1^t, c2 = 1-b2^t precomputed at trace time."""
+    lr, b1, b2 = scal_ref[0], scal_ref[1], scal_ref[2]
+    eps, wd = scal_ref[3], scal_ref[4]
+    c1, c2 = scal_ref[5], scal_ref[6]
+    g = g_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+    v = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * g * g
+    p = p_ref[...].astype(jnp.float32)
+    step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps) + lr * wd * p
+    po_ref[...] = (p - step).astype(po_ref.dtype)
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+def _easgd_kernel(scal_ref, c_ref, x_ref, co_ref, xo_ref, *, n_replicas: int):
+    """Simultaneous elastic update over one [n_replicas, 1, BLOCK] tile:
+    center moves by beta * sum_j (x_j - c), every replica moves toward the
+    center by beta * (x_j - c) — one pass for the whole pod."""
+    beta = scal_ref[0]
+    c = c_ref[...].astype(jnp.float32)                       # [1, BLOCK]
+    acc = jnp.zeros_like(c)
+    for j in range(n_replicas):
+        xj = pl.load(x_ref, (pl.dslice(j, 1), pl.dslice(0, 1),
+                             slice(None)))[0].astype(jnp.float32)
+        diff = xj - c
+        acc = acc + diff
+        pl.store(xo_ref, (pl.dslice(j, 1), pl.dslice(0, 1), slice(None)),
+                 (xj - beta * diff).astype(xo_ref.dtype)[None])
+    co_ref[...] = (c + beta * acc).astype(co_ref.dtype)
+
+
 def _blocked_call(kernel, scalars, arrays, *, interpret: bool):
     """Flatten every operand to [nb, BLOCK] (zero-padded) and run the grid."""
     x0 = arrays[0]
@@ -182,3 +217,61 @@ def assimilate_flat(server: jnp.ndarray, clients: jnp.ndarray, weights,
         interpret=interpret,
     )(w, s2, c3)
     return out.reshape(-1)
+
+
+def adam_update_flat(p, g, m, v, lr, b1, b2, eps, weight_decay, c1, c2,
+                     *, interpret: bool = True):
+    """Fused Adam over the whole flat bus: ONE ``pallas_call`` updates
+    params + both moment lanes (optim/optimizers.py Adam.update_flat rides
+    this).  All four operands are [padded] buffers sharing one TreeSpec;
+    returns (p', m', v') buffers."""
+    nb = _check_flat(p)
+    for name, buf in (("grad", g), ("m", m), ("v", v)):
+        if buf.shape != p.shape:
+            raise ValueError(f"{name} lane must match params lane "
+                             f"{p.shape}, got {buf.shape}")
+    scal = jnp.stack([jnp.asarray(x, jnp.float32).reshape(())
+                      for x in (lr, b1, b2, eps, weight_decay, c1, c2)])
+    blk = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
+    _note_launch()
+    po, mo, vo = pl.pallas_call(
+        _adam_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY), blk, blk, blk, blk],
+        out_specs=(blk, blk, blk),
+        out_shape=(jax.ShapeDtypeStruct((nb, BLOCK), p.dtype),
+                   jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+                   jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32)),
+        interpret=interpret,
+    )(scal, p.reshape(nb, BLOCK), g.reshape(nb, BLOCK),
+      m.reshape(nb, BLOCK), v.reshape(nb, BLOCK))
+    return po.reshape(-1), mo.reshape(-1), vo.reshape(-1)
+
+
+def easgd_elastic_flat(center, replicas, beta, *, interpret: bool = True):
+    """Fused elastic EASGD round: center [N] + replicas [n, N] -> updated
+    (center', replicas') in ONE ``pallas_call`` over the flat bus (the pod
+    baseline in core/baselines.py::EASGDFlatPod rides this)."""
+    nb = _check_flat(center)
+    n = int(replicas.shape[0])
+    if replicas.shape != (n, center.size):
+        raise ValueError(f"replicas must be [n, {center.size}], "
+                         f"got {replicas.shape}")
+    scal = jnp.asarray([beta], jnp.float32)
+    kern = functools.partial(_easgd_kernel, n_replicas=n)
+    _note_launch()
+    co, xo = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((n, 1, BLOCK), lambda i: (0, i, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((n, 1, BLOCK), lambda i: (0, i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((nb, BLOCK), center.dtype),
+                   jax.ShapeDtypeStruct((n, nb, BLOCK), replicas.dtype)),
+        interpret=interpret,
+    )(scal, center.reshape(nb, BLOCK), replicas.reshape(n, nb, BLOCK))
+    return co.reshape(-1), xo.reshape(n, -1)

@@ -61,6 +61,34 @@ def make_train_step(model: Model, plan: MeshPlan, optimizer=None,
     return train_step
 
 
+def make_flat_train_step(loss_fn, optimizer, *, use_kernel: bool = False):
+    """Train step with params AND optimizer state on the flat bus
+    (core/flat.py): (FlatParams, FlatOptState, batch) ->
+    (FlatParams', FlatOptState', loss).
+
+    The gradient arrives flat for free: ``loss_fn(tree, batch)`` is
+    differentiated w.r.t. the BUFFER (the unflatten happens inside
+    autodiff), so d(loss)/d(buf) is already the gradient lane — no
+    per-leaf gradient flattening, and the padding tail's gradient is
+    exactly zero.  ``Adam.update_flat`` then updates all three lanes in
+    one pass (a single Pallas launch with ``use_kernel=True``).  This is
+    the step the preemption-resume harness
+    (core/simulator.py::run_preemptible_training) checkpoints and
+    restores as one contiguous record."""
+    from repro.core import flat as F
+
+    def step(fp, fos, batch):
+        def flat_loss(buf):
+            return loss_fn(F.unflatten(fp.with_buf(buf)), batch)
+
+        loss, gbuf = jax.value_and_grad(flat_loss)(fp.buf)
+        new_fp, new_fos = optimizer.update_flat(gbuf, fos, fp,
+                                                use_kernel=use_kernel)
+        return new_fp, new_fos, loss
+
+    return jax.jit(step)
+
+
 def microbatch_specs(batch_specs, accum: int):
     """[b, ...] ShapeDtypeStructs -> [accum, b/accum, ...]."""
     def split(s):

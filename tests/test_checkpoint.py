@@ -1,10 +1,25 @@
 """Checkpoint durability: bit-exact round trip (incl. bf16), retention,
-kill/restore resume semantics."""
+kill/restore resume semantics, and the one-pass (params + m + v) train
+record — including a real-SIGKILL atomicity test (slow)."""
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
+import msgpack
 import numpy as np
+import pytest
 
-from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint import (CheckpointManager, load_checkpoint,
+                              load_flat_checkpoint, load_train_checkpoint,
+                              save_checkpoint, save_flat_checkpoint,
+                              save_train_checkpoint)
+from repro.core import flat as F
+from repro.optim import Adam
 
 
 def _tree(key):
@@ -58,3 +73,150 @@ def test_async_save_completes(tmp_path):
     mgr.save(1, t)
     mgr.wait()
     assert mgr.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# one-pass train checkpoints: params + m + v as three lanes of ONE record
+# ---------------------------------------------------------------------------
+
+def _train_state(key, n_steps=3):
+    tree = {"w": jax.random.normal(key, (40, 9)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (17,))}
+    opt = Adam(lr=1e-2)
+    fp = F.flatten(tree)
+    fos = opt.init_flat(fp)
+    for i in range(n_steps):
+        g = F.flatten_like(jax.tree.map(
+            lambda x: jax.random.normal(jax.random.fold_in(key, 10 + i),
+                                        x.shape), tree), fp.spec)
+        fp, fos = opt.update_flat(g, fos, fp)
+    return fp, fos
+
+
+def test_train_checkpoint_roundtrip(tmp_path):
+    fp, fos = _train_state(jax.random.PRNGKey(0))
+    save_train_checkpoint(tmp_path / "t.msgpack", fp, fos, {"round": 9})
+    fp2, fos2, extra = load_train_checkpoint(tmp_path / "t.msgpack", fp)
+    assert extra["round"] == 9
+    assert int(fos2.step) == int(fos.step) == 3
+    np.testing.assert_array_equal(np.asarray(fp.buf), np.asarray(fp2.buf))
+    np.testing.assert_array_equal(np.asarray(fos.m), np.asarray(fos2.m))
+    np.testing.assert_array_equal(np.asarray(fos.v), np.asarray(fos2.v))
+
+
+def test_train_checkpoint_is_one_contiguous_record(tmp_path):
+    """The whole (params, m, v) state is ONE msgpack binary record — a
+    header plus exactly one buffer write, no per-leaf packing."""
+    fp, fos = _train_state(jax.random.PRNGKey(1))
+    save_train_checkpoint(tmp_path / "t.msgpack", fp, fos)
+    with open(tmp_path / "t.msgpack", "rb") as f:
+        objs = list(msgpack.Unpacker(f, raw=False, max_buffer_size=2 ** 31))
+    assert len(objs) == 2                  # header + ONE record
+    header, record = objs
+    assert header["kind"] == "flat-train"
+    assert len(record) == sum(header["lane_bytes"])
+    assert len(record) == 3 * fp.spec.padded * 4      # three f32 lanes
+
+
+def test_train_checkpoint_kind_mismatch_raises(tmp_path):
+    fp, fos = _train_state(jax.random.PRNGKey(2))
+    save_train_checkpoint(tmp_path / "train.msgpack", fp, fos)
+    save_flat_checkpoint(tmp_path / "flat.msgpack", fp)
+    with pytest.raises(ValueError):
+        load_flat_checkpoint(tmp_path / "train.msgpack", fp)
+    with pytest.raises(ValueError):
+        load_train_checkpoint(tmp_path / "flat.msgpack", fp)
+
+
+def test_train_checkpoint_layout_mismatch_raises(tmp_path):
+    fp, fos = _train_state(jax.random.PRNGKey(3))
+    save_train_checkpoint(tmp_path / "t.msgpack", fp, fos)
+    other = F.flatten({"z": jnp.zeros((5,))})
+    with pytest.raises(ValueError):
+        load_train_checkpoint(tmp_path / "t.msgpack", other)
+
+
+def test_manager_train_resume(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    fp, fos = _train_state(jax.random.PRNGKey(4))
+    mgr.save_train(5, fp, fos, {"round": 5})
+    mgr2 = CheckpointManager(tmp_path)
+    (fp2, fos2), extra, step = mgr2.restore_train_or_init(
+        fp, lambda: (None, None))
+    assert step == 5 and extra["round"] == 5
+    np.testing.assert_array_equal(np.asarray(fp.buf), np.asarray(fp2.buf))
+    np.testing.assert_array_equal(np.asarray(fos.v), np.asarray(fos2.v))
+
+
+# ---------------------------------------------------------------------------
+# REAL kill: SIGKILL the training process mid-run, then restore.  Atomic
+# rename means the newest committed record always loads cleanly, and the
+# resumed trajectory equals the uninterrupted one at matching steps.
+# ---------------------------------------------------------------------------
+
+_CHILD = """
+import sys, time
+sys.path.insert(0, sys.argv[2])
+from repro.core.simulator import run_preemptible_training
+from repro.core.tasks import MLPTask, make_classification_data
+
+task = MLPTask()
+data = make_classification_data(n_train=600, n_val=100)
+print("READY", flush=True)
+run_preemptible_training(task, data, steps=10 ** 9, batch=32, ckpt_every=3,
+                         ckpt_dir=sys.argv[1], seed=5,
+                         on_step=lambda s: time.sleep(0.01))
+"""
+
+
+@pytest.mark.slow
+def test_sigkill_mid_training_restores_and_matches(tmp_path):
+    from repro.core.simulator import run_preemptible_training
+    from repro.core.tasks import MLPTask, make_classification_data
+
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    ckpt_dir = tmp_path / "ckpt"
+    proc = subprocess.Popen([sys.executable, "-c", _CHILD, str(ckpt_dir), src],
+                            stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+    try:
+        assert proc.stdout.readline().strip() == b"READY"
+        # let it train + checkpoint for a while, then pull the plug
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            time.sleep(0.5)
+            ckpts = list(ckpt_dir.glob("ckpt_*.msgpack"))
+            if len(ckpts) >= 3:
+                break
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=30)
+
+    committed = list(ckpt_dir.glob("ckpt_*.msgpack"))
+    assert committed, ("child process wrote no checkpoint before the kill "
+                       "(machine too slow? raise the deadline)")
+
+    task = MLPTask()
+    data = make_classification_data(n_train=600, n_val=100)
+    key = jax.random.PRNGKey(5)
+    like = F.flatten(task.init_params(key))
+    # the newest COMMITTED record loads cleanly (atomic rename: no torn file)
+    mgr = CheckpointManager(ckpt_dir)
+    (fp, fos), extra, step = mgr.restore_train_or_init(like, lambda: None)
+    assert step > 0 and step % 3 == 0 and extra["step"] == step
+    assert int(fos.step) == step
+
+    # resuming from the survivor reproduces the uninterrupted trajectory
+    horizon = step + 6
+    resumed = run_preemptible_training(task, data, steps=horizon, batch=32,
+                                       ckpt_every=3, ckpt_dir=ckpt_dir,
+                                       seed=5)
+    clean = run_preemptible_training(task, data, steps=horizon, batch=32,
+                                     ckpt_every=3,
+                                     ckpt_dir=tmp_path / "clean", seed=5)
+    for s in range(step, horizon):
+        assert resumed.losses[s] == clean.losses[s], s
+    np.testing.assert_array_equal(np.asarray(resumed.final_params.buf),
+                                  np.asarray(clean.final_params.buf))

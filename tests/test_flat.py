@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hyp import given, settings, st
 from repro.checkpoint import (CheckpointManager, load_flat_checkpoint,
                               save_flat_checkpoint)
 from repro.core import compression as C
@@ -85,6 +86,68 @@ def test_flatparams_is_a_pytree():
     assert isinstance(doubled, F.FlatParams)
     np.testing.assert_allclose(np.asarray(doubled.buf),
                                2 * np.asarray(fp.buf))
+
+
+# ---------------------------------------------------------------------------
+# property tier: round-trip + layout invariants over ARBITRARY trees
+# (skips cleanly without hypothesis — tests/_hyp.py)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_prop_roundtrip_and_padding_invariants(data):
+    """flatten -> unflatten is the identity (dtypes preserved) for trees of
+    arbitrary leaf shapes/dtypes, and the layout contract holds: leaves
+    back-to-back, zero tail, padded to a BLOCK multiple."""
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    n_leaves = data.draw(st.integers(1, 6), label="n_leaves")
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    for i in range(n_leaves):
+        shape = tuple(data.draw(st.lists(st.integers(1, 7), min_size=0,
+                                         max_size=3), label=f"shape{i}"))
+        dt = data.draw(st.sampled_from(["float32", "bfloat16", "int32"]),
+                       label=f"dtype{i}")
+        k = jax.random.fold_in(key, i)
+        if dt == "int32":
+            # |x| < 2**24: int leaves round-trip exactly through f32
+            leaf = jax.random.randint(k, shape, -2 ** 20, 2 ** 20,
+                                      dtype=jnp.int32)
+        else:
+            leaf = jax.random.normal(k, shape, jnp.dtype(dt))
+        tree[f"leaf{i}"] = leaf
+    fp = F.flatten(tree)
+    spec = fp.spec
+    # layout invariants
+    assert spec.padded % F.BLOCK == 0 and spec.padded >= spec.n
+    assert spec.offsets[0] == 0
+    for i in range(spec.num_leaves - 1):
+        assert spec.offsets[i] + spec.sizes[i] == spec.offsets[i + 1]
+    assert spec.offsets[-1] + spec.sizes[-1] == spec.n
+    np.testing.assert_array_equal(np.asarray(fp.buf[spec.n:]), 0.0)
+    # round trip with dtypes preserved
+    back = F.unflatten(fp)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_prop_flat_eq1_matches_treemap(data):
+    seed = data.draw(st.integers(0, 2 ** 16))
+    alpha = data.draw(st.floats(0.0, 1.0, allow_nan=False))
+    key = jax.random.PRNGKey(seed)
+    server = f32_tree(key)
+    client = f32_tree(jax.random.fold_in(key, 1))
+    ref = V.vc_asgd_update(server, client, alpha)
+    fp = F.flatten(server)
+    out = F.unflatten(V.vc_asgd_update_flat(
+        fp, F.flatten_like(client, fp.spec), alpha))
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

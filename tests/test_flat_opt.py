@@ -1,0 +1,225 @@
+"""FlatOptState (core/flat.py + optim/optimizers.py): Adam m/v as extra
+lanes of the parameter bus.  Deterministic tiers: flat-vs-tree bit-exactness
+over multi-step sequences, padding invariants, single-launch fused kernel
+parity, pytree registration, and the fused flat EASGD pod baseline.
+Property tier (hypothesis, via the _hyp fallback): bit-exactness over
+RANDOM step sequences and hyperparameters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import flat as F
+from repro.core.baselines import (EASGDFlatPod, ResultMeta,
+                                  easgd_elastic_update)
+from repro.kernels import ref as R
+from repro.kernels import vc_asgd_update as VK
+from repro.optim import Adam
+from repro.optim.optimizers import flat_opt_from_tree, flat_opt_to_tree
+
+
+def f32_tree(key):
+    ks = jax.random.split(key, 3)
+    return {"a": jax.random.normal(ks[0], (130, 7)),
+            "b": {"c": jax.random.normal(ks[1], (55,)),
+                  "d": jax.random.normal(ks[2], (3, 3))}}
+
+
+def grad_like(tree, key):
+    return jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, x.size), x.shape),
+        tree)
+
+
+def run_both_paths(opt, tree, n_steps, key):
+    """(tree-path params/state, flat-path params/state) after n_steps of
+    identical random gradients."""
+    state_t = opt.init(tree)
+    fp = F.flatten(tree)
+    state_f = opt.init_flat(fp)
+    p_t, p_f = tree, fp
+    for i in range(n_steps):
+        g = grad_like(tree, jax.random.fold_in(key, i))
+        p_t, state_t = opt.update(g, state_t, p_t)
+        gbuf = F.flatten_like(g, fp.spec)
+        p_f, state_f = opt.update_flat(gbuf, state_f, p_f)
+    return (p_t, state_t), (p_f, state_f)
+
+
+# ---------------------------------------------------------------------------
+# flat vs tree Adam: bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opt", [
+    Adam(lr=1e-3),
+    Adam(lr=3e-2, b1=0.8, b2=0.95, weight_decay=0.01),
+    Adam(lr=lambda t: 1e-3 * jnp.minimum(1.0, t / 3.0)),   # schedule
+])
+def test_flat_adam_bit_exact_vs_tree(opt):
+    tree = f32_tree(jax.random.PRNGKey(0))
+    (p_t, s_t), (p_f, s_f) = run_both_paths(opt, tree, 5,
+                                            jax.random.PRNGKey(1))
+    for a, b in zip(jax.tree.leaves(p_t), jax.tree.leaves(F.unflatten(p_f))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    back = flat_opt_to_tree(s_f)
+    assert int(back.step) == int(s_t.step)
+    for a, b in zip(jax.tree.leaves(s_t.m), jax.tree.leaves(back.m)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_t.v), jax.tree.leaves(back.v)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_adam_padding_stays_zero():
+    """The zero tail is a fixed point of the update: g=0 -> m=v=0 ->
+    step=0, even with weight decay (p=0 there too)."""
+    opt = Adam(lr=1e-2, weight_decay=0.1)
+    tree = f32_tree(jax.random.PRNGKey(2))
+    _, (p_f, s_f) = run_both_paths(opt, tree, 4, jax.random.PRNGKey(3))
+    n = p_f.spec.n
+    np.testing.assert_array_equal(np.asarray(p_f.buf[n:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(s_f.m[n:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(s_f.v[n:]), 0.0)
+
+
+def test_flat_opt_state_roundtrips_through_tree():
+    opt = Adam(lr=1e-3)
+    tree = f32_tree(jax.random.PRNGKey(4))
+    (_, s_t), (p_f, _) = run_both_paths(opt, tree, 3, jax.random.PRNGKey(5))
+    fos = flat_opt_from_tree(s_t, p_f.spec)
+    back = flat_opt_to_tree(fos)
+    for a, b in zip(jax.tree.leaves(s_t.m), jax.tree.leaves(back.m)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(fos.m[p_f.spec.n:]), 0.0)
+
+
+def test_flat_opt_state_is_a_pytree():
+    fp = F.flatten(f32_tree(jax.random.PRNGKey(6)))
+    fos = F.init_opt_state(fp.spec)
+    doubled = jax.jit(lambda s: jax.tree.map(lambda x: 2 * x + 1, s))(fos)
+    assert isinstance(doubled, F.FlatOptState)
+    assert doubled.spec is fos.spec
+    np.testing.assert_array_equal(np.asarray(doubled.m),
+                                  np.ones_like(np.asarray(fos.m)))
+
+
+# ---------------------------------------------------------------------------
+# fused kernel path: single launch, parity with the eager flat path
+# ---------------------------------------------------------------------------
+
+def test_flat_adam_kernel_single_launch_whole_model():
+    opt = Adam(lr=1e-3, weight_decay=0.01)
+    tree = f32_tree(jax.random.PRNGKey(7))
+    fp = F.flatten(tree)
+    fos = opt.init_flat(fp)
+    g = F.flatten_like(grad_like(tree, jax.random.PRNGKey(8)), fp.spec)
+
+    VK.reset_launch_count()
+    p_k, s_k = opt.update_flat(g, fos, fp, use_kernel=True)
+    assert VK.launch_count() == 1          # whole model, one pallas_call
+
+    p_e, s_e = opt.update_flat(g, fos, fp)
+    np.testing.assert_allclose(np.asarray(p_k.buf), np.asarray(p_e.buf),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(s_k.m), np.asarray(s_e.m),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(s_k.v), np.asarray(s_e.v),
+                               rtol=2e-6, atol=2e-6)
+    assert int(s_k.step) == 1
+
+
+# ---------------------------------------------------------------------------
+# flat EASGD pod baseline
+# ---------------------------------------------------------------------------
+
+def _meta(cid):
+    return ResultMeta(cid=cid, unit_uid=cid, epoch=0, shard=cid,
+                      read_version=0, server_version=0)
+
+
+def test_easgd_flat_pod_round_matches_ref():
+    """One complete round == the simultaneous elastic update on the stacked
+    replica matrix (kernels/ref.py oracle)."""
+    key = jax.random.PRNGKey(9)
+    tree = f32_tree(key)
+    scheme = EASGDFlatPod(n_replicas=3, beta=0.1)
+    state = scheme.init_state(F.flatten(tree))
+    center0 = state["params"].buf
+    payloads = [center0 + 0.1 * (j + 1) for j in range(3)]
+    for j in range(3):
+        state = scheme.assimilate(state, payloads[j], _meta(j))
+        assert state["version"] == (1 if j == 2 else 0)   # round barrier
+    c_ref, x_ref = R.easgd_elastic(center0, jnp.stack(payloads), 0.1)
+    np.testing.assert_allclose(np.asarray(state["params"].buf),
+                               np.asarray(c_ref), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(scheme.replicas),
+                               np.asarray(x_ref), rtol=1e-6, atol=1e-6)
+
+
+def test_easgd_flat_pod_drop_client_restarts_from_center():
+    tree = f32_tree(jax.random.PRNGKey(10))
+    scheme = EASGDFlatPod(n_replicas=2, beta=0.1)
+    state = scheme.init_state(F.flatten(tree))
+    state = scheme.assimilate(state, state["params"].buf + 1.0, _meta(0))
+    scheme.drop_client(0)
+    # the preempted slot's handout is the center, not its stale replica
+    np.testing.assert_array_equal(
+        np.asarray(scheme.params_for_client(state, 0).buf),
+        np.asarray(state["params"].buf))
+    assert 0 not in scheme._pending        # the barrier re-waits for slot 0
+
+
+def test_easgd_flat_pod_rejects_slot_collision():
+    tree = f32_tree(jax.random.PRNGKey(12))
+    scheme = EASGDFlatPod(n_replicas=2, beta=0.1)
+    state = scheme.init_state(F.flatten(tree))
+    state = scheme.assimilate(state, state["params"].buf + 1.0, _meta(0))
+    with pytest.raises(ValueError):        # cid 2 maps onto cid 0's slot
+        scheme.assimilate(state, state["params"].buf + 2.0, _meta(2))
+
+
+def test_easgd_elastic_update_kernel_matches_jnp():
+    key = jax.random.PRNGKey(11)
+    c = jax.random.normal(key, (2 * F.BLOCK,))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 2 * F.BLOCK))
+    c_j, x_j = easgd_elastic_update(c, x, 0.07)
+    VK.reset_launch_count()
+    c_k, x_k = easgd_elastic_update(c, x, 0.07, use_kernel=True)
+    assert VK.launch_count() == 1
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_j),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_j),
+                               rtol=2e-6, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# property tier (skips cleanly without hypothesis — tests/_hyp.py)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_prop_flat_adam_bit_exact_random_sequences(data):
+    """Flat == tree Adam bit-for-bit over RANDOM step counts, hyperparams
+    and leaf layouts (the acceptance-criterion property)."""
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    n_steps = data.draw(st.integers(1, 7), label="n_steps")
+    lr = data.draw(st.floats(1e-5, 0.1, allow_nan=False), label="lr")
+    wd = data.draw(st.sampled_from([0.0, 0.01, 0.1]), label="wd")
+    n_leaves = data.draw(st.integers(1, 4), label="n_leaves")
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    for i in range(n_leaves):
+        shape = tuple(data.draw(st.lists(st.integers(1, 9), min_size=0,
+                                         max_size=2), label=f"shape{i}"))
+        tree[f"l{i}"] = jax.random.normal(jax.random.fold_in(key, i), shape)
+    opt = Adam(lr=lr, weight_decay=wd)
+    (p_t, s_t), (p_f, s_f) = run_both_paths(opt, tree, n_steps,
+                                            jax.random.fold_in(key, 999))
+    for a, b in zip(jax.tree.leaves(p_t), jax.tree.leaves(F.unflatten(p_f))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    back = flat_opt_to_tree(s_f)
+    for a, b in zip(jax.tree.leaves(s_t.v), jax.tree.leaves(back.v)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    n = p_f.spec.n
+    np.testing.assert_array_equal(np.asarray(s_f.m[n:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(s_f.v[n:]), 0.0)

@@ -5,8 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.flat import BLOCK
 from repro.kernels import ops as K
 from repro.kernels import ref as R
+from repro.kernels import vc_asgd_update as VK
 
 RNG = jax.random.PRNGKey(42)
 
@@ -45,6 +47,72 @@ def test_fused_dc_lerp(shape, dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=4 * TOL[dtype], atol=4 * TOL[dtype])
+
+
+@pytest.mark.parametrize("nb", [1, 3])
+@pytest.mark.parametrize("wd", [0.0, 0.01])
+@pytest.mark.parametrize("jitted", [False, True])
+def test_fused_adam_flat(nb, wd, jitted):
+    """Fused whole-model Adam vs the ref.py oracle, in raw interpret mode
+    and under jit (compiled XLA graph of the interpreted kernel — the same
+    call compiles to Mosaic on TPU)."""
+    n = nb * BLOCK
+    ks = keys(4)
+    p = jax.random.normal(ks[0], (n,))
+    g = jax.random.normal(ks[1], (n,))
+    m = jax.random.normal(ks[2], (n,)) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], (n,))) * 0.01
+    lr, b1, b2, eps = 3e-3, 0.9, 0.999, 1e-8
+    c1, c2 = 1 - b1 ** 4, 1 - b2 ** 4          # as if at step t=4
+
+    def call(p, g, m, v):
+        return K.fused_adam_flat(p, g, m, v, lr, b1, b2, eps, wd, c1, c2)
+
+    fn = jax.jit(call) if jitted else call
+    VK.reset_launch_count()
+    po, mo, vo = fn(p, g, m, v)
+    assert VK.launch_count() == 1              # ONE launch, whole buffer
+    pr, mr, vr = R.adam_update(p, g, m, v, lr=lr, b1=b1, b2=b2, eps=eps,
+                               c1=c1, c2=c2, weight_decay=wd)
+    np.testing.assert_allclose(np.asarray(po), np.asarray(pr),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(mr),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(vo), np.asarray(vr),
+                               rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("n_replicas", [1, 4])
+@pytest.mark.parametrize("jitted", [False, True])
+def test_fused_easgd_flat(n_replicas, jitted):
+    nb = 2
+    ks = keys(2)
+    c = jax.random.normal(ks[0], (nb * BLOCK,))
+    x = jax.random.normal(ks[1], (n_replicas, nb * BLOCK))
+    beta = 0.07
+
+    def call(c, x):
+        return K.fused_easgd_flat(c, x, beta)
+
+    fn = jax.jit(call) if jitted else call
+    VK.reset_launch_count()
+    co, xo = fn(c, x)
+    assert VK.launch_count() == 1              # center + ALL replicas, fused
+    cr, xr = R.easgd_elastic(c, x, beta)
+    np.testing.assert_allclose(np.asarray(co), np.asarray(cr),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(xo), np.asarray(xr),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_fused_adam_flat_rejects_bad_shapes():
+    p = jnp.zeros((BLOCK,))
+    with pytest.raises(ValueError):
+        K.fused_adam_flat(jnp.zeros((BLOCK + 1,)), p, p, p,
+                          1e-3, 0.9, 0.999, 1e-8, 0.0, 0.1, 0.001)
+    with pytest.raises(ValueError):
+        K.fused_adam_flat(p, jnp.zeros((2 * BLOCK,)), p, p,
+                          1e-3, 0.9, 0.999, 1e-8, 0.0, 0.1, 0.001)
 
 
 @pytest.mark.parametrize("hkv", [(4, 4), (4, 2), (8, 1)])

@@ -1,11 +1,15 @@
 """End-to-end behaviour of the VC system simulator: convergence, fault
-tolerance under preemption, consistency trade-offs, baselines."""
+tolerance under preemption, consistency trade-offs, baselines, the
+boundary-only conversion budget, and the preempt-restore resume path."""
 import numpy as np
 import pytest
 
-from repro.core.baselines import (DCASGD, Downpour, EASGDPersistent, SyncBSP,
-                                  VCASGD)
-from repro.core.simulator import SimConfig, run_simulation, run_single_instance
+from repro.core import flat as F
+from repro.core.baselines import (DCASGD, Downpour, EASGDFlatPod,
+                                  EASGDPersistent, SyncBSP, VCASGD)
+from repro.core.preemption import KillSchedule
+from repro.core.simulator import (SimConfig, run_preemptible_training,
+                                  run_simulation, run_single_instance)
 from repro.core.tasks import MLPTask, make_classification_data
 from repro.core.vc_asgd import var_alpha
 
@@ -68,12 +72,24 @@ def test_var_alpha_runs(task_data):
     lambda: Downpour(server_lr=0.5),
     lambda: DCASGD(server_lr=0.5, lam=0.05),
     lambda: EASGDPersistent(beta=0.05),
+    lambda: EASGDFlatPod(n_replicas=3, beta=0.05),
 ])
 def test_baselines_run(task_data, scheme_fn):
     task, data = task_data
     res = run_simulation(task, data, scheme_fn(), _cfg(max_epochs=3))
     assert res.epochs_done == 3
     assert np.isfinite(res.final_accuracy)
+
+
+def test_dcasgd_backups_are_wired(task_data):
+    """The simulator hands the dispatch-time params to note_handout, so
+    DC-ASGD's compensation backup is real — without it (W_now - W_backup)
+    is identically zero and DC-ASGD degenerates to Downpour."""
+    task, data = task_data
+    scheme = DCASGD(server_lr=0.5, lam=0.05)
+    res = run_simulation(task, data, scheme, _cfg(max_epochs=2))
+    assert res.results_assimilated > 0
+    assert len(scheme._backups) > 0
 
 
 def test_sync_bsp_runs(task_data):
@@ -96,6 +112,48 @@ def test_determinism(task_data):
     r2 = run_simulation(task, data, VCASGD(0.9), _cfg(max_epochs=2))
     assert r1.wall_time_s == r2.wall_time_s
     assert r1.final_accuracy == r2.final_accuracy
+
+
+def test_conversions_at_boundary_only(task_data):
+    """Per assimilated result the simulator crosses the tree<->bus boundary
+    exactly 3 times: unflatten for client training, flatten of the trained
+    tree, unflatten for evaluation — schemes themselves do ZERO conversions
+    (the PR-2 regression against per-round re-flattening)."""
+    task, data = task_data
+    F.reset_conversion_counts()
+    res = run_simulation(task, data, VCASGD(0.95), _cfg(max_epochs=2))
+    c = F.conversion_counts()
+    r = res.results_assimilated
+    assert r > 0
+    assert c["flatten"] == r + 1           # + initial params0 flatten
+    assert c["unflatten"] == 2 * r + 1     # + final evaluation
+
+
+def test_preempt_restore_matches_uninterrupted(task_data, tmp_path):
+    """Kill-and-restore fault injection: params+opt-state restored from the
+    one-pass record reproduce the uninterrupted loss trajectory exactly at
+    matching steps (the PR-2 acceptance criterion)."""
+    task, data = task_data
+    res_clean = run_preemptible_training(
+        task, data, steps=24, batch=32, ckpt_every=5,
+        ckpt_dir=tmp_path / "clean", seed=7)
+    res_kill = run_preemptible_training(
+        task, data, steps=24, batch=32, ckpt_every=5,
+        ckpt_dir=tmp_path / "kill", seed=7,
+        kill_schedule=KillSchedule.at(8, 19))
+    assert res_kill.restores == 2
+    assert res_kill.recomputed_steps > 0   # work was actually lost and redone
+    for s in range(24):
+        assert res_clean.losses[s] == res_kill.losses[s], s
+    np.testing.assert_array_equal(np.asarray(res_clean.final_params.buf),
+                                  np.asarray(res_kill.final_params.buf))
+
+
+def test_kill_schedule_exponential_deterministic():
+    a = KillSchedule.exponential(30.0, 200, seed=4)
+    b = KillSchedule.exponential(30.0, 200, seed=4)
+    assert a.kill_steps == b.kill_steps
+    assert all(0 <= s < 200 for s in a.kill_steps)
 
 
 def test_more_servers_reduce_backlog(task_data):
