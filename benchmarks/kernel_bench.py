@@ -5,10 +5,17 @@ magnitude slower than compiled), so wall-time here benchmarks the *oracle*
 (pure-jnp, XLA-compiled) path — the apples-to-apples number for the CSV —
 and separately validates that the Pallas path agrees numerically.  On a TPU
 the same harness times the Mosaic kernels.
+
+Suites with a fused-launch story also emit a numeric ``_launches`` dict
+(pallas_call counts per path) — ``benchmarks/run.py --check`` gates those
+against the committed baseline (results/BASELINE_launches.json).
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 from pathlib import Path
 from typing import Callable, Dict
@@ -174,6 +181,7 @@ def bench_flat_assimilate(*, n_clients: int = 4, write_json: bool = True
         "compressed_flat": {"us_per_call": round(us_comp_flat, 1),
                             "derived": f"speedup="
                             f"{us_comp_leaf / max(us_comp_flat, 1e-9):.2f}x"},
+        "_launches": {"flat": launches_flat, "per_leaf": launches_per_leaf},
     }
     if write_json:
         results = Path(__file__).resolve().parents[1] / "results"
@@ -262,6 +270,7 @@ def bench_flat_adam(*, write_json: bool = True) -> Dict[str, Dict]:
         "train_ckpt_one_pass": {"us_per_call": round(us_ckpt, 1),
                                 "derived": f"{ckpt_bytes} bytes single "
                                            f"record (params|m|v)"},
+        "_launches": {"flat": launches_flat},
     }
     if write_json:
         results = Path(__file__).resolve().parents[1] / "results"
@@ -269,3 +278,125 @@ def bench_flat_adam(*, write_json: bool = True) -> Dict[str, Dict]:
         (results / "BENCH_flat_adam.json").write_text(
             json.dumps(out, indent=1))
     return out
+
+
+def _bench_sharded_flat_impl(n_shards: int) -> Dict[str, Dict]:
+    """Runs inside a process whose host platform has >= n_shards devices."""
+    from repro.core import flat as F
+    from repro.core import vc_asgd as V
+    from repro.kernels import vc_asgd_update as VK
+    from repro.launch.mesh import make_pod_mesh
+    from repro.runtime import sharding as S
+
+    key = jax.random.PRNGKey(0)
+    # same ~2.1M-param / 24-leaf model as the other flat suites
+    sizes = [(256, 256), (1024, 64), (64,), (512, 512), (128, 1024), (1024,)]
+    tree = {}
+    for rep in range(4):
+        for i, shp in enumerate(sizes):
+            k2 = jax.random.fold_in(key, rep * 16 + i)
+            tree[f"layer{rep}/p{i}"] = jax.random.normal(k2, shp, jnp.float32)
+    n_leaves = len(jax.tree.leaves(tree))
+    n_clients = 4
+    alpha = 0.9
+
+    mesh = make_pod_mesh(n_shards)
+    fp = F.flatten_sharded(tree, n_shards)
+    clients = jnp.stack([fp.buf + 0.01 * (c + 1) for c in range(n_clients)])
+    w = V.assimilation_weights(n_clients, alpha)
+
+    # (a) flatten: single-host layout vs sharded layout (same leaf packing,
+    # shard-aware tail) — both XLA-jitted
+    us_flat_single = _time(lambda t: F.flatten(t).buf, tree, iters=20)
+    us_flat_shard = _time(lambda t: F.flatten_sharded(t, n_shards).buf,
+                          tree, iters=20)
+
+    # (b) Eq. 2 assimilation: single-host fold vs per-shard shard_map
+    us_assim_single = _time(
+        lambda s, c: V.assimilate_many_flat(s, c, alpha), fp, clients,
+        iters=20)
+    us_assim_shard = _time(
+        lambda sb, c: S.sharded_assimilate_flat(sb, c, w, mesh, "pod"),
+        fp.buf, clients, iters=20)
+
+    # (c) launch counts (trace-time): the sharded kernel route is STILL one
+    # pallas_call for the whole model — shard_map partitions the one
+    # launch, it does not multiply it
+    VK.reset_launch_count()
+    V.assimilate_many_flat(fp, clients, alpha, use_kernel=True)
+    launches_single = VK.launch_count()
+    VK.reset_launch_count()
+    S.sharded_assimilate_flat(fp.buf, clients, w, mesh, "pod",
+                              use_kernel=True)
+    launches_shard = VK.launch_count()
+    VK.reset_launch_count()
+    per_leaf_clients = [F.unflatten(fp.with_buf(clients[c]))
+                        for c in range(n_clients)]
+    folded = tree
+    for c in per_leaf_clients:
+        folded = V.vc_asgd_update(folded, c, alpha, use_kernel=True)
+    launches_per_leaf = VK.launch_count()
+
+    return {
+        # no commas in derived: run.py prints name,us_per_call,derived CSV
+        "model": {"us_per_call": 0.0,
+                  "derived": f"{n_leaves} leaves / {n_shards} shards x "
+                             f"{fp.spec.shard_len} elems / "
+                             f"{jax.local_device_count()} devices"},
+        "flatten_single": {"us_per_call": round(us_flat_single, 1),
+                           "derived": f"padded={F.flatten(tree).spec.padded}"},
+        "flatten_sharded": {"us_per_call": round(us_flat_shard, 1),
+                            "derived": f"padded={fp.spec.padded}"},
+        "assimilate_single": {"us_per_call": round(us_assim_single, 1),
+                              "derived": f"{n_clients} clients"},
+        "assimilate_sharded": {"us_per_call": round(us_assim_shard, 1),
+                               "derived": f"speedup={us_assim_single / max(us_assim_shard, 1e-9):.2f}x"},
+        "pallas_launches": {"us_per_call": 0.0,
+                            "derived": f"sharded={launches_shard} "
+                                       f"single={launches_single} "
+                                       f"per_leaf={launches_per_leaf}"},
+        "_launches": {"sharded": launches_shard, "single": launches_single,
+                      "per_leaf": launches_per_leaf},
+    }
+
+
+def bench_sharded_flat(*, n_shards: int = 4, write_json: bool = True
+                       ) -> Dict[str, Dict]:
+    """ShardedFlat: the partitioned bus (core/flat.py ShardedTreeSpec +
+    runtime/sharding.py shard_map ops) against the single-host flat path —
+    flatten/assimilate wall-clock and pallas launch counts on the CPU pod
+    mesh.  The main process keeps one device (dry-run rules), so the
+    measurement re-execs itself with xla_force_host_platform_device_count
+    when needed.  Writes results/BENCH_sharded_flat.json."""
+    if jax.local_device_count() >= n_shards:
+        out = _bench_sharded_flat_impl(n_shards)
+    else:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count="
+                              f"{n_shards}").strip()
+        src = Path(__file__).resolve().parents[1] / "src"
+        env["PYTHONPATH"] = f"{src}{os.pathsep}" + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.kernel_bench",
+             "--emit-sharded-flat", str(n_shards)],
+            capture_output=True, text=True, env=env,
+            cwd=Path(__file__).resolve().parents[1], timeout=600)
+        if proc.returncode != 0:
+            raise RuntimeError(f"sharded_flat subprocess failed:\n"
+                               f"{proc.stderr[-3000:]}")
+        out = json.loads(proc.stdout)
+    if write_json:
+        results = Path(__file__).resolve().parents[1] / "results"
+        results.mkdir(exist_ok=True)
+        (results / "BENCH_sharded_flat.json").write_text(
+            json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    # subprocess entry for bench_sharded_flat's multi-device re-exec
+    if len(sys.argv) >= 3 and sys.argv[1] == "--emit-sharded-flat":
+        print(json.dumps(_bench_sharded_flat_impl(int(sys.argv[2]))))
+    else:
+        raise SystemExit("usage: kernel_bench.py --emit-sharded-flat N")

@@ -1,18 +1,87 @@
 """Benchmark harness: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows (contract) and writes the full
-structured results (curves, claims) to results/bench_*.json.
+Prints ``name,us_per_call,derived`` CSV rows (contract) and writes ONE
+canonical ``results/BENCH_<suite>.json`` per suite (plus the aggregated
+claims in ``results/BENCH_claims.json``).
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4,cost]
+  PYTHONPATH=src python -m benchmarks.run --check
+
+``--check`` is the perf gate: it re-runs every launch-count-bearing suite
+and fails (exit 1) if any suite's pallas launch counts regressed versus
+the committed baseline (results/BASELINE_launches.json) — the fused
+single-launch structure is the one perf property this CPU container can
+pin exactly.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
 RESULTS.mkdir(exist_ok=True)
+
+# one canonical BENCH_*.json name per suite (bench fns that write their own
+# canonical file use the same name, so there is exactly ONE copy on disk)
+CANONICAL = {
+    "flat": "BENCH_flat_assimilate",
+    "flat_adam": "BENCH_flat_adam",
+    "sharded_flat": "BENCH_sharded_flat",
+}
+
+BASELINE = RESULTS / "BASELINE_launches.json"
+# suites that carry a numeric _launches dict, gated by --check
+LAUNCH_SUITES = ("flat", "flat_adam", "sharded_flat")
+
+
+def _out_path(name: str) -> Path:
+    return RESULTS / f"{CANONICAL.get(name, 'BENCH_' + name)}.json"
+
+
+def check_launches(benches) -> int:
+    """Re-run the launch-bearing suites and compare their _launches dicts
+    against the committed baseline.  A HIGHER count than baseline is a
+    regression (a fused pass broke apart); lower is an improvement (run
+    with --update-baseline to ratchet it down)."""
+    if not BASELINE.exists():
+        print(f"no baseline at {BASELINE}; run --update-baseline first",
+              file=sys.stderr)
+        return 2
+    baseline = json.loads(BASELINE.read_text())
+    failures = []
+    for name in LAUNCH_SUITES:
+        res = benches[name]()
+        _out_path(name).write_text(json.dumps(res, indent=1, default=str))
+        current = res.get("_launches", {})
+        base = baseline.get(name, {})
+        for path_name, count in current.items():
+            allowed = base.get(path_name)
+            if allowed is None:
+                failures.append(f"{name}.{path_name}: no baseline entry "
+                                f"(current={count})")
+            elif count > allowed:
+                failures.append(f"{name}.{path_name}: {count} launches > "
+                                f"baseline {allowed}")
+            else:
+                print(f"check {name}.{path_name}: {count} <= {allowed} OK")
+    if failures:
+        for f in failures:
+            print(f"LAUNCH REGRESSION {f}", file=sys.stderr)
+        return 1
+    print("launch-count check passed")
+    return 0
+
+
+def update_baseline(benches) -> None:
+    out = {}
+    for name in LAUNCH_SUITES:
+        res = benches[name]()
+        _out_path(name).write_text(json.dumps(res, indent=1, default=str))
+        out[name] = res.get("_launches", {})
+    BASELINE.write_text(json.dumps(out, indent=1))
+    print(f"wrote {BASELINE}: {json.dumps(out)}")
 
 
 def main(argv=None) -> None:
@@ -21,14 +90,21 @@ def main(argv=None) -> None:
                     help="paper-scale horizons (40 epochs, 50 shards)")
     ap.add_argument("--only", default="",
                     help="comma list: fig2,fig3,fig4,fig6,consistency,cost,"
-                         "kernels,flat,flat_adam")
+                         "kernels,flat,flat_adam,sharded_flat")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if any BENCH_*.json launch count regresses "
+                         "vs results/BASELINE_launches.json")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite results/BASELINE_launches.json from a "
+                         "fresh run of the launch-bearing suites")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import paper_figs as F
     from benchmarks.kernel_bench import (bench_flat_adam,
-                                         bench_flat_assimilate, bench_kernels)
+                                         bench_flat_assimilate,
+                                         bench_kernels, bench_sharded_flat)
 
     benches = {
         "fig2": lambda: F.fig2_distributed(quick),
@@ -40,7 +116,14 @@ def main(argv=None) -> None:
         "kernels": bench_kernels,
         "flat": bench_flat_assimilate,
         "flat_adam": bench_flat_adam,
+        "sharded_flat": bench_sharded_flat,
     }
+
+    if args.check:
+        raise SystemExit(check_launches(benches))
+    if args.update_baseline:
+        update_baseline(benches)
+        return
 
     print("name,us_per_call,derived")
     all_claims = {}
@@ -50,11 +133,12 @@ def main(argv=None) -> None:
         t0 = time.perf_counter()
         res = fn()
         dt_us = (time.perf_counter() - t0) * 1e6
-        out = RESULTS / f"bench_{name}.json"
-        out.write_text(json.dumps(res, indent=1, default=str))
+        _out_path(name).write_text(json.dumps(res, indent=1, default=str))
         claims = res.pop("_claims", None) if isinstance(res, dict) else None
-        if name in ("kernels", "flat", "flat_adam"):
+        if name in ("kernels", "flat", "flat_adam", "sharded_flat"):
             for k, v in res.items():
+                if k.startswith("_"):
+                    continue
                 print(f"{name}.{k},{v['us_per_call']},{v['derived']}")
         else:
             ok = (all(claims.values()) if claims else True)
@@ -65,8 +149,9 @@ def main(argv=None) -> None:
             print(f"{name},{dt_us:.0f},claims:{n_ok}/{n_claims}{fails}")
         if claims:
             all_claims[name] = claims
-    (RESULTS / "bench_claims.json").write_text(
-        json.dumps(all_claims, indent=1))
+    if all_claims:
+        (RESULTS / "BENCH_claims.json").write_text(
+            json.dumps(all_claims, indent=1))
 
 
 if __name__ == "__main__":

@@ -140,6 +140,20 @@ def _spec_of(like):
 
 
 def _check_layout(meta: Dict, spec, path) -> None:
+    # sharded layouts (ShardedTreeSpec) pin the segment geometry: a record
+    # written n_shards-way only restores onto the same partitioning.
+    # Checked FIRST so the error names the shard mismatch (the padded
+    # length usually differs too, which the generic check would mask).
+    from repro.core import flat as F
+    want = None
+    if isinstance(spec, F.ShardedTreeSpec):
+        want = {"n_shards": spec.n_shards, "shard_len": spec.shard_len,
+                "axis": spec.axis}
+    have = meta.get("shard")
+    if want != have:
+        raise ValueError(
+            f"flat checkpoint shard-layout mismatch: record {have} vs "
+            f"requested {want}: {path}")
     if (tuple(tuple(s) for s in meta["shapes"]) != spec.shapes
             or tuple(meta["offsets"]) != spec.offsets
             or meta["n"] != spec.n or meta["padded"] != spec.padded):

@@ -108,10 +108,15 @@ class ServerScheme:
         scheme use outside the simulator). Default: full weights."""
         return trained
 
-    def payload_flat(self, trained_buf: jnp.ndarray, start: F.FlatParams):
+    def payload_flat(self, trained_buf: jnp.ndarray, start: F.FlatParams,
+                     *, cid: Optional[int] = None):
         """What travels client -> server, on the bus: ``trained_buf`` is
         the trained tree flattened once at the boundary, ``start`` the
-        flat params the client trained from.  Default: full weights."""
+        flat params the client trained from.  The return value is what
+        gets wire-encoded (transfer/wire.py): a raw buffer ships as a
+        dense frame, a CompressedDelta as a sparse one.  ``cid`` lets
+        compressed schemes keep per-client error-feedback residuals.
+        Default: full weights."""
         return trained_buf
 
     def assimilate(self, state, payload, meta: ResultMeta) -> Dict[str, Any]:
@@ -123,9 +128,22 @@ class ServerScheme:
     def drop_client(self, cid: int) -> None:
         """Preemption hook: schemes with client-local state lose it here."""
 
-    def note_handout(self, cid: int, params) -> None:
-        """Hook: the server handed ``params`` to client ``cid`` (DC-ASGD
-        keeps them as the delay-compensation backup)."""
+    def note_handout(self, cid: int, params, uid: Optional[int] = None) -> None:
+        """Hook: the server handed ``params`` to client ``cid`` for work
+        unit ``uid`` (DC-ASGD keeps them as the delay-compensation backup;
+        compressed schemes key the delta-reconstruction base by uid)."""
+
+    def drop_result(self, cid: int, uid: Optional[int] = None) -> None:
+        """Hook: unit ``uid``'s in-flight result was discarded (timeout
+        reassignment or mid-upload death) — schemes release any per-unit
+        state noted at handout, or it would leak one [padded] buffer per
+        discarded result."""
+
+    def residual_norm(self, cid: Optional[int] = None) -> float:
+        """Error-feedback bookkeeping for the wire header: l2 norm of the
+        residual the client carries after its latest payload (0.0 for
+        uncompressed schemes)."""
+        return 0.0
 
 
 class VCASGD(ServerScheme):
@@ -146,6 +164,64 @@ class VCASGD(ServerScheme):
         return state
 
 
+class CompressedVCASGD(VCASGD):
+    """VC-ASGD whose client -> server payload is the ``compress_flat``
+    sparse delta (GLOBAL top-k + int8 with error feedback,
+    core/compression.py) instead of the full weight buffer — the payload
+    that actually rides the wire as a SPARSE frame (transfer/wire.py).
+
+    The client compresses (trained - start) with its carried residual; the
+    server reconstructs W_c = start + dequantized delta from the copy it
+    handed out for that unit (keyed by uid — with Tn concurrent subtasks a
+    per-client key would be clobbered by the next handout) and assimilates
+    via the ordinary Eq. 1 lerp.  A preempted client loses its residual
+    (it lived client-side), which error feedback tolerates by design."""
+
+    def __init__(self, alpha=0.95, density: float = 0.05,
+                 staleness_gamma: Optional[float] = None):
+        super().__init__(alpha, staleness_gamma)
+        self.density = density
+        self.name = "vc-asgd-compressed"
+        self._handout: Dict[tuple, jnp.ndarray] = {}    # (cid, uid) -> buf
+        self._residuals: Dict[int, jnp.ndarray] = {}    # cid -> [padded]
+        self._res_norms: Dict[int, float] = {}          # cid -> l2 norm
+
+    def note_handout(self, cid: int, params, uid: Optional[int] = None):
+        self._handout[(cid, uid)] = as_flat(params).buf
+
+    def drop_result(self, cid: int, uid: Optional[int] = None) -> None:
+        self._handout.pop((cid, uid), None)
+
+    def residual_norm(self, cid: Optional[int] = None) -> float:
+        return self._res_norms.get(cid, 0.0)
+
+    def payload_flat(self, trained_buf, start: F.FlatParams, *,
+                     cid: Optional[int] = None):
+        from repro.core import compression as C
+        delta = trained_buf - start.buf
+        payload, res = C.compress_flat(delta, density=self.density,
+                                       logical_n=start.spec.n,
+                                       residual=self._residuals.get(cid))
+        if cid is not None:
+            self._residuals[cid] = res
+            self._res_norms[cid] = float(jnp.linalg.norm(res))
+        return payload
+
+    def assimilate(self, state, payload, meta: ResultMeta):
+        from repro.core import compression as C
+        fp = as_flat(state["params"])
+        if isinstance(payload, C.CompressedDelta):
+            base = self._handout.pop((meta.cid, meta.unit_uid), fp.buf)
+            payload = base + C.decompress_flat(payload)
+        return super().assimilate(state, payload, meta)
+
+    def drop_client(self, cid: int) -> None:
+        self._residuals.pop(cid, None)
+        self._res_norms.pop(cid, None)
+        for key in [k for k in self._handout if k[0] == cid]:
+            self._handout.pop(key, None)
+
+
 class Downpour(ServerScheme):
     """Client sends delta = trained - start (the accumulated update of its
     n_push local iterations); server adds it, Hogwild-style."""
@@ -157,7 +233,8 @@ class Downpour(ServerScheme):
     def client_payload(self, trained, start):
         return jax.tree.map(lambda t, s: t - s, trained, start)
 
-    def payload_flat(self, trained_buf, start: F.FlatParams):
+    def payload_flat(self, trained_buf, start: F.FlatParams, *,
+                     cid: Optional[int] = None):
         return trained_buf - start.buf
 
     def assimilate(self, state, payload, meta: ResultMeta):
@@ -178,7 +255,7 @@ class DCASGD(Downpour):
         self.name = "dc-asgd"
         self._backups: Dict[int, F.FlatParams] = {}
 
-    def note_handout(self, cid: int, params):
+    def note_handout(self, cid: int, params, uid: Optional[int] = None):
         self._backups[cid] = as_flat(params)
 
     def assimilate(self, state, payload, meta: ResultMeta):
@@ -239,16 +316,25 @@ class EASGDFlatPod(ServerScheme):
     (slot = cid % n_replicas, and a slot claimed by one cid rejects
     payloads from another — silently overwriting a colliding client's
     round, or waiting forever on a slot no client maps to, would corrupt
-    the barrier)."""
+    the barrier).
+
+    With ``compress_density`` set the replica payload rides the wire as a
+    ``compress_flat`` SPARSE frame (top-k + int8 with per-slot error
+    feedback) instead of the dense buffer: the client compresses
+    (trained - start), the server reconstructs from the copy it handed
+    out for that unit.  A preempted slot loses its residual with its
+    replica."""
 
     requires_all_clients = True
     has_local_replicas = True
 
     def __init__(self, n_replicas: int, beta: float = 0.05,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 compress_density: Optional[float] = None):
         self.n_replicas = n_replicas
         self.beta = beta
         self.use_kernel = use_kernel
+        self.compress_density = compress_density
         self.name = "easgd-flat-pod"
         self.replicas: Optional[jnp.ndarray] = None     # [n_replicas, padded]
         # rows arriving mid-round buffer here (one dict entry per slot, like
@@ -257,6 +343,9 @@ class EASGDFlatPod(ServerScheme):
         self._pending: Dict[int, jnp.ndarray] = {}
         self._lost: set = set()            # preempted slots restart from center
         self._slot_owner: Dict[int, int] = {}
+        self._handout: Dict[tuple, jnp.ndarray] = {}    # (slot, uid) -> buf
+        self._residuals: Dict[int, jnp.ndarray] = {}    # slot -> [padded]
+        self._res_norms: Dict[int, float] = {}          # slot -> l2 norm
 
     def _slot(self, cid: int) -> int:
         slot = cid % self.n_replicas
@@ -275,6 +364,9 @@ class EASGDFlatPod(ServerScheme):
         self._pending.clear()
         self._lost.clear()
         self._slot_owner.clear()
+        self._handout.clear()
+        self._residuals.clear()
+        self._res_norms.clear()
         return state
 
     def params_for_client(self, state, cid: Optional[int] = None):
@@ -284,9 +376,38 @@ class EASGDFlatPod(ServerScheme):
             return fp
         return fp.with_buf(self.replicas[self._slot(cid)])
 
+    def note_handout(self, cid: int, params, uid: Optional[int] = None):
+        if self.compress_density is not None:
+            self._handout[(self._slot(cid), uid)] = as_flat(params).buf
+
+    def drop_result(self, cid: int, uid: Optional[int] = None) -> None:
+        self._handout.pop((self._slot(cid), uid), None)
+
+    def residual_norm(self, cid: Optional[int] = None) -> float:
+        return self._res_norms.get(self._slot(cid), 0.0) \
+            if cid is not None else 0.0
+
+    def payload_flat(self, trained_buf, start: F.FlatParams, *,
+                     cid: Optional[int] = None):
+        if self.compress_density is None:
+            return trained_buf
+        from repro.core import compression as C
+        slot = self._slot(cid)
+        delta = trained_buf - start.buf
+        payload, res = C.compress_flat(delta, density=self.compress_density,
+                                       logical_n=start.spec.n,
+                                       residual=self._residuals.get(slot))
+        self._residuals[slot] = res
+        self._res_norms[slot] = float(jnp.linalg.norm(res))
+        return payload
+
     def assimilate(self, state, payload, meta: ResultMeta):
+        from repro.core import compression as C
         fp = as_flat(state["params"])
         slot = self._slot(meta.cid)
+        if isinstance(payload, C.CompressedDelta):
+            base = self._handout.pop((slot, meta.unit_uid), fp.buf)
+            payload = base + C.decompress_flat(payload)
         self._pending[slot] = _payload_buf(fp, payload)
         self._lost.discard(slot)
         if len(self._pending) == self.n_replicas:
@@ -305,6 +426,10 @@ class EASGDFlatPod(ServerScheme):
         slot = self._slot(cid)
         self._pending.pop(slot, None)      # the barrier re-waits for it
         self._lost.add(slot)
+        self._residuals.pop(slot, None)    # residual lived with the replica
+        self._res_norms.pop(slot, None)
+        for key in [k for k in self._handout if k[0] == slot]:
+            self._handout.pop(key, None)
 
 
 class SyncBSP(ServerScheme):

@@ -31,6 +31,7 @@ class CompressedDelta(NamedTuple):
     indices: jnp.ndarray     # int32 flat indices [k]
     shape: tuple             # original shape
     density: float
+    block: int = 256         # quantization block (the wire format ships it)
 
 
 def topk_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -75,7 +76,7 @@ def decompress_delta(p: CompressedDelta) -> jnp.ndarray:
     n = 1
     for s in p.shape:
         n *= s
-    deq = dequantize_int8(p.values, p.scales, p.values.size)
+    deq = dequantize_int8(p.values, p.scales, p.values.size, block=p.block)
     flat = jnp.zeros((n,), jnp.float32).at[p.indices].set(deq)
     return flat.reshape(p.shape)
 
@@ -111,7 +112,8 @@ def compress_flat(delta_buf: jnp.ndarray, *, density: float = 0.05,
     new_residual = flat - transmitted
     payload = CompressedDelta(values=q, scales=scales,
                               indices=idx.astype(jnp.int32),
-                              shape=(flat.size,), density=density)
+                              shape=(flat.size,), density=density,
+                              block=block)
     return payload, new_residual
 
 

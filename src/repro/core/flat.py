@@ -100,6 +100,93 @@ class TreeSpec:
 
 
 @dataclass(frozen=True)
+class ShardedTreeSpec(TreeSpec):
+    """Mesh-aware layout: the flat bus cut into ``n_shards`` contiguous,
+    BLOCK-padded segments — one per device on the mesh axis ``axis``.
+
+    ``shard_len`` is a BLOCK multiple and ``padded == n_shards *
+    shard_len``, so placing the 1-D buffer with
+    ``NamedSharding(mesh, P(axis))`` gives every device EXACTLY its own
+    contiguous segment, and every flat kernel (lerp / Eq. 2 / Adam /
+    EASGD) can run per-shard under ``shard_map`` with no gather: the ops
+    are elementwise over the bus, so shard-local results are bit-identical
+    to the single-host pass.  Leaves may straddle shard boundaries —
+    ``shard_table()`` is the per-shard view of which leaf slices each
+    device owns (layout bookkeeping only; kernels never consult it)."""
+
+    n_shards: int = 1
+    shard_len: int = 0                    # elements per shard (BLOCK multiple)
+    axis: str = "pod"                     # mesh axis the bus shards over
+
+    def shard_bounds(self, i: int) -> Tuple[int, int]:
+        """[start, stop) element range of shard ``i``'s segment."""
+        if not 0 <= i < self.n_shards:
+            raise IndexError(f"shard {i} out of range 0..{self.n_shards - 1}")
+        return i * self.shard_len, (i + 1) * self.shard_len
+
+    def shard_table(self):
+        """Per-shard list of (leaf_idx, leaf_offset, length): the leaf
+        slices whose elements live in that shard's segment.  Every leaf
+        element appears exactly once across all shards (tests assert)."""
+        table = []
+        for i in range(self.n_shards):
+            lo, hi = self.shard_bounds(i)
+            segs = []
+            for li, (off, size) in enumerate(zip(self.offsets, self.sizes)):
+                a, b = max(off, lo), min(off + size, hi)
+                if a < b:
+                    segs.append((li, a - off, b - a))
+            table.append(segs)
+        return table
+
+    def meta(self) -> dict:
+        out = super().meta()
+        out["shard"] = {"n_shards": self.n_shards,
+                       "shard_len": self.shard_len, "axis": self.axis}
+        return out
+
+
+def _shard_len(n: int, n_shards: int, pad_to: int) -> int:
+    """Per-shard segment length: smallest BLOCK multiple covering n."""
+    return max(pad_to, -(-n // (n_shards * pad_to)) * pad_to)
+
+
+def shard_spec(spec: TreeSpec, n_shards: int, *, axis: str = "pod",
+               pad_to: int = BLOCK) -> ShardedTreeSpec:
+    """Re-lay an existing TreeSpec onto ``n_shards`` contiguous segments.
+    Only the tail padding changes — offsets/sizes (and therefore the
+    logical buffer prefix) are identical to the single-host layout."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    sl = _shard_len(spec.n, n_shards, pad_to)
+    return ShardedTreeSpec(
+        treedef=spec.treedef, shapes=spec.shapes, dtypes=spec.dtypes,
+        offsets=spec.offsets, sizes=spec.sizes, n=spec.n,
+        padded=sl * n_shards, n_shards=n_shards, shard_len=sl, axis=axis)
+
+
+def sharded_tree_spec(tree, n_shards: int, *, axis: str = "pod",
+                      pad_to: int = BLOCK) -> ShardedTreeSpec:
+    """Sharded layout of ``tree`` (no data movement)."""
+    return shard_spec(tree_spec(tree, pad_to=pad_to), n_shards,
+                      axis=axis, pad_to=pad_to)
+
+
+def flatten_sharded(tree, n_shards: int, *, dtype=jnp.float32,
+                    axis: str = "pod", pad_to: int = BLOCK) -> "FlatParams":
+    """Flatten onto the sharded layout: same leaf packing as ``flatten``,
+    tail zero-padded so every shard's segment is a BLOCK multiple."""
+    _note_flatten()
+    spec = sharded_tree_spec(tree, n_shards, axis=axis, pad_to=pad_to)
+    leaves = jax.tree.leaves(tree)
+    parts = [jnp.asarray(l).reshape(-1).astype(dtype) for l in leaves]
+    pad = spec.padded - spec.n
+    if pad:
+        parts.append(jnp.zeros((pad,), dtype))
+    return FlatParams(jnp.concatenate(parts), spec)
+
+
+@dataclass(frozen=True)
 class FlatParams:
     """One contiguous 1-D parameter buffer plus its TreeSpec."""
 

@@ -34,6 +34,8 @@ from repro.core.preemption import (ClientModel, LatencyModel, PreemptionModel,
                                    make_fleet)
 from repro.core.scheduler import Scheduler
 from repro.core.work_generator import WorkGenerator, split_dataset
+from repro.transfer import wire
+from repro.transfer.transport import LoopbackTransport, TransportStats
 
 
 @dataclass
@@ -50,10 +52,18 @@ class SimConfig:
     preemptible: bool = False
     mean_lifetime_s: float = 5400.0
     restart_delay_s: float = 120.0
-    # transfer sizes (paper §IV-A): params 21.2MB, data shard 3.9MB, model 269KB
+    # transfer sizes (paper §IV-A): params 21.2MB, data shard 3.9MB, model
+    # 269KB.  These calibrate the DOWNLOAD leg only (the paper's .h5 file
+    # the server ships); the UPLOAD leg is no longer simulated — the
+    # result payload is actually encoded (transfer/wire.py), pushed
+    # through the loopback transport, and the upload time is computed
+    # from the REAL frame length.
     param_bytes: float = 21.2e6
     shard_bytes: float = 3.9e6
     model_bytes: float = 269e3
+    # override the real upload bytes with a fixed size (paper-calibrated
+    # figure reproductions set this to param_bytes); None = real frames
+    upload_bytes: Optional[float] = None
     # server-side per-result processing (assimilation compute + validation)
     server_proc_s: float = 2.0
     # reference client compute per subtask on the 1.0-speed instance
@@ -82,6 +92,11 @@ class SimResult:
     preemptions: int
     results_assimilated: int
     cost_hours: float = 0.0
+    # REAL bytes on the wire (transfer/): frame counts and byte totals are
+    # measured off the encoded payloads, never assumed
+    wire: Optional[TransportStats] = None
+    wire_dense_frames: int = 0
+    wire_sparse_frames: int = 0
 
     def acc_at_time(self, t: float) -> float:
         best = 0.0
@@ -92,6 +107,7 @@ class SimResult:
 
 
 # event kinds
+_UPLOAD = "upload"          # client finished local training; starts upload
 _ARRIVE = "arrive"          # result lands at the web server
 _RESPAWN = "respawn"
 
@@ -142,8 +158,13 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
     def push(t, kind, payload):
         heapq.heappush(events, (t, next(eid), kind, payload))
 
+    transport = LoopbackTransport()
+    wire_kinds = {wire.KIND_DENSE: 0, wire.KIND_SPARSE: 0}
+
     def dispatch(cid: int, now: float):
-        """Client pulls work; schedule result arrivals for each unit."""
+        """Client pulls work; schedule the upload start for each unit (the
+        arrival is scheduled at upload time, once the REAL payload frame
+        length is known)."""
         client = fleet[cid]
         units = sched.request_work(cid, now)
         for unit in units:
@@ -151,9 +172,7 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
             # download params (+ shard if not cached — request_work marked it)
             dl = client.transfer_time(cfg.param_bytes + cfg.model_bytes)
             comp = client.compute_time(cfg.subtask_compute_s)
-            ul = client.transfer_time(cfg.param_bytes)
-            t_done = now + dl + comp + ul
-            push(t_done, _ARRIVE, (cid, unit, store.version, now))
+            push(now + dl + comp, _UPLOAD, (cid, unit, store.version, now))
 
     # boot: every client asks for work at t=0 (staggered a little)
     for c in fleet:
@@ -184,16 +203,15 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
             dispatch(payload, t_now)
             continue
 
-        if kind == _ARRIVE:
+        if kind == _UPLOAD:
             cid, unit, read_version, t_dispatch = payload
             client = fleet[cid]
             if cfg.preemptible and client.alive_until <= t_now:
-                continue                    # died mid-flight; timeout recovers
+                continue                    # died mid-compute; timeout recovers
             if unit.uid not in sched.inflight:
-                # timed out and reassigned while in flight; result discarded
+                # timed out and reassigned while computing; result discarded
                 dispatch(cid, t_now)
                 continue
-            sched.complete(unit.uid, t_now)
 
             # ---- client-side REAL training --------------------------------
             # the client trained from the params it downloaded at dispatch
@@ -206,15 +224,53 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
             if scheme.has_local_replicas:
                 base_fp = scheme.params_for_client(state, cid)
             base_fp = as_flat(base_fp)
-            # DC-ASGD keeps the handed-out copy as its compensation backup
-            scheme.note_handout(cid, base_fp)
+            # DC-ASGD keeps the handed-out copy as its compensation backup;
+            # compressed schemes key their reconstruction base by unit uid
+            scheme.note_handout(cid, base_fp, uid=unit.uid)
             base = as_tree(base_fp)
             trained = task.client_train(
                 base, data.x_train[idx], data.y_train[idx],
                 steps=unit.local_steps * max(1, len(idx) // task.batch),
                 seed=cfg.seed * 1000003 + unit.uid)
             trained_buf = flat.flatten_like(trained, base_fp.spec)
-            payload_w = scheme.payload_flat(trained_buf, base_fp)
+            payload_w = scheme.payload_flat(trained_buf, base_fp, cid=cid)
+
+            # ---- the wire: REAL bytes, REAL upload time -------------------
+            # the payload is encoded to a wire-format frame and pushed
+            # through the transport; the upload leg's duration comes from
+            # the frame's actual length (cfg.upload_bytes overrides it for
+            # paper-calibrated figure reproductions).  round/residual_norm
+            # carry the error-feedback bookkeeping for the receiver.
+            frame = wire.encode(payload_w, round=unit.epoch,
+                                residual_norm=scheme.residual_norm(cid))
+            mid = transport.send(frame)
+            ul = client.transfer_time(cfg.upload_bytes
+                                      if cfg.upload_bytes is not None
+                                      else len(frame))
+            push(t_now + ul, _ARRIVE, (cid, unit, read_version,
+                                       t_dispatch, mid))
+            continue
+
+        if kind == _ARRIVE:
+            cid, unit, read_version, t_dispatch, mid = payload
+            client = fleet[cid]
+            if cfg.preemptible and client.alive_until <= t_now:
+                transport.drop(mid)         # died mid-upload; bytes wasted
+                scheme.drop_result(cid, uid=unit.uid)
+                continue
+            if unit.uid not in sched.inflight:
+                # timed out and reassigned while uploading; result discarded
+                transport.drop(mid)
+                scheme.drop_result(cid, uid=unit.uid)
+                dispatch(cid, t_now)
+                continue
+            sched.complete(unit.uid, t_now)
+            # take delivery: decode validates magic/version/length/crc —
+            # a torn frame raises and is never assimilated
+            msg = wire.decode(transport.recv(mid))
+            wire_kinds[msg.kind] += 1
+            payload_w = (msg.payload if msg.kind == wire.KIND_SPARSE
+                         else jax.numpy.asarray(msg.payload))
 
             # ---- server-side assimilation ---------------------------------
             ps = next(ps_rr)
@@ -262,7 +318,9 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
         epochs_done=len(points), final_accuracy=final_acc,
         store_stats=store.stats, reassignments=sched.reassignments,
         preemptions=preemptions, results_assimilated=assimilated,
-        cost_hours=t_now / 3600.0)
+        cost_hours=t_now / 3600.0, wire=transport.stats,
+        wire_dense_frames=wire_kinds[wire.KIND_DENSE],
+        wire_sparse_frames=wire_kinds[wire.KIND_SPARSE])
 
 
 @dataclass

@@ -27,3 +27,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     return compat_make_mesh(shape, axes)
+
+
+def make_pod_mesh(n_pods: int, axis: str = "pod"):
+    """1-D mesh for the sharded FlatParams bus (core/flat.py
+    ShardedTreeSpec): each of the ``n_pods`` devices owns one contiguous
+    BLOCK-padded segment of the flat buffer, so the flat kernels run
+    per-shard under shard_map with no gather (runtime/sharding.py)."""
+    if n_pods < 1:
+        raise ValueError(f"n_pods must be >= 1, got {n_pods}")
+    return compat_make_mesh((n_pods,), (axis,))

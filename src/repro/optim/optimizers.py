@@ -107,6 +107,27 @@ class Adam:
         return fp.with_buf(new_buf), FlatOptState(m=m, v=v, step=t,
                                                   spec=state.spec)
 
+    def update_flat_sharded(self, grad_buf, state: "FlatOptState", fp, *,
+                            mesh, axis: str = "pod",
+                            use_kernel: bool = False):
+        """``update_flat`` on the pod mesh: the (p, g, m, v) lanes are
+        partitioned into contiguous per-device segments (ShardedTreeSpec)
+        and the fused Adam update runs per shard under shard_map — no
+        gather, and bit-identical to the single-host flat pass (the update
+        is elementwise over the bus; scalars are replicated)."""
+        from repro.core.flat import FlatOptState
+        from repro.runtime.sharding import sharded_adam_update_flat
+        t = state.step + 1
+        lr = self.lr(t) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+        new_buf, m, v = sharded_adam_update_flat(
+            fp.buf, grad_buf, state.m, state.v, lr, b1, b2, self.eps,
+            self.weight_decay, c1, c2, mesh, axis, use_kernel=use_kernel)
+        return fp.with_buf(new_buf), FlatOptState(m=m, v=v, step=t,
+                                                  spec=state.spec)
+
 
 def flat_opt_from_tree(state: OptState, spec) -> "FlatOptState":
     """Lift a per-leaf OptState onto the bus layout ``spec`` (checkpoint /

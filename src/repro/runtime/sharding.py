@@ -331,6 +331,145 @@ class MeshPlan(NullPlan):
         return walk(cache_tree)
 
 
+# ---------------------------------------------------------------------------
+# ShardedFlat: the FlatParams bus (core/flat.py) partitioned over a mesh
+# axis.  With a ShardedTreeSpec layout every device owns one contiguous
+# BLOCK-padded segment, so the fused flat kernels (Eq. 1/2, Adam, EASGD —
+# all elementwise over the bus) run PER SHARD under shard_map with no
+# gather, and their results are bit-identical to the single-host flat pass
+# at every shard count (tests/test_sharded_flat.py asserts this).
+# ---------------------------------------------------------------------------
+
+from jax.experimental.shard_map import shard_map  # noqa: E402
+
+
+def flat_sharding(mesh: Mesh, axis: str = "pod") -> NamedSharding:
+    """NamedSharding placing a 1-D flat buffer as contiguous per-device
+    segments along ``axis`` (replicated over any other mesh axes)."""
+    return NamedSharding(mesh, P(axis))
+
+
+def _check_shardable(buf_len: int, mesh: Mesh, axis: str) -> int:
+    a = int(mesh.shape[axis])
+    if buf_len % a:
+        raise ValueError(
+            f"flat buffer of {buf_len} elements does not divide the "
+            f"{a}-way mesh axis {axis!r}; lay it out with "
+            f"flat.shard_spec/flatten_sharded(n_shards={a})")
+    return a
+
+
+def shard_flat(fp, mesh: Mesh, axis: Optional[str] = None):
+    """Place a FlatParams' buffer on the mesh: each device gets its own
+    contiguous segment.  ``axis`` defaults to the ShardedTreeSpec's axis."""
+    from repro.core import flat as F
+    if axis is None:
+        axis = fp.spec.axis if isinstance(fp.spec, F.ShardedTreeSpec) \
+            else "pod"
+    _check_shardable(fp.buf.size, mesh, axis)
+    return fp.with_buf(jax.device_put(fp.buf, flat_sharding(mesh, axis)))
+
+
+def _weights_arr(weights) -> jnp.ndarray:
+    if isinstance(weights, jnp.ndarray):
+        return weights.astype(jnp.float32)
+    return jnp.stack([jnp.asarray(w, jnp.float32).reshape(())
+                      for w in weights])
+
+
+def sharded_lerp_flat(server_buf, client_buf, alpha, mesh: Mesh,
+                      axis: str = "pod", *, use_kernel: bool = False):
+    """Eq. 1 per shard: every device lerps its own segment."""
+    _check_shardable(server_buf.size, mesh, axis)
+    a = jnp.asarray(alpha, jnp.float32)
+
+    def local(s, c, a_):
+        if use_kernel:
+            from repro.kernels import ops as K
+            return K.fused_lerp_flat(s, c, a_)
+        from repro.kernels import ref as R
+        return R.vc_asgd_lerp(s, c, a_)
+
+    return shard_map(local, mesh=mesh, in_specs=(P(axis), P(axis), P()),
+                     out_specs=P(axis), check_rep=False)(
+        server_buf, client_buf, a)
+
+
+def sharded_assimilate_flat(server_buf, clients_buf, weights, mesh: Mesh,
+                            axis: str = "pod", *, use_kernel: bool = False):
+    """Eq. 2 per shard: server [N] + clients [n, N] -> [N], each device
+    reducing its own contiguous segment over all n client streams in
+    arrival order — the same fold as kernels assimilate_flat, so the
+    result is bit-identical to the single-host flat pass."""
+    _check_shardable(server_buf.size, mesh, axis)
+    n = int(clients_buf.shape[0])
+    w = _weights_arr(weights)
+    if w.shape[0] != n + 1:
+        raise ValueError(f"need {n + 1} weights, got {w.shape[0]}")
+
+    def local(w_, s, c):
+        if use_kernel:
+            from repro.kernels import ops as K
+            return K.fused_assimilate_flat(s, c, [w_[i] for i in range(n + 1)])
+        acc = w_[0] * s.astype(jnp.float32)
+        for j in range(n):
+            acc = acc + w_[j + 1] * c[j].astype(jnp.float32)
+        return acc.astype(s.dtype)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(), P(axis), P(None, axis)),
+                     out_specs=P(axis), check_rep=False)(
+        w, server_buf, clients_buf)
+
+
+def sharded_adam_update_flat(p_buf, g_buf, m_buf, v_buf, lr, b1, b2, eps,
+                             weight_decay, c1, c2, mesh: Mesh,
+                             axis: str = "pod", *, use_kernel: bool = False):
+    """Fused Adam per shard: each device updates the (p, m, v) lanes of its
+    own segment — zero cross-device traffic (scalars are replicated)."""
+    _check_shardable(p_buf.size, mesh, axis)
+    # lr/c1/c2 may be traced (schedules, step-dependent bias correction);
+    # b1/b2/eps/weight_decay are static hyperparameters and stay Python
+    # floats (ref.adam_update branches on weight_decay's truthiness)
+    scal = _weights_arr([lr, c1, c2])
+
+    def local(sc, p, g, m, v):
+        if use_kernel:
+            from repro.kernels import ops as K
+            return K.fused_adam_flat(p, g, m, v, sc[0], b1, b2, eps,
+                                     weight_decay, sc[1], sc[2])
+        from repro.kernels import ref as R
+        return R.adam_update(p, g, m, v, lr=sc[0], b1=b1, b2=b2,
+                             eps=eps, c1=sc[1], c2=sc[2],
+                             weight_decay=weight_decay)
+
+    blk = P(axis)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(), blk, blk, blk, blk),
+                     out_specs=(blk, blk, blk), check_rep=False)(
+        scal, p_buf, g_buf, m_buf, v_buf)
+
+
+def sharded_easgd_flat(center_buf, replicas_buf, beta, mesh: Mesh,
+                       axis: str = "pod", *, use_kernel: bool = False):
+    """Fused elastic EASGD round per shard: center [N] + replicas [n, N]
+    updated segment-by-segment, no gather."""
+    _check_shardable(center_buf.size, mesh, axis)
+    b = jnp.asarray(beta, jnp.float32)
+
+    def local(c, x, b_):
+        if use_kernel:
+            from repro.kernels import ops as K
+            return K.fused_easgd_flat(c, x, b_)
+        from repro.kernels import ref as R
+        return R.easgd_elastic(c, x, b_)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axis), P(None, axis), P()),
+                     out_specs=(P(axis), P(None, axis)), check_rep=False)(
+        center_buf, replicas_buf, b)
+
+
 def ep_tune(cfg: ModelConfig, dp: int) -> ModelConfig:
     """Set moe.ep_virtual so n_experts * v divides the dp-way EP axis and
     the per-expert f dim splits evenly."""

@@ -61,7 +61,8 @@ def make_train_step(model: Model, plan: MeshPlan, optimizer=None,
     return train_step
 
 
-def make_flat_train_step(loss_fn, optimizer, *, use_kernel: bool = False):
+def make_flat_train_step(loss_fn, optimizer, *, use_kernel: bool = False,
+                         mesh=None, shard_axis: str = "pod"):
     """Train step with params AND optimizer state on the flat bus
     (core/flat.py): (FlatParams, FlatOptState, batch) ->
     (FlatParams', FlatOptState', loss).
@@ -74,7 +75,13 @@ def make_flat_train_step(loss_fn, optimizer, *, use_kernel: bool = False):
     one pass (a single Pallas launch with ``use_kernel=True``).  This is
     the step the preemption-resume harness
     (core/simulator.py::run_preemptible_training) checkpoints and
-    restores as one contiguous record."""
+    restores as one contiguous record.
+
+    Mesh-aware: with ``mesh`` set, the (p, g, m, v) lanes are constrained
+    to contiguous per-device segments along ``shard_axis`` (lay the bus
+    out with flat.flatten_sharded / ShardedTreeSpec so the length
+    divides) and the fused Adam update runs PER SHARD under shard_map —
+    no gather, bit-identical to the single-host flat pass."""
     from repro.core import flat as F
 
     def step(fp, fos, batch):
@@ -82,8 +89,16 @@ def make_flat_train_step(loss_fn, optimizer, *, use_kernel: bool = False):
             return loss_fn(F.unflatten(fp.with_buf(buf)), batch)
 
         loss, gbuf = jax.value_and_grad(flat_loss)(fp.buf)
-        new_fp, new_fos = optimizer.update_flat(gbuf, fos, fp,
-                                                use_kernel=use_kernel)
+        if mesh is not None:
+            from repro.runtime.sharding import flat_sharding
+            gbuf = jax.lax.with_sharding_constraint(
+                gbuf, flat_sharding(mesh, shard_axis))
+            new_fp, new_fos = optimizer.update_flat_sharded(
+                gbuf, fos, fp, mesh=mesh, axis=shard_axis,
+                use_kernel=use_kernel)
+        else:
+            new_fp, new_fos = optimizer.update_flat(gbuf, fos, fp,
+                                                    use_kernel=use_kernel)
         return new_fp, new_fos, loss
 
     return jax.jit(step)

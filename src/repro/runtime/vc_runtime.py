@@ -45,15 +45,94 @@ def island_weights(n_pods: int, alpha: float, survivors: jnp.ndarray
     return w, 1.0 - w.sum()
 
 
+def assimilate_flat(server_buf, islands_buf, w, w_s, *,
+                    mesh=None, shard_axis=None, use_kernel: bool = False):
+    """Eq. 2 over the FLAT bus with survivor masking: server [N] +
+    islands [n_pods, N] -> [N].
+
+    Select-before-multiply: a dead island may hold inf/nan (it crashed
+    mid-step) and ``0 * inf`` would poison the server, so dead streams are
+    zeroed BEFORE the weighted reduction.  The reduction itself is
+    elementwise over the bus, so with ``mesh``/``shard_axis`` set it runs
+    per contiguous shard segment under shard_map (runtime/sharding.py) —
+    no gather, bit-identical to the single-host pass at every pod count.
+    ``use_kernel=True`` routes the masked reduction through the fused
+    single-launch Pallas kernel (kernels assimilate_flat)."""
+    wi = w.reshape((-1, 1)).astype(jnp.float32)
+    islands_buf = jnp.where(wi > 0.0, islands_buf.astype(jnp.float32), 0.0)
+    if use_kernel:
+        n = int(islands_buf.shape[0])
+        weights = [w_s] + [w[j] for j in range(n)]
+        if mesh is not None:
+            from repro.runtime.sharding import sharded_assimilate_flat
+            return sharded_assimilate_flat(server_buf, islands_buf, weights,
+                                           mesh, shard_axis, use_kernel=True)
+        from repro.kernels import ops as K
+        return K.fused_assimilate_flat(server_buf, islands_buf, weights)
+
+    # NOT routed through sharding.sharded_assimilate_flat's jnp form: that
+    # helper folds client streams SEQUENTIALLY (the kernel's order), while
+    # the retained per-leaf oracle (assimilate_islands_per_leaf) reduces
+    # with jnp.sum over the pod axis — bit-exactness against the oracle
+    # pins this reduction order, sharded and unsharded alike.
+    def local(s, isl, w_, ws_):
+        wj = w_.reshape((-1, 1)).astype(jnp.float32)
+        contrib = jnp.sum(wj * isl.astype(jnp.float32), axis=0)
+        return (ws_ * s.astype(jnp.float32) + contrib).astype(s.dtype)
+
+    if mesh is None:
+        return local(server_buf, islands_buf, w, w_s)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as SP
+    return shard_map(local, mesh=mesh,
+                     in_specs=(SP(shard_axis), SP(None, shard_axis),
+                               SP(), SP()),
+                     out_specs=SP(shard_axis), check_rep=False)(
+        server_buf, islands_buf, w, jnp.asarray(w_s, jnp.float32))
+
+
+def assimilate_islands_per_leaf(server, islands, w, w_s):
+    """Pre-ShardedFlat reference: the per-leaf tree.map merge make_vc_round
+    used before the assimilation moved onto the flat bus.  Retained as the
+    bit-exactness oracle (tests/test_sharded_flat.py)."""
+    n_pods = jax.tree.leaves(islands)[0].shape[0]
+
+    def merge(s, isl):
+        wi = w.reshape((n_pods,) + (1,) * (isl.ndim - 1)).astype(jnp.float32)
+        contrib = jnp.sum(jnp.where(wi > 0.0,
+                                    wi * isl.astype(jnp.float32), 0.0),
+                          axis=0)
+        return (w_s * s.astype(jnp.float32) + contrib).astype(s.dtype)
+
+    return jax.tree.map(merge, server, islands)
+
+
 def make_vc_round(model: Model, plan: MeshPlan, n_pods: int,
                   local_steps: int = 4, optimizer=None,
-                  clip_norm: float = 1.0, pod_axis: str = "pod"):
+                  clip_norm: float = 1.0, pod_axis: str = "pod",
+                  flat_shard_axis: Optional[str] = None,
+                  use_kernel: bool = False):
     """Returns vc_round(server, islands, opts, batches, alpha, survivors)
     -> (server', islands', opts', metrics).
 
     islands/opts carry a leading [n_pods] dim; batches carry
-    [n_pods, local_steps, ...]."""
+    [n_pods, local_steps, ...].
+
+    Assimilation rides the FLAT bus: the trained islands are flattened
+    once into a [n_pods, padded] matrix, the server once onto the same
+    layout, and Eq. 2 is ONE masked weighted reduction over contiguous
+    buffers (``assimilate_flat``) instead of a per-leaf tree walk — the
+    same code path as the simulator's schemes.  With ``flat_shard_axis``
+    set (a mesh axis of ``plan.mesh``), the buffers are padded so every
+    device owns a contiguous BLOCK-multiple segment and the reduction
+    runs per shard under shard_map with no gather."""
     optimizer = optimizer or Adam(lr=3e-4)
+    from repro.core import flat as F
+    pad_to = F.BLOCK
+    mesh = None
+    if flat_shard_axis is not None:
+        mesh = plan.mesh
+        pad_to = F.BLOCK * int(mesh.shape[flat_shard_axis])
 
     def local_train(params, opt_state, steps_batch):
         """k local steps on one island (scan over steps)."""
@@ -71,19 +150,15 @@ def make_vc_round(model: Model, plan: MeshPlan, n_pods: int,
     def vc_round(server, islands, opts, batches, alpha, survivors):
         # 1) island-local training, no cross-pod sync
         islands, opts, losses = jax.vmap(local_train)(islands, opts, batches)
-        # 2) Eq. 2 assimilation over the pod axis (one fused reduction)
+        # 2) Eq. 2 assimilation on the flat bus: flatten at the boundary
+        #    (once per round), reduce contiguous segments, zero leaf loops
         w, w_s = island_weights(n_pods, alpha, survivors)
-
-        def merge(s, isl):
-            wi = w.reshape((n_pods,) + (1,) * (isl.ndim - 1)).astype(jnp.float32)
-            # select-before-multiply: a dead island may hold inf/nan (it
-            # crashed mid-step) and 0 * inf would poison the server
-            contrib = jnp.sum(jnp.where(wi > 0.0,
-                                        wi * isl.astype(jnp.float32), 0.0),
-                              axis=0)
-            return (w_s * s.astype(jnp.float32) + contrib).astype(s.dtype)
-
-        server = jax.tree.map(merge, server, islands)
+        isl_buf, spec = F.flatten_batched(islands, pad_to=pad_to)
+        s_buf = F.flatten_like(server, spec)
+        out_buf = assimilate_flat(s_buf, isl_buf, w, w_s, mesh=mesh,
+                                  shard_axis=flat_shard_axis,
+                                  use_kernel=use_kernel)
+        server = F.unflatten(F.FlatParams(out_buf, spec))
         # 3) redistribution: every island restarts from the server snapshot
         islands = jax.tree.map(
             lambda s, isl: jnp.broadcast_to(s[None], isl.shape).astype(isl.dtype),
@@ -114,7 +189,8 @@ def island_shardings(model: Model, plan: MeshPlan, n_pods: int,
 
 
 def compressed_assimilate(server, islands, alpha, survivors, *,
-                          density: float = 0.05, residuals=None):
+                          density: float = 0.05, residuals=None,
+                          transport=None):
     """Delta-form Eq. 2 with GLOBAL (whole-model) top-k + int8 compression
     and error feedback — what actually crosses the DCN between pods.
 
@@ -125,7 +201,12 @@ def compressed_assimilate(server, islands, alpha, survivors, *,
     contiguous buffer.  One compression + one accumulate per island instead
     of the per-leaf × per-island loop.  Returns (server', residuals') with
     the same tree-in/tree-out contract as before (residuals island-major).
-    """
+
+    With ``transport`` set (transfer/transport.py), each island's payload
+    really crosses the wire: encoded to bytes (wire format v1), sent,
+    received and decoded before assimilation — the transport's stats then
+    hold the REAL per-round transfer sizes.  (Host-level path: call it
+    eagerly, not under jit.)"""
     from repro.core import compression as C
     from repro.core import flat as F
     n = islands_leading_dim(islands)
@@ -146,6 +227,11 @@ def compressed_assimilate(server, islands, alpha, survivors, *,
         payload, r = C.compress_flat(
             delta, density=density, logical_n=spec.n,
             residual=None if res_buf is None else res_buf[j])
+        if transport is not None:
+            from repro.transfer import wire
+            mid = transport.send(wire.encode_sparse(
+                payload, residual_norm=float(jnp.linalg.norm(r))))
+            payload = wire.decode(transport.recv(mid)).payload
         deq = C.decompress_flat(payload)
         out = out + w[j] * (s32 + deq)
         new_res.append(r)
@@ -159,8 +245,9 @@ def compressed_assimilate(server, islands, alpha, survivors, *,
 
 def compressed_assimilate_per_leaf(server, islands, alpha, survivors, *,
                                    density: float = 0.05, residuals=None):
-    """Pre-flat reference: per-leaf top-k in a per-leaf × per-island Python
-    loop.  Kept as the numerical/perf baseline for the flat path (see
+    """TEST/BENCH ORACLE ONLY (retired from every runtime path): per-leaf
+    top-k in a per-leaf × per-island Python loop.  Kept as the
+    numerical/perf baseline for the flat path (tests/test_flat.py,
     benchmarks/kernel_bench.py::bench_flat_assimilate); compresses worse
     than the global top-k at equal density."""
     from repro.core import compression as C

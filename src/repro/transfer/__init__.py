@@ -1,0 +1,22 @@
+"""Cross-pod transfer layer: versioned wire format + transports.
+
+``wire`` encodes FlatParams payloads (dense buffers or compress_flat
+top-k + int8 deltas) into self-describing checksummed byte frames;
+``transport`` carries them.  The simulator and the pod schemes put REAL
+bytes on the wire through this package — transfer sizes are measured,
+not assumed.
+"""
+from repro.transfer.transport import (LoopbackTransport, TransportError,
+                                      TransportStats)
+from repro.transfer.wire import (HEADER_BYTES, KIND_DENSE, KIND_SPARSE,
+                                 WIRE_VERSION, WireError, WireMessage,
+                                 decode, dense_frame_bytes, encode,
+                                 encode_dense, encode_sparse,
+                                 sparse_frame_bytes)
+
+__all__ = [
+    "LoopbackTransport", "TransportError", "TransportStats",
+    "HEADER_BYTES", "KIND_DENSE", "KIND_SPARSE", "WIRE_VERSION",
+    "WireError", "WireMessage", "decode", "dense_frame_bytes", "encode",
+    "encode_dense", "encode_sparse", "sparse_frame_bytes",
+]

@@ -1,0 +1,70 @@
+"""Transports that carry wire frames (transfer/wire.py) between client and
+server.
+
+``LoopbackTransport`` is the in-memory reference implementation the
+simulator (core/simulator.py) and the pod schemes (core/baselines.py,
+runtime/vc_runtime.py::compressed_assimilate) ride: frames are addressed
+by message id (results travel concurrently and complete out of order, so
+a FIFO queue would mis-deliver), byte counts are the REAL encoded frame
+lengths, and a frame is only ever delivered once.  A production transport
+(gRPC / object store) implements the same three methods.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass
+class TransportStats:
+    frames_sent: int = 0
+    bytes_sent: int = 0
+    frames_recv: int = 0
+    bytes_recv: int = 0
+    frames_dropped: int = 0        # sent but never delivered (preemption,
+    bytes_dropped: int = 0         # timeout reassignment, torn frames)
+
+
+class TransportError(RuntimeError):
+    pass
+
+
+@dataclass
+class LoopbackTransport:
+    """In-memory message-id-addressed transport with real byte accounting."""
+
+    stats: TransportStats = field(default_factory=TransportStats)
+    _inflight: Dict[int, bytes] = field(default_factory=dict)
+    _ids: "itertools.count" = field(default_factory=itertools.count)
+
+    def send(self, frame: bytes) -> int:
+        """Put one encoded frame on the wire; returns its message id."""
+        if not isinstance(frame, (bytes, bytearray)):
+            raise TypeError(f"transport carries bytes, got {type(frame)}")
+        mid = next(self._ids)
+        self._inflight[mid] = bytes(frame)
+        self.stats.frames_sent += 1
+        self.stats.bytes_sent += len(frame)
+        return mid
+
+    def recv(self, msg_id: int) -> bytes:
+        """Take delivery of a frame (exactly once)."""
+        frame = self._inflight.pop(msg_id, None)
+        if frame is None:
+            raise TransportError(f"no in-flight frame with id {msg_id}")
+        self.stats.frames_recv += 1
+        self.stats.bytes_recv += len(frame)
+        return frame
+
+    def drop(self, msg_id: int) -> None:
+        """Discard an in-flight frame (the sender died / the result timed
+        out); the bytes were still spent."""
+        frame = self._inflight.pop(msg_id, None)
+        if frame is not None:
+            self.stats.frames_dropped += 1
+            self.stats.bytes_dropped += len(frame)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._inflight)

@@ -1,0 +1,196 @@
+"""Wire format v1 — what a FlatParams payload looks like as BYTES.
+
+Until now the cross-pod payloads (full flat buffers, or the compress_flat
+top-k + int8 deltas of core/compression.py) only ever existed as device
+arrays, and "bytes on the wire" was a number the simulator made up
+(``SimConfig.param_bytes``).  This module makes the bytes real: every
+payload is encoded into a self-describing, versioned, checksummed frame
+that an actual transport (transfer/transport.py) can carry, and whose
+length IS the transfer size.
+
+Frame layout (little-endian, fixed 68-byte header + body)::
+
+    magic    4s   b"VCWF"
+    version  u16  wire format version (this module speaks 1)
+    kind     u8   0 = DENSE (raw flat buffer), 1 = SPARSE (top-k + int8)
+    dtype    u8   dense payload dtype code (0=f32, 1=bf16, 2=f16)
+    n        u64  logical element count of the (padded) flat buffer
+    k        u64  surviving elements (dense: == n)
+    block    u32  int8 quantization block (sparse; dense: 0)
+    density  f32  sparse density budget (dense: 1.0)
+    round    u32  error-feedback round counter (bookkeeping)
+    res_norm f32  l2 norm of the residual carried AFTER this payload
+                  (error-feedback bookkeeping: the receiver can monitor
+                  how much update mass is still in flight client-side)
+    len_val  u64  byte length of the values section
+    len_scl  u64  byte length of the scales section
+    len_idx  u64  byte length of the indices section
+    crc      u32  crc32 over header-sans-crc || body — a bit flip ANYWHERE
+                  in the frame (including the n/k/density header fields)
+                  fails the checksum, not just body corruption
+
+Versioning rules: the magic/version pair is checked FIRST; a decoder
+rejects frames with a version newer than it speaks (no silent best-effort
+parsing), and any v1 field may only be reinterpreted by bumping the
+version.  Truncated, oversized, or bit-flipped frames fail the
+length/crc checks and raise ``WireError`` — a torn transfer is never
+assimilated (the paper's fault-tolerance requirement: dropping a payload
+is always safe, applying a corrupt one never is).
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import CompressedDelta
+
+MAGIC = b"VCWF"
+WIRE_VERSION = 1
+
+KIND_DENSE = 0
+KIND_SPARSE = 1
+
+_HDR = struct.Struct("<4sHBBQQIfIfQQQ")      # header minus the crc field
+_CRC = struct.Struct("<I")
+HEADER_BYTES = _HDR.size + _CRC.size
+
+
+def _frame(header_wo_crc: bytes, body: bytes) -> bytes:
+    """Assemble a frame: crc covers header-sans-crc || body, so a flip in
+    ANY field (not just the payload) fails validation."""
+    return (header_wo_crc
+            + _CRC.pack(zlib.crc32(body, zlib.crc32(header_wo_crc)))
+            + body)
+
+_DTYPE_CODES = {"float32": 0, "bfloat16": 1, "float16": 2}
+_CODE_DTYPES = {v: k for k, v in _DTYPE_CODES.items()}
+
+
+class WireError(ValueError):
+    """Frame failed validation (magic/version/length/crc) — do NOT
+    assimilate anything from it."""
+
+
+class WireMessage(NamedTuple):
+    kind: int                     # KIND_DENSE | KIND_SPARSE
+    payload: Union[np.ndarray, CompressedDelta]
+    round: int                    # error-feedback round counter
+    residual_norm: float          # client-side residual mass after sending
+
+
+def dense_frame_bytes(n: int, dtype: str = "float32") -> int:
+    """Exact frame length of a dense buffer payload."""
+    itemsize = 2 if dtype in ("bfloat16", "float16") else 4
+    return HEADER_BYTES + n * itemsize
+
+
+def sparse_frame_bytes(k: int, block: int = 256) -> int:
+    """Exact frame length of a top-k + int8 payload: k int8 values,
+    ceil(k/block) f32 scales, k int32 indices."""
+    return HEADER_BYTES + k + (-(-k // block)) * 4 + k * 4
+
+
+def _host(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x))
+
+
+def _dense_bytes(buf: np.ndarray):
+    name = str(buf.dtype)
+    if name == "bfloat16":
+        return _DTYPE_CODES[name], buf.view(np.uint16).tobytes()
+    if name not in _DTYPE_CODES:
+        raise WireError(f"unsupported dense wire dtype {name}")
+    return _DTYPE_CODES[name], buf.tobytes()
+
+
+def encode_dense(buf, *, round: int = 0, residual_norm: float = 0.0) -> bytes:
+    """Encode a full flat buffer (the uncompressed payload kind)."""
+    arr = _host(buf).reshape(-1)
+    code, raw = _dense_bytes(arr)
+    header = _HDR.pack(MAGIC, WIRE_VERSION, KIND_DENSE, code,
+                       arr.size, arr.size, 0, 1.0,
+                       int(round), float(residual_norm),
+                       len(raw), 0, 0)
+    return _frame(header, raw)
+
+
+def encode_sparse(p: CompressedDelta, *, round: int = 0,
+                  residual_norm: float = 0.0) -> bytes:
+    """Encode a compress_flat payload (global top-k + int8)."""
+    vals = _host(p.values).astype(np.int8)
+    scls = _host(p.scales).astype(np.float32)
+    idxs = _host(p.indices).astype(np.int32)
+    n = 1
+    for s in p.shape:
+        n *= int(s)
+    v_raw, s_raw, i_raw = vals.tobytes(), scls.tobytes(), idxs.tobytes()
+    body = v_raw + s_raw + i_raw
+    header = _HDR.pack(MAGIC, WIRE_VERSION, KIND_SPARSE, 0,
+                       n, vals.size, int(p.block), float(p.density),
+                       int(round), float(residual_norm),
+                       len(v_raw), len(s_raw), len(i_raw))
+    return _frame(header, body)
+
+
+def encode(payload, *, round: int = 0, residual_norm: float = 0.0) -> bytes:
+    """Dispatch on payload type: buffers go dense, CompressedDelta sparse."""
+    if isinstance(payload, CompressedDelta):
+        return encode_sparse(payload, round=round, residual_norm=residual_norm)
+    return encode_dense(payload, round=round, residual_norm=residual_norm)
+
+
+def decode(frame: bytes) -> WireMessage:
+    """Validate and decode one frame.  Raises WireError on ANY structural
+    problem — short frame, bad magic, unknown version, length mismatch,
+    crc mismatch — so a torn transfer can never be assimilated."""
+    if len(frame) < HEADER_BYTES:
+        raise WireError(f"frame too short: {len(frame)} < {HEADER_BYTES}")
+    (magic, version, kind, dcode, n, k, block, density, rnd, res_norm,
+     len_v, len_s, len_i) = _HDR.unpack_from(frame)
+    (crc,) = _CRC.unpack_from(frame, _HDR.size)
+    if magic != MAGIC:
+        raise WireError(f"bad magic {magic!r}")
+    if version > WIRE_VERSION:
+        raise WireError(f"wire version {version} newer than spoken "
+                        f"{WIRE_VERSION}")
+    body = frame[HEADER_BYTES:]
+    if len(body) != len_v + len_s + len_i:
+        raise WireError(f"torn frame: body {len(body)}B != declared "
+                        f"{len_v + len_s + len_i}B")
+    if zlib.crc32(body, zlib.crc32(frame[:_HDR.size])) != crc:
+        raise WireError("crc mismatch (corrupt frame)")
+    if kind == KIND_DENSE:
+        dtype = _CODE_DTYPES.get(dcode)
+        if dtype is None:
+            raise WireError(f"unknown dense dtype code {dcode}")
+        if dtype == "bfloat16":
+            arr = np.frombuffer(body, np.uint16).view(jnp.bfloat16)
+        else:
+            arr = np.frombuffer(body, np.dtype(dtype))
+        if arr.size != n:
+            raise WireError(f"dense payload {arr.size} elements != "
+                            f"declared n={n}")
+        return WireMessage(KIND_DENSE, arr, rnd, res_norm)
+    if kind == KIND_SPARSE:
+        vals = np.frombuffer(body[:len_v], np.int8)
+        scls = np.frombuffer(body[len_v:len_v + len_s], np.float32)
+        idxs = np.frombuffer(body[len_v + len_s:], np.int32)
+        if vals.size != k or idxs.size != k:
+            raise WireError(f"sparse sections disagree with k={k}: "
+                            f"{vals.size} values / {idxs.size} indices")
+        if block <= 0 or scls.size != -(-k // block):
+            raise WireError(f"scale count {scls.size} != ceil({k}/{block})")
+        if k > n:
+            raise WireError(f"k={k} exceeds buffer length n={n}")
+        payload = CompressedDelta(values=jnp.asarray(vals),
+                                  scales=jnp.asarray(scls),
+                                  indices=jnp.asarray(idxs),
+                                  shape=(int(n),), density=float(density),
+                                  block=int(block))
+        return WireMessage(KIND_SPARSE, payload, rnd, res_norm)
+    raise WireError(f"unknown frame kind {kind}")

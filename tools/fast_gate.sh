@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Fast iteration gate: the full tier-1 suite minus the slow-marked
+# multi-device subprocess spawns and the real-SIGKILL fault-injection
+# test (markers registered in pytest.ini).  PYTHONPATH is preset so it
+# runs from any checkout without installation.
+#
+#   tools/fast_gate.sh            # -m "not slow"
+#   tools/fast_gate.sh -k wire    # extra pytest args pass through
+#
+# The full gate (everything, including slow) is:
+#   PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -m "not slow" "$@"
