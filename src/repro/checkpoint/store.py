@@ -319,6 +319,24 @@ class CheckpointManager:
             return None
         return int(ckpts[-1].stem.split("_")[1])
 
+    # -- protocol server checkpoints (protocol/coordinator.py hooks) --------
+    # the durable VC state is (server params, version): params ride the
+    # one-pass flat path, the version counter rides the header.  Leases
+    # and residuals are deliberately not persisted — in-flight work is
+    # disposable by design and a restarted coordinator reissues it.
+
+    def save_server(self, step: int, fp, version: int,
+                    extra: Optional[Dict] = None) -> None:
+        e = dict(extra or {})
+        e["server_version"] = int(version)
+        self.save(step, fp, e)
+
+    def restore_server_or_init(self, like, init_fn):
+        """Resume (params, version) from the newest checkpoint or init
+        fresh.  Returns (params, version, step)."""
+        tree, extra, step = self.restore_or_init(like, init_fn)
+        return tree, int(extra.get("server_version", 0)), step
+
     def restore_or_init(self, tree_like, init_fn):
         """Resume from the newest checkpoint or initialize fresh.
         Returns (tree, extra, step)."""

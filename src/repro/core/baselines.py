@@ -1,11 +1,15 @@
 """Server parameter-update schemes: VC-ASGD plus every baseline the paper
-discusses (§II-B, §III-C), behind one interface the simulator drives.
+discusses (§II-B, §III-C), on the typed protocol API (repro.protocol).
 
-Server state rides the flat bus (core/flat.py): ``state["params"]`` is a
-``FlatParams`` — ONE contiguous buffer — so every scheme's update is a
-single fused pass over the whole model, the same code path the pod-scale
-runtime uses (core/vc_asgd.py flat forms).  Clients remain tree-world
-(they train real models); payloads are flattened once at assimilation.
+Every scheme is a pure algorithm folded over a typed, pytree-registered
+``SchemeState`` (``state.params`` rides the FlatParams bus — ONE
+contiguous buffer, so every update is a single fused pass over the whole
+model).  The protocol bookkeeping the old ``ServerScheme`` accreted —
+handout dicts, drop hooks, residual-norm ledgers — lives in the
+``Coordinator`` now; reconstruction bases arrive on the lease
+(``ResultMeta.base``), client-side compression is the pure
+``encode_payload``, and schemes keep only genuinely algorithmic state
+(replicas, backups, barrier buffers) in their state dataclasses.
 
 * VC-ASGD    — Eq. 1 lerp per arriving result; alpha schedule per epoch.
 * Downpour   — clients push accumulated deltas (n_push == one subtask), the
@@ -20,51 +24,26 @@ runtime uses (core/vc_asgd.py flat forms).  Clients remain tree-world
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Set
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import flat as F
 from repro.core import vc_asgd as V
+# the import direction is protocol -> baselines consumers: baselines
+# depends on the protocol types, never the other way around.  ResultMeta /
+# as_flat / as_tree are re-exported for older call sites.
+from repro.protocol.scheme import ServerScheme
+from repro.protocol.types import (Lease, ResultMeta, SchemeState, as_flat,
+                                  as_tree, scheme_state)
 
-
-@dataclass
-class ResultMeta:
-    cid: int
-    unit_uid: int
-    epoch: int
-    shard: int
-    read_version: int          # server version the client started from
-    server_version: int        # server version at assimilation time
-    t_arrival: float = 0.0
-
-    @property
-    def staleness(self) -> int:
-        return max(0, self.server_version - self.read_version)
-
-
-def as_flat(params) -> F.FlatParams:
-    """Coerce a tree onto the flat bus (no-op for FlatParams)."""
-    return params if isinstance(params, F.FlatParams) else F.flatten(params)
-
-
-def as_tree(params):
-    """Inverse boundary: what clients/evaluators consume."""
-    return F.unflatten(params) if isinstance(params, F.FlatParams) else params
-
-
-def _payload_buf(fp: F.FlatParams, payload) -> jnp.ndarray:
-    """Boundary-only conversion: a payload still in tree form is flattened
-    exactly ONCE here; flat payloads (the simulator's hot path — it
-    flattens the trained tree once per result and every scheme then works
-    on buffers) pass through untouched."""
-    if isinstance(payload, F.FlatParams):
-        return payload.buf
-    if isinstance(payload, jnp.ndarray):
-        return payload
-    return F.flatten_like(payload, fp.spec)
+__all__ = [
+    "ServerScheme", "SchemeState", "ResultMeta", "as_flat", "as_tree",
+    "VCASGD", "CompressedVCASGD", "Downpour", "DCASGD", "EASGDPersistent",
+    "EASGDFlatPod", "SyncBSP", "easgd_elastic_update",
+    "DCASGDState", "EASGDState", "PodState", "BSPState",
+]
 
 
 def easgd_elastic_update(center_buf: jnp.ndarray, replicas_buf: jnp.ndarray,
@@ -80,72 +59,6 @@ def easgd_elastic_update(center_buf: jnp.ndarray, replicas_buf: jnp.ndarray,
     return R.easgd_elastic(center_buf, replicas_buf, beta)
 
 
-class ServerScheme:
-    """Stateless-client contract: a client downloads server params, trains
-    on its shard, uploads a payload; the server assimilates payloads in
-    arrival order.  Fault tolerance == dropping any subset of payloads
-    leaves the server state valid.
-
-    ``state["params"]`` is a FlatParams; conversions happen at the BOUNDARY
-    only: the simulator unflattens once per dispatch (clients train real
-    trees) and flattens the trained tree once per result; ``payload_flat``
-    and ``assimilate`` then stay in buffer-world — a scheme performs ZERO
-    tree<->bus conversions per round (core/flat.py counts them;
-    tests/test_simulator.py pins the per-result budget)."""
-
-    name = "base"
-    requires_all_clients = False    # True -> not fault tolerant (BSP/EASGD-p)
-    has_local_replicas = False      # True -> params_for_client needs the cid
-
-    def init_state(self, params0) -> Dict[str, Any]:
-        return {"params": as_flat(params0), "version": 0}
-
-    def params_for_client(self, state, cid: Optional[int] = None):
-        return state["params"]
-
-    def client_payload(self, trained, start):
-        """Tree-world legacy form of ``payload_flat`` (kept for direct
-        scheme use outside the simulator). Default: full weights."""
-        return trained
-
-    def payload_flat(self, trained_buf: jnp.ndarray, start: F.FlatParams,
-                     *, cid: Optional[int] = None):
-        """What travels client -> server, on the bus: ``trained_buf`` is
-        the trained tree flattened once at the boundary, ``start`` the
-        flat params the client trained from.  The return value is what
-        gets wire-encoded (transfer/wire.py): a raw buffer ships as a
-        dense frame, a CompressedDelta as a sparse one.  ``cid`` lets
-        compressed schemes keep per-client error-feedback residuals.
-        Default: full weights."""
-        return trained_buf
-
-    def assimilate(self, state, payload, meta: ResultMeta) -> Dict[str, Any]:
-        raise NotImplementedError
-
-    def on_epoch(self, state, epoch: int) -> None:
-        pass
-
-    def drop_client(self, cid: int) -> None:
-        """Preemption hook: schemes with client-local state lose it here."""
-
-    def note_handout(self, cid: int, params, uid: Optional[int] = None) -> None:
-        """Hook: the server handed ``params`` to client ``cid`` for work
-        unit ``uid`` (DC-ASGD keeps them as the delay-compensation backup;
-        compressed schemes key the delta-reconstruction base by uid)."""
-
-    def drop_result(self, cid: int, uid: Optional[int] = None) -> None:
-        """Hook: unit ``uid``'s in-flight result was discarded (timeout
-        reassignment or mid-upload death) — schemes release any per-unit
-        state noted at handout, or it would leak one [padded] buffer per
-        discarded result."""
-
-    def residual_norm(self, cid: Optional[int] = None) -> float:
-        """Error-feedback bookkeeping for the wire header: l2 norm of the
-        residual the client carries after its latest payload (0.0 for
-        uncompressed schemes)."""
-        return 0.0
-
-
 class VCASGD(ServerScheme):
     def __init__(self, alpha: float | Callable[[int], float] = 0.95,
                  staleness_gamma: Optional[float] = None):
@@ -157,10 +70,10 @@ class VCASGD(ServerScheme):
         a = self.alpha(meta.epoch)
         if self.staleness_gamma is not None:
             a = V.staleness_alpha(a, meta.staleness, self.staleness_gamma)
-        fp = as_flat(state["params"])
-        c_buf = _payload_buf(fp, payload)
-        state["params"] = V.vc_asgd_update_flat(fp, c_buf, a)
-        state["version"] += 1
+        fp = state.params
+        c_buf = self._payload_buf(fp, payload)
+        state.params = V.vc_asgd_update_flat(fp, c_buf, a)
+        state.version += 1
         return state
 
 
@@ -170,103 +83,102 @@ class CompressedVCASGD(VCASGD):
     core/compression.py) instead of the full weight buffer — the payload
     that actually rides the wire as a SPARSE frame (transfer/wire.py).
 
-    The client compresses (trained - start) with its carried residual; the
-    server reconstructs W_c = start + dequantized delta from the copy it
-    handed out for that unit (keyed by uid — with Tn concurrent subtasks a
-    per-client key would be clobbered by the next handout) and assimilates
-    via the ordinary Eq. 1 lerp.  A preempted client loses its residual
-    (it lived client-side), which error feedback tolerates by design."""
+    ``encode_payload`` is pure: it compresses (trained - base) with the
+    residual the Coordinator carries for the client; the server
+    reconstructs W_c = base + dequantized delta from the lease's
+    reconstruction-base ref (``meta.base`` — keyed per lease, so Tn
+    concurrent subtasks can't clobber each other) and assimilates via the
+    ordinary Eq. 1 lerp.  A preempted client loses its residual (the
+    Coordinator drops it with the client), which error feedback tolerates
+    by design."""
 
     def __init__(self, alpha=0.95, density: float = 0.05,
                  staleness_gamma: Optional[float] = None):
         super().__init__(alpha, staleness_gamma)
         self.density = density
         self.name = "vc-asgd-compressed"
-        self._handout: Dict[tuple, jnp.ndarray] = {}    # (cid, uid) -> buf
-        self._residuals: Dict[int, jnp.ndarray] = {}    # cid -> [padded]
-        self._res_norms: Dict[int, float] = {}          # cid -> l2 norm
 
-    def note_handout(self, cid: int, params, uid: Optional[int] = None):
-        self._handout[(cid, uid)] = as_flat(params).buf
-
-    def drop_result(self, cid: int, uid: Optional[int] = None) -> None:
-        self._handout.pop((cid, uid), None)
-
-    def residual_norm(self, cid: Optional[int] = None) -> float:
-        return self._res_norms.get(cid, 0.0)
-
-    def payload_flat(self, trained_buf, start: F.FlatParams, *,
-                     cid: Optional[int] = None):
+    def encode_payload(self, trained_buf, base: F.FlatParams, residual):
         from repro.core import compression as C
-        delta = trained_buf - start.buf
-        payload, res = C.compress_flat(delta, density=self.density,
-                                       logical_n=start.spec.n,
-                                       residual=self._residuals.get(cid))
-        if cid is not None:
-            self._residuals[cid] = res
-            self._res_norms[cid] = float(jnp.linalg.norm(res))
-        return payload
+        delta = trained_buf - base.buf
+        return C.compress_flat(delta, density=self.density,
+                               logical_n=base.spec.n, residual=residual)
 
     def assimilate(self, state, payload, meta: ResultMeta):
         from repro.core import compression as C
-        fp = as_flat(state["params"])
         if isinstance(payload, C.CompressedDelta):
-            base = self._handout.pop((meta.cid, meta.unit_uid), fp.buf)
+            base = (meta.base.buf if meta.base is not None
+                    else state.params.buf)
             payload = base + C.decompress_flat(payload)
         return super().assimilate(state, payload, meta)
 
-    def drop_client(self, cid: int) -> None:
-        self._residuals.pop(cid, None)
-        self._res_norms.pop(cid, None)
-        for key in [k for k in self._handout if k[0] == cid]:
-            self._handout.pop(key, None)
-
 
 class Downpour(ServerScheme):
-    """Client sends delta = trained - start (the accumulated update of its
+    """Client sends delta = trained - base (the accumulated update of its
     n_push local iterations); server adds it, Hogwild-style."""
 
     def __init__(self, server_lr: float = 1.0):
         self.server_lr = server_lr
         self.name = "downpour"
 
-    def client_payload(self, trained, start):
-        return jax.tree.map(lambda t, s: t - s, trained, start)
-
-    def payload_flat(self, trained_buf, start: F.FlatParams, *,
-                     cid: Optional[int] = None):
-        return trained_buf - start.buf
+    def encode_payload(self, trained_buf, base: F.FlatParams, residual):
+        return trained_buf - base.buf, None
 
     def assimilate(self, state, payload, meta: ResultMeta):
-        fp = as_flat(state["params"])
-        d_buf = _payload_buf(fp, payload)
-        state["params"] = fp.with_buf(fp.buf + self.server_lr * d_buf)
-        state["version"] += 1
+        fp = state.params
+        d_buf = self._payload_buf(fp, payload)
+        state.params = fp.with_buf(fp.buf + self.server_lr * d_buf)
+        state.version += 1
         return state
 
 
+@scheme_state
+@dataclass
+class DCASGDState(SchemeState):
+    """Downpour state + the per-client delay-compensation backups (the
+    LATEST handout per client, per Zheng et al.'s one-outstanding-task
+    formulation — deliberately not per lease)."""
+
+    _tree_fields = ("params", "backups")
+
+    backups: Dict[int, F.FlatParams] = field(default_factory=dict)
+
+
 class DCASGD(Downpour):
-    """Delay-compensated: server keeps the per-client backup of the params
-    it handed out; the compensation term uses (W_now - W_backup)."""
+    """Delay-compensated: the per-client backup of the latest handed-out
+    params is recorded at lease issue (``on_issue``); the compensation
+    term uses (W_now - W_backup)."""
 
     def __init__(self, server_lr: float = 1.0, lam: float = 0.1):
         super().__init__(server_lr)
         self.lam = lam
         self.name = "dc-asgd"
-        self._backups: Dict[int, F.FlatParams] = {}
 
-    def note_handout(self, cid: int, params, uid: Optional[int] = None):
-        self._backups[cid] = as_flat(params)
+    def init_state(self, params0) -> DCASGDState:
+        return DCASGDState(params=as_flat(params0))
 
-    def assimilate(self, state, payload, meta: ResultMeta):
-        fp = as_flat(state["params"])
-        backup = as_flat(self._backups.get(meta.cid, fp))
+    def on_issue(self, state: DCASGDState, lease: Lease) -> None:
+        state.backups[lease.cid] = lease.base
+
+    def assimilate(self, state: DCASGDState, payload, meta: ResultMeta):
+        fp = state.params
+        backup = state.backups.get(meta.cid, fp)
         # payload is a delta ~ -lr * accumulated grad; compensate elementwise
-        d = _payload_buf(fp, payload)
+        d = self._payload_buf(fp, payload)
         comp = d + self.lam * d * d * jnp.sign(d) * (fp.buf - backup.buf)
-        state["params"] = fp.with_buf(fp.buf + self.server_lr * comp)
-        state["version"] += 1
+        state.params = fp.with_buf(fp.buf + self.server_lr * comp)
+        state.version += 1
         return state
+
+
+@scheme_state
+@dataclass
+class EASGDState(SchemeState):
+    """Elastic center (``params``) + persistent per-client replicas."""
+
+    _tree_fields = ("params", "replicas")
+
+    replicas: Dict[int, F.FlatParams] = field(default_factory=dict)
 
 
 class EASGDPersistent(ServerScheme):
@@ -282,24 +194,41 @@ class EASGDPersistent(ServerScheme):
     def __init__(self, beta: float = 0.001):
         self.beta = beta
         self.name = "easgd-persistent"
-        self.replicas: Dict[int, F.FlatParams] = {}
 
-    def params_for_client(self, state, cid: Optional[int] = None):
-        if cid is not None and cid in self.replicas:
-            return self.replicas[cid]
-        return state["params"]
+    def init_state(self, params0) -> EASGDState:
+        return EASGDState(params=as_flat(params0))
 
-    def assimilate(self, state, payload, meta: ResultMeta):
-        center = as_flat(state["params"])
-        x_buf = _payload_buf(center, payload)
+    def handout(self, state: EASGDState, cid: int, default):
+        return state.replicas.get(cid, state.params)
+
+    def assimilate(self, state: EASGDState, payload, meta: ResultMeta):
+        center = state.params
+        x_buf = self._payload_buf(center, payload)
         diff = x_buf - center.buf
-        state["params"] = center.with_buf(center.buf + self.beta * diff)
-        self.replicas[meta.cid] = center.with_buf(x_buf - self.beta * diff)
-        state["version"] += 1
+        state.params = center.with_buf(center.buf + self.beta * diff)
+        state.replicas[meta.cid] = center.with_buf(x_buf - self.beta * diff)
+        state.version += 1
         return state
 
-    def drop_client(self, cid: int) -> None:
-        self.replicas.pop(cid, None)       # preemption loses the replica
+    def drop_client(self, state: EASGDState, cid: int) -> None:
+        state.replicas.pop(cid, None)      # preemption loses the replica
+
+
+@scheme_state
+@dataclass
+class PodState(SchemeState):
+    """Pod-scale elastic state: center (``params``), ALL replicas as one
+    [n_replicas, padded] matrix, and the round-barrier bookkeeping.
+    ``pending`` buffers rows arriving mid-round (one entry per slot, like
+    BSP) and stacks ONCE at the barrier — updating the matrix per payload
+    would copy it n times per round."""
+
+    _tree_fields = ("params", "replicas", "pending")
+
+    replicas: Optional[jnp.ndarray] = None          # [n_replicas, padded]
+    pending: Dict[int, jnp.ndarray] = field(default_factory=dict)
+    lost: Set[int] = field(default_factory=set)     # restart from center
+    slot_owner: Dict[int, int] = field(default_factory=dict)
 
 
 class EASGDFlatPod(ServerScheme):
@@ -319,11 +248,11 @@ class EASGDFlatPod(ServerScheme):
     the barrier).
 
     With ``compress_density`` set the replica payload rides the wire as a
-    ``compress_flat`` SPARSE frame (top-k + int8 with per-slot error
-    feedback) instead of the dense buffer: the client compresses
-    (trained - start), the server reconstructs from the copy it handed
-    out for that unit.  A preempted slot loses its residual with its
-    replica."""
+    ``compress_flat`` SPARSE frame (top-k + int8 with per-client error
+    feedback, carried by the Coordinator) instead of the dense buffer:
+    ``encode_payload`` compresses (trained - base), the server
+    reconstructs from the lease's base ref.  A preempted client loses its
+    residual with its replica."""
 
     requires_all_clients = True
     has_local_replicas = True
@@ -336,20 +265,10 @@ class EASGDFlatPod(ServerScheme):
         self.use_kernel = use_kernel
         self.compress_density = compress_density
         self.name = "easgd-flat-pod"
-        self.replicas: Optional[jnp.ndarray] = None     # [n_replicas, padded]
-        # rows arriving mid-round buffer here (one dict entry per slot, like
-        # SyncBSP._buf) and stack ONCE at the barrier — updating the
-        # [n_replicas, N] matrix per payload would copy it n times per round
-        self._pending: Dict[int, jnp.ndarray] = {}
-        self._lost: set = set()            # preempted slots restart from center
-        self._slot_owner: Dict[int, int] = {}
-        self._handout: Dict[tuple, jnp.ndarray] = {}    # (slot, uid) -> buf
-        self._residuals: Dict[int, jnp.ndarray] = {}    # slot -> [padded]
-        self._res_norms: Dict[int, float] = {}          # slot -> l2 norm
 
-    def _slot(self, cid: int) -> int:
+    def _slot(self, state: PodState, cid: int) -> int:
         slot = cid % self.n_replicas
-        owner = self._slot_owner.setdefault(slot, cid)
+        owner = state.slot_owner.setdefault(slot, cid)
         if owner != cid:
             raise ValueError(
                 f"EASGDFlatPod needs one client per replica slot "
@@ -357,79 +276,62 @@ class EASGDFlatPod(ServerScheme):
                 f"cid {owner} on slot {slot}")
         return slot
 
-    def init_state(self, params0) -> Dict[str, Any]:
-        state = super().init_state(params0)
-        buf = state["params"].buf
-        self.replicas = jnp.tile(buf[None, :], (self.n_replicas, 1))
-        self._pending.clear()
-        self._lost.clear()
-        self._slot_owner.clear()
-        self._handout.clear()
-        self._residuals.clear()
-        self._res_norms.clear()
-        return state
+    def init_state(self, params0) -> PodState:
+        fp = as_flat(params0)
+        return PodState(params=fp,
+                        replicas=jnp.tile(fp.buf[None, :],
+                                          (self.n_replicas, 1)))
 
-    def params_for_client(self, state, cid: Optional[int] = None):
-        fp = state["params"]
-        if cid is None or self.replicas is None \
-                or self._slot(cid) in self._lost:
+    def handout(self, state: PodState, cid: int, default):
+        fp = state.params
+        if state.replicas is None or self._slot(state, cid) in state.lost:
             return fp
-        return fp.with_buf(self.replicas[self._slot(cid)])
+        return fp.with_buf(state.replicas[self._slot(state, cid)])
 
-    def note_handout(self, cid: int, params, uid: Optional[int] = None):
-        if self.compress_density is not None:
-            self._handout[(self._slot(cid), uid)] = as_flat(params).buf
-
-    def drop_result(self, cid: int, uid: Optional[int] = None) -> None:
-        self._handout.pop((self._slot(cid), uid), None)
-
-    def residual_norm(self, cid: Optional[int] = None) -> float:
-        return self._res_norms.get(self._slot(cid), 0.0) \
-            if cid is not None else 0.0
-
-    def payload_flat(self, trained_buf, start: F.FlatParams, *,
-                     cid: Optional[int] = None):
+    def encode_payload(self, trained_buf, base: F.FlatParams, residual):
         if self.compress_density is None:
-            return trained_buf
+            return trained_buf, None
         from repro.core import compression as C
-        slot = self._slot(cid)
-        delta = trained_buf - start.buf
-        payload, res = C.compress_flat(delta, density=self.compress_density,
-                                       logical_n=start.spec.n,
-                                       residual=self._residuals.get(slot))
-        self._residuals[slot] = res
-        self._res_norms[slot] = float(jnp.linalg.norm(res))
-        return payload
+        delta = trained_buf - base.buf
+        return C.compress_flat(delta, density=self.compress_density,
+                               logical_n=base.spec.n, residual=residual)
 
-    def assimilate(self, state, payload, meta: ResultMeta):
+    def assimilate(self, state: PodState, payload, meta: ResultMeta):
         from repro.core import compression as C
-        fp = as_flat(state["params"])
-        slot = self._slot(meta.cid)
+        fp = state.params
+        slot = self._slot(state, meta.cid)
         if isinstance(payload, C.CompressedDelta):
-            base = self._handout.pop((slot, meta.unit_uid), fp.buf)
+            base = (meta.base.buf if meta.base is not None else fp.buf)
             payload = base + C.decompress_flat(payload)
-        self._pending[slot] = _payload_buf(fp, payload)
-        self._lost.discard(slot)
-        if len(self._pending) == self.n_replicas:
-            stacked = jnp.stack([self._pending[s]
+        state.pending[slot] = self._payload_buf(fp, payload)
+        state.lost.discard(slot)
+        if len(state.pending) == self.n_replicas:
+            stacked = jnp.stack([state.pending[s]
                                  for s in range(self.n_replicas)])
-            center, self.replicas = easgd_elastic_update(
+            center, state.replicas = easgd_elastic_update(
                 fp.buf, stacked, self.beta, use_kernel=self.use_kernel)
-            state["params"] = fp.with_buf(center)
-            state["version"] += 1
-            self._pending.clear()
+            state.params = fp.with_buf(center)
+            state.version += 1
+            state.pending.clear()
         return state
 
-    def drop_client(self, cid: int) -> None:
-        if self.replicas is None:
+    def drop_client(self, state: PodState, cid: int) -> None:
+        if state.replicas is None:
             return
-        slot = self._slot(cid)
-        self._pending.pop(slot, None)      # the barrier re-waits for it
-        self._lost.add(slot)
-        self._residuals.pop(slot, None)    # residual lived with the replica
-        self._res_norms.pop(slot, None)
-        for key in [k for k in self._handout if k[0] == slot]:
-            self._handout.pop(key, None)
+        slot = self._slot(state, cid)
+        state.pending.pop(slot, None)      # the barrier re-waits for it
+        state.lost.add(slot)
+
+
+@scheme_state
+@dataclass
+class BSPState(SchemeState):
+    """Synchronous barrier buffer: weights per shard until the round is
+    complete."""
+
+    _tree_fields = ("params", "pending")
+
+    pending: Dict[int, jnp.ndarray] = field(default_factory=dict)
 
 
 class SyncBSP(ServerScheme):
@@ -443,14 +345,16 @@ class SyncBSP(ServerScheme):
     def __init__(self, n_shards: int):
         self.n_shards = n_shards
         self.name = "sync-bsp"
-        self._buf: Dict[int, jnp.ndarray] = {}
 
-    def assimilate(self, state, payload, meta: ResultMeta):
-        fp = as_flat(state["params"])
-        self._buf[meta.shard] = _payload_buf(fp, payload)
-        if len(self._buf) == self.n_shards:
-            stacked = jnp.stack(list(self._buf.values()))
-            state["params"] = fp.with_buf(stacked.mean(axis=0))
-            state["version"] += 1
-            self._buf.clear()
+    def init_state(self, params0) -> BSPState:
+        return BSPState(params=as_flat(params0))
+
+    def assimilate(self, state: BSPState, payload, meta: ResultMeta):
+        fp = state.params
+        state.pending[meta.shard] = self._payload_buf(fp, payload)
+        if len(state.pending) == self.n_shards:
+            stacked = jnp.stack(list(state.pending.values()))
+            state.params = fp.with_buf(stacked.mean(axis=0))
+            state.version += 1
+            state.pending.clear()
         return state

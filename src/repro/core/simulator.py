@@ -11,6 +11,11 @@ Everything the paper measures comes out of this one engine:
 * a WorkGenerator splitting the dataset into subtasks,
 * any ServerScheme (VC-ASGD or a baseline).
 
+The protocol plumbing — leases, residual ledger, wire encode/decode,
+transport — is owned by the ``Coordinator`` (repro.protocol); this loop
+only decides WHEN things happen (the discrete-event clock) and drives the
+same coordinator object a real runtime does (launch/vc_serve.py).
+
 ACCURACY IS REAL: clients run actual JAX training on actual data shards;
 only wall-clock time is simulated (from the paper's measured transfer
 sizes, §IV-D update latencies, and Table I instance speeds).  The virtual
@@ -28,14 +33,14 @@ import jax
 import numpy as np
 
 from repro.core import flat
-from repro.core.baselines import ResultMeta, ServerScheme, as_flat, as_tree
 from repro.core.consistency import EventualStore, StoreStats, StrongStore
 from repro.core.preemption import (ClientModel, LatencyModel, PreemptionModel,
                                    make_fleet)
 from repro.core.scheduler import Scheduler
 from repro.core.work_generator import WorkGenerator, split_dataset
+from repro.protocol import Coordinator, ServerScheme, as_flat, as_tree
 from repro.transfer import wire
-from repro.transfer.transport import LoopbackTransport, TransportStats
+from repro.transfer.transport import Transport, TransportStats
 
 
 @dataclass
@@ -97,6 +102,8 @@ class SimResult:
     wire: Optional[TransportStats] = None
     wire_dense_frames: int = 0
     wire_sparse_frames: int = 0
+    # final server-side SchemeState (typed; replicas/backups inspectable)
+    scheme_state: Any = None
 
     def acc_at_time(self, t: float) -> float:
         best = 0.0
@@ -112,8 +119,8 @@ _ARRIVE = "arrive"          # result lands at the web server
 _RESPAWN = "respawn"
 
 
-def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
-                   ) -> SimResult:
+def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
+                   *, transport: Optional[Transport] = None) -> SimResult:
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
 
@@ -140,7 +147,10 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
     params0 = as_flat(task.init_params(key))
     eventual = cfg.consistency == "eventual"
     store = EventualStore(params0) if eventual else StrongStore(params0)
-    state = scheme.init_state(params0)
+    # the Coordinator owns the protocol: scheme state, leases, residual
+    # ledger, wire encode/decode, transport.  This loop owns only time.
+    coord = Coordinator(scheme, params0, transport=transport,
+                        timeout_s=cfg.timeout_s)
     # parameter servers: independent serial processors sharing the store
     ps_busy = [0.0] * cfg.n_param_servers
     ps_rr = itertools.cycle(range(cfg.n_param_servers))
@@ -157,9 +167,6 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
 
     def push(t, kind, payload):
         heapq.heappush(events, (t, next(eid), kind, payload))
-
-    transport = LoopbackTransport()
-    wire_kinds = {wire.KIND_DENSE: 0, wire.KIND_SPARSE: 0}
 
     def dispatch(cid: int, now: float):
         """Client pulls work; schedule the upload start for each unit (the
@@ -193,7 +200,9 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
                 lost = sched.fail_client(c.cid, t_now)
                 if lost:
                     preemptions += 1
-                scheme.drop_client(c.cid)
+                # releases the client's leases (bases freed, in-flight
+                # frames dropped), its residual, and scheme-local state
+                coord.drop_client(c.cid)
                 c.spawn(t_now + cfg.restart_delay_s)
                 push(t_now + cfg.restart_delay_s, _RESPAWN, c.cid)
 
@@ -213,85 +222,91 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
                 dispatch(cid, t_now)
                 continue
 
-            # ---- client-side REAL training --------------------------------
+            # ---- the lease: every handout is explicit ---------------------
             # the client trained from the params it downloaded at dispatch
-            # time: the store snapshot as of t_dispatch.  Conversions happen
-            # at the boundary ONLY: one unflatten per dispatch (the client
-            # trains a real tree), one flatten per result (the trained tree
-            # onto the bus); the scheme then stays in buffer-world.
+            # time: the store snapshot as of t_dispatch (replica schemes
+            # substitute client-local state via scheme.handout).  The lease
+            # records the reconstruction-base ref, deadline and identity;
+            # DC-ASGD's backup hooks off on_issue.  (cid, uid) is fresh by
+            # construction: every timeout/failure reassignment mints a NEW
+            # uid (WorkGenerator.requeue), so a duplicate-issue LeaseError
+            # here would mean the scheduler leaked an assignment.
             base_fp, _ = store.read_at(t_dispatch)
+            lease = coord.issue(cid=cid, uid=unit.uid, round=unit.epoch,
+                                shard=unit.shard, read_version=read_version,
+                                base=base_fp, now=t_dispatch,
+                                deadline=unit.deadline)
+
+            # ---- client-side REAL training --------------------------------
+            # Conversions happen at the boundary ONLY: one unflatten per
+            # dispatch (the client trains a real tree), one flatten per
+            # result (the trained tree onto the bus); the scheme then stays
+            # in buffer-world.
             idx = shards[unit.shard]
-            if scheme.has_local_replicas:
-                base_fp = scheme.params_for_client(state, cid)
-            base_fp = as_flat(base_fp)
-            # DC-ASGD keeps the handed-out copy as its compensation backup;
-            # compressed schemes key their reconstruction base by unit uid
-            scheme.note_handout(cid, base_fp, uid=unit.uid)
-            base = as_tree(base_fp)
+            base = as_tree(lease.base)
             trained = task.client_train(
                 base, data.x_train[idx], data.y_train[idx],
                 steps=unit.local_steps * max(1, len(idx) // task.batch),
                 seed=cfg.seed * 1000003 + unit.uid)
-            trained_buf = flat.flatten_like(trained, base_fp.spec)
-            payload_w = scheme.payload_flat(trained_buf, base_fp, cid=cid)
+            trained_buf = flat.flatten_like(trained, lease.base.spec)
 
             # ---- the wire: REAL bytes, REAL upload time -------------------
-            # the payload is encoded to a wire-format frame and pushed
-            # through the transport; the upload leg's duration comes from
-            # the frame's actual length (cfg.upload_bytes overrides it for
-            # paper-calibrated figure reproductions).  round/residual_norm
-            # carry the error-feedback bookkeeping for the receiver.
-            frame = wire.encode(payload_w, round=unit.epoch,
-                                residual_norm=scheme.residual_norm(cid))
-            mid = transport.send(frame)
+            # submit() encodes the payload (applying error feedback) to a
+            # wire-format frame and pushes it through the transport; the
+            # upload leg's duration comes from the frame's actual length
+            # (cfg.upload_bytes overrides it for paper-calibrated figure
+            # reproductions).
+            coord.submit(lease, trained_buf)
             ul = client.transfer_time(cfg.upload_bytes
                                       if cfg.upload_bytes is not None
-                                      else len(frame))
-            push(t_now + ul, _ARRIVE, (cid, unit, read_version,
-                                       t_dispatch, mid))
+                                      else lease.frame_bytes)
+            push(t_now + ul, _ARRIVE, (cid, unit, lease))
             continue
 
         if kind == _ARRIVE:
-            cid, unit, read_version, t_dispatch, mid = payload
+            cid, unit, lease = payload
             client = fleet[cid]
             if cfg.preemptible and client.alive_until <= t_now:
-                transport.drop(mid)         # died mid-upload; bytes wasted
-                scheme.drop_result(cid, uid=unit.uid)
+                # died mid-upload; bytes wasted, lease released (the
+                # preemption sweep may already have dropped it — idempotent)
+                coord.drop(lease)
                 continue
             if unit.uid not in sched.inflight:
-                # timed out and reassigned while uploading; result discarded
-                transport.drop(mid)
-                scheme.drop_result(cid, uid=unit.uid)
+                # timed out and reassigned while uploading (or the lease
+                # was already released by the preemption sweep — fail_client
+                # and drop_client retire a cid's uids and leases together,
+                # and reassignments run under NEW uids, so a stale arrival
+                # always lands here); result discarded, drop is idempotent
+                coord.drop(lease)
                 dispatch(cid, t_now)
                 continue
             sched.complete(unit.uid, t_now)
             # take delivery: decode validates magic/version/length/crc —
             # a torn frame raises and is never assimilated
-            msg = wire.decode(transport.recv(mid))
-            wire_kinds[msg.kind] += 1
-            payload_w = (msg.payload if msg.kind == wire.KIND_SPARSE
-                         else jax.numpy.asarray(msg.payload))
+            payload_w = coord.deliver(lease)
 
             # ---- server-side assimilation ---------------------------------
             ps = next(ps_rr)
             t_free = max(t_now, ps_busy[ps])
-            meta = ResultMeta(cid=cid, unit_uid=unit.uid, epoch=unit.epoch,
-                              shard=unit.shard, read_version=read_version,
-                              server_version=store.version, t_arrival=t_now)
+            server_version = store.version
             if eventual:
                 # PS reads its snapshot when it starts processing; its write
                 # clobbers any commit racing within the processing window
                 snap, _ = store.read_at(t_free)
-                state["params"] = snap
-                state = scheme.assimilate(state, payload_w, meta)
+                state = coord.assimilate(lease, payload_w,
+                                         server_version=server_version,
+                                         t_arrival=t_now,
+                                         params_override=snap)
                 t_commit = store.commit(t_free, t_free + cfg.server_proc_s,
-                                        state["params"])
+                                        state.params)
             else:
                 # serializable read-modify-write against the head
                 def txn(head):
-                    state["params"] = head
-                    scheme.assimilate(state, payload_w, meta)
-                    return state["params"]
+                    st = coord.assimilate(lease, payload_w,
+                                          server_version=server_version,
+                                          t_arrival=t_now,
+                                          params_override=head)
+                    return st.params
                 t_commit = store.transact(t_free + cfg.server_proc_s, txn)
             ps_busy[ps] = t_commit
             assimilated += 1
@@ -306,7 +321,7 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
                     epoch=unit.epoch, t_complete=t_commit,
                     acc_mean=float(accs.mean()), acc_min=float(accs.min()),
                     acc_max=float(accs.max()), acc_std=float(accs.std())))
-                scheme.on_epoch(state, gen.epoch)
+                scheme.on_epoch(coord.state, gen.epoch)
                 if (cfg.target_accuracy is not None
                         and accs.mean() >= cfg.target_accuracy):
                     target_hit = True
@@ -318,9 +333,10 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig
         epochs_done=len(points), final_accuracy=final_acc,
         store_stats=store.stats, reassignments=sched.reassignments,
         preemptions=preemptions, results_assimilated=assimilated,
-        cost_hours=t_now / 3600.0, wire=transport.stats,
-        wire_dense_frames=wire_kinds[wire.KIND_DENSE],
-        wire_sparse_frames=wire_kinds[wire.KIND_SPARSE])
+        cost_hours=t_now / 3600.0, wire=coord.wire_stats,
+        wire_dense_frames=coord.frames[wire.KIND_DENSE],
+        wire_sparse_frames=coord.frames[wire.KIND_SPARSE],
+        scheme_state=coord.state)
 
 
 @dataclass

@@ -1,0 +1,22 @@
+"""VC protocol: the typed coordinator <-> scheme <-> transport boundary.
+
+``Lease`` makes every parameter handout explicit; ``Coordinator`` owns
+the lease lifecycle, the error-feedback residual ledger, the wire
+boundary, and the checkpoint hooks; ``ServerScheme`` is the pure
+algorithm folded over typed ``SchemeState``.  The discrete-event
+simulator (core/simulator.py) and real runtimes (launch/vc_serve.py)
+drive the same Coordinator — see docs/PROTOCOL.md.
+"""
+from repro.protocol.coordinator import Coordinator
+from repro.protocol.scheme import ServerScheme
+from repro.protocol.types import (LEASE_ASSIMILATED, LEASE_DROPPED,
+                                  LEASE_EXPIRED, LEASE_IN_FLIGHT,
+                                  LEASE_ISSUED, Lease, LeaseError, ResultMeta,
+                                  SchemeState, as_flat, as_tree, scheme_state)
+
+__all__ = [
+    "Coordinator", "ServerScheme", "Lease", "LeaseError", "ResultMeta",
+    "SchemeState", "as_flat", "as_tree", "scheme_state",
+    "LEASE_ISSUED", "LEASE_IN_FLIGHT", "LEASE_ASSIMILATED",
+    "LEASE_DROPPED", "LEASE_EXPIRED",
+]

@@ -1,0 +1,260 @@
+"""The Coordinator: one narrow object that owns the VC protocol's state.
+
+Everything the paper's §III server does between "a client asked for
+work" and "a result was folded into the server params" lives here — and
+nothing else does.  The discrete-event simulator (core/simulator.py) and
+a real runtime (launch/vc_serve.py) drive the SAME object; only the
+notion of time differs (the caller supplies ``now``).
+
+Responsibilities:
+
+* **Lease lifecycle** — ``issue`` / ``renew`` / ``expire`` / ``drop`` /
+  ``assimilate``.  A lease is live while in ``self.leases``; every
+  terminal transition consumes it exactly once and clears its
+  reconstruction-base ref.  Double assimilation (e.g. of a
+  timed-out-and-reassigned result) raises ``LeaseError``.
+* **Error-feedback residual ledger** — per-client residual buffers plus
+  RUNNING l2-norm totals, updated at submit/drop time, so
+  ``residual_norm(cid)`` and ``residual_mass()`` are O(1) dict/float
+  reads instead of scans over per-(cid, uid) buffers.
+* **The wire** — every submitted result is encoded to a real
+  transfer/wire.py frame and pushed through the ``Transport``; delivery
+  decodes and validates (torn frames never assimilate).  Frame-kind
+  counts and byte totals are measured off the encoded bytes.
+* **Checkpoint hooks** — the server copy is the only state that must
+  survive (clients are disposable by design); ``save_checkpoint`` /
+  ``restore_checkpoint`` snapshot (params, version) through the
+  checkpoint manager's flat one-pass path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core import flat as F
+from repro.protocol.scheme import ServerScheme
+from repro.protocol.types import (LEASE_ASSIMILATED, LEASE_DROPPED,
+                                  LEASE_EXPIRED, LEASE_IN_FLIGHT,
+                                  LEASE_ISSUED, Lease, LeaseError, ResultMeta,
+                                  SchemeState, as_flat)
+from repro.transfer import wire
+from repro.transfer.transport import LoopbackTransport, Transport
+
+
+class Coordinator:
+    """Owns leases, residuals, the wire boundary, and the scheme state."""
+
+    def __init__(self, scheme: ServerScheme, params0, *,
+                 transport: Optional[Transport] = None,
+                 timeout_s: float = math.inf):
+        self.scheme = scheme
+        self.state: SchemeState = scheme.init_state(as_flat(params0))
+        self.transport: Transport = transport or LoopbackTransport()
+        self.timeout_s = timeout_s
+        self.leases: Dict[tuple, Lease] = {}        # (cid, uid) -> live lease
+        # error-feedback ledger: per-client residual buffer + running norms
+        self._residuals: Dict[int, jnp.ndarray] = {}
+        self._res_norms: Dict[int, float] = {}
+        self._res_norm_total = 0.0
+        # wire frame kinds, measured at delivery
+        self.frames = {wire.KIND_DENSE: 0, wire.KIND_SPARSE: 0}
+        self.assimilated = 0
+        self.dropped = 0
+        self.expired = 0
+
+    # -- lease lifecycle -----------------------------------------------------
+
+    def issue(self, *, cid: int, uid: int, round: int, shard: int = 0,
+              read_version: int = 0, base, now: float = 0.0,
+              deadline: Optional[float] = None) -> Lease:
+        """Hand out params for one work unit.  ``base`` is the server
+        snapshot the client downloads; replica schemes may substitute
+        client-local state via ``scheme.handout``."""
+        key = (cid, uid)
+        if key in self.leases:
+            raise LeaseError(f"lease {key} already live "
+                             f"({self.leases[key].status})")
+        fp = as_flat(self.scheme.handout(self.state, cid, as_flat(base)))
+        lease = Lease(cid=cid, uid=uid, round=round, shard=shard,
+                      read_version=read_version, base=fp, issued_at=now,
+                      deadline=(now + self.timeout_s if deadline is None
+                                else deadline))
+        self.leases[key] = lease
+        self.scheme.on_issue(self.state, lease)
+        return lease
+
+    def renew(self, lease: Lease, deadline: float) -> Lease:
+        """Extend a live lease's deadline (client asked for more time)."""
+        self._live(lease)
+        lease.deadline = deadline
+        return lease
+
+    def submit(self, lease: Lease, trained_buf: jnp.ndarray) -> Lease:
+        """Client finished local training: encode the payload (applying
+        error feedback), push the frame through the transport, and record
+        the wire stats on the lease.  The upload duration is the frame's
+        REAL length (``lease.frame_bytes``) — never an assumed size."""
+        if self._live(lease).status != LEASE_ISSUED:
+            raise LeaseError(f"lease {lease.key} already submitted "
+                             f"({lease.status})")
+        payload, new_res = self.scheme.encode_payload(
+            trained_buf, lease.base, self._residuals.get(lease.cid))
+        # the header carries the POST-payload residual norm; the ledger is
+        # only committed after the send succeeds, so a transport failure
+        # leaves submit() all-or-nothing (the mass the payload extracted is
+        # not lost from the carry, and a retry re-compresses from the same
+        # residual)
+        norm = (float(jnp.linalg.norm(new_res)) if new_res is not None
+                else self.residual_norm(lease.cid))
+        frame = wire.encode(payload, round=lease.round, residual_norm=norm)
+        lease.msg_id = self.transport.send(frame)
+        if new_res is not None:
+            self._residuals[lease.cid] = new_res
+            self._res_norm_total += norm - self._res_norms.get(lease.cid, 0.0)
+            self._res_norms[lease.cid] = norm
+        lease.frame_bytes = len(frame)
+        lease.status = LEASE_IN_FLIGHT
+        return lease
+
+    def deliver(self, lease: Lease):
+        """Take delivery of the lease's frame: recv (exactly once) +
+        decode — magic/version/length/crc are validated, so a torn
+        transfer raises (WireError) and is never assimilated."""
+        if self._live(lease).status != LEASE_IN_FLIGHT:
+            raise LeaseError(f"nothing in flight for lease {lease.key} "
+                             f"({lease.status})")
+        msg = wire.decode(self.transport.recv(lease.msg_id))
+        self.frames[msg.kind] += 1
+        return (msg.payload if msg.kind == wire.KIND_SPARSE
+                else jnp.asarray(msg.payload))
+
+    def assimilate(self, lease: Lease, payload, *, server_version: int,
+                   t_arrival: float = 0.0,
+                   params_override: Optional[F.FlatParams] = None
+                   ) -> SchemeState:
+        """Fold one result into the server state and CONSUME the lease.
+        A lease can be assimilated at most once — a second attempt (the
+        timed-out-and-reassigned double) raises ``LeaseError``.
+
+        ``params_override`` is the consistency-store snapshot the
+        processing parameter server read (eventual: possibly stale;
+        strong: the head) — it replaces ``state.params`` before the
+        scheme's update, exactly as the old simulator did inline."""
+        self._live(lease)
+        meta = ResultMeta(cid=lease.cid, unit_uid=lease.uid,
+                          epoch=lease.round, shard=lease.shard,
+                          read_version=lease.read_version,
+                          server_version=server_version,
+                          t_arrival=t_arrival, base=lease.base)
+        if params_override is not None:
+            self.state.params = params_override
+        self.state = self.scheme.assimilate(self.state, payload, meta)
+        del self.leases[lease.key]
+        lease._release(LEASE_ASSIMILATED)
+        self.assimilated += 1
+        return self.state
+
+    def _terminate(self, lease: Lease, status: str) -> None:
+        """The single discard path (drop and expire both end here): the
+        in-flight frame is dropped at the transport (bytes were still
+        spent), the lease leaves the registry, and its base is released."""
+        if lease.msg_id is not None:
+            self.transport.drop(lease.msg_id)
+        if self.leases.get(lease.key) is lease:
+            del self.leases[lease.key]
+            lease._release(status)
+            if status == LEASE_EXPIRED:
+                self.expired += 1
+            else:
+                self.dropped += 1
+
+    def drop(self, lease: Lease) -> None:
+        """Discard an in-flight result (sender died mid-upload / timeout
+        reassignment).  Idempotent — dropping a lease that already
+        terminated is a no-op, so the death-then-timeout double-drop is
+        safe."""
+        self._terminate(lease, LEASE_DROPPED)
+
+    def expire(self, now: float) -> List[Lease]:
+        """Release every live lease past its deadline (the BOINC timeout:
+        the unit will be reassigned under a NEW lease; this one can never
+        be assimilated afterwards)."""
+        out = [l for l in self.leases.values() if l.deadline <= now]
+        for lease in out:
+            self._terminate(lease, LEASE_EXPIRED)
+        return out
+
+    def drop_client(self, cid: int) -> None:
+        """Preemption: the client is gone.  Scheme-local state (replicas)
+        is dropped, every lease held by the client is released, and the
+        client-side residual leaves the ledger (it lived on the dead
+        instance) — running norm totals updated, never rescanned."""
+        self.scheme.drop_client(self.state, cid)
+        for lease in [l for l in self.leases.values() if l.cid == cid]:
+            self.drop(lease)
+        if cid in self._res_norms:
+            self._res_norm_total -= self._res_norms.pop(cid)
+            self._residuals.pop(cid, None)
+
+    def _live(self, lease: Lease) -> Lease:
+        if self.leases.get(lease.key) is not lease:
+            raise LeaseError(
+                f"lease {lease.key} is not live (status={lease.status}): "
+                f"assimilated/expired/dropped leases are consumed exactly "
+                f"once")
+        return lease
+
+    # -- error-feedback ledger (O(1) reads) ----------------------------------
+
+    def residual_norm(self, cid: int) -> float:
+        """l2 norm of the residual ``cid`` carries after its latest
+        payload (0.0 for uncompressed schemes).  O(1): maintained at
+        submit/drop time, rides the wire header."""
+        return self._res_norms.get(cid, 0.0)
+
+    def residual_mass(self) -> float:
+        """Running total of per-client residual norms — how much update
+        mass is still in flight client-side across the fleet.  O(1)."""
+        return self._res_norm_total
+
+    # -- checkpoint hooks ----------------------------------------------------
+
+    def save_checkpoint(self, manager, step: int,
+                        extra: Optional[Dict] = None) -> None:
+        """Snapshot the durable protocol state (server params + version)
+        through the manager's one-pass flat path.  Leases/residuals are
+        deliberately NOT persisted: in-flight work is disposable by
+        design — a restarted coordinator reissues it."""
+        manager.save_server(step, self.state.params, self.state.version,
+                            extra=extra)
+
+    def restore_checkpoint(self, manager) -> Optional[int]:
+        """Resume (params, version) from the newest server checkpoint.
+        Returns the checkpoint step, or None if there was nothing to
+        restore (state untouched).
+
+        Scheme-local state is REBUILT from the restored params via
+        ``init_state`` (not patched in place): replicas/backups derived
+        from the construction-time init would otherwise be inconsistent
+        with the restored center — e.g. a resumed EASGDFlatPod would hand
+        out replica rows tiled from the random fresh init."""
+        step = manager.latest_step()
+        if step is None:
+            return None
+        params, version, _ = manager.restore_server_or_init(
+            self.state.params, lambda: None)
+        self.state = self.scheme.init_state(params)
+        self.state.version = version
+        return step
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def wire_stats(self):
+        return self.transport.stats
+
+    @property
+    def in_flight(self) -> int:
+        return len(self.leases)

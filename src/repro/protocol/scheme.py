@@ -1,0 +1,109 @@
+"""The redesigned ServerScheme: a pure-function core over typed state.
+
+The old contract had grown to ten loosely-coupled hooks (``note_handout``
+/ ``drop_result`` / ``residual_norm`` / ``payload_flat`` / ...) with the
+lease lifecycle living privately in the simulator.  The redesign splits
+responsibilities cleanly:
+
+* the **scheme** is algorithm only: fold a payload into typed
+  ``SchemeState`` (``init_state`` / ``handout`` / ``assimilate`` /
+  ``on_epoch``), plus a pure client-side ``encode_payload``;
+* the **Coordinator** (protocol/coordinator.py) owns everything
+  stateful about the protocol: lease issue/renew/expire/drop, the
+  per-client error-feedback residual ledger (with O(1) norm totals),
+  wire encode/decode, and the transport.
+
+Reconstruction bases travel ON the lease (``ResultMeta.base``), so
+schemes keep no per-(cid, uid) handout dicts and cannot leak them.
+State-in/state-out: ``assimilate`` may mutate ``state`` in place but must
+return it — callers always rebind.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import flat as F
+from repro.protocol.types import Lease, ResultMeta, SchemeState, as_flat
+
+
+class ServerScheme:
+    """Stateless-client contract: a client downloads the lease's base
+    params, trains on its shard, uploads a payload; the server
+    assimilates payloads in arrival order.  Fault tolerance == dropping
+    any subset of leases leaves the server state valid.
+
+    ``state.params`` is a FlatParams; conversions happen at the BOUNDARY
+    only (the driver unflattens once per dispatch and flattens the
+    trained tree once per result) — a scheme performs ZERO tree<->bus
+    conversions per round (core/flat.py counts them;
+    tests/test_simulator.py pins the per-result budget)."""
+
+    name = "base"
+    # descriptive metadata (not read by the Coordinator — handout() is
+    # always consulted): schemes that assume every client reports each
+    # round are not fault tolerant, and schemes with client-local
+    # replicas substitute them for the server snapshot at handout
+    requires_all_clients = False    # True -> not fault tolerant (BSP/EASGD-p)
+    has_local_replicas = False      # True -> handout substitutes local state
+
+    # -- server-side core ---------------------------------------------------
+    def init_state(self, params0) -> SchemeState:
+        return SchemeState(params=as_flat(params0))
+
+    def handout(self, state: SchemeState, cid: int,
+                default: F.FlatParams) -> F.FlatParams:
+        """Params for a new lease to ``cid``.  ``default`` is the driver's
+        server snapshot (the store copy the client would download);
+        replica schemes override it with client-local state."""
+        return default
+
+    def on_issue(self, state: SchemeState, lease: Lease) -> None:
+        """Hook: a lease was issued (DC-ASGD records its
+        delay-compensation backup here)."""
+
+    def params_for_client(self, state: SchemeState,
+                          cid: Optional[int] = None) -> F.FlatParams:
+        """Coordinator-less compatibility shim for direct scheme use:
+        what ``cid`` would be handed, defaulting to the server params
+        (delegates to ``handout`` so replica schemes stay consistent)."""
+        if cid is None:
+            return state.params
+        return self.handout(state, cid, state.params)
+
+    def assimilate(self, state: SchemeState, payload,
+                   meta: ResultMeta) -> SchemeState:
+        raise NotImplementedError
+
+    def on_epoch(self, state: SchemeState, epoch: int) -> None:
+        pass
+
+    def drop_client(self, state: SchemeState, cid: int) -> None:
+        """Preemption hook: schemes with client-local state lose it here.
+        (Lease release and residual cleanup are the Coordinator's job.)"""
+
+    # -- client-side core ---------------------------------------------------
+    def encode_payload(self, trained_buf: jnp.ndarray, base: F.FlatParams,
+                       residual: Optional[jnp.ndarray]
+                       ) -> Tuple[Any, Optional[jnp.ndarray]]:
+        """PURE function of (trained weights, lease base, carried
+        error-feedback residual): what travels client -> server, on the
+        bus.  Returns ``(payload, new_residual)``; ``new_residual`` is
+        None for schemes without error feedback (the Coordinator keeps
+        the residual ledger).  The payload is what gets wire-encoded
+        (transfer/wire.py): a raw buffer ships as a dense frame, a
+        CompressedDelta as a sparse one.  Default: full weights."""
+        return trained_buf, None
+
+    # -- shared helper ------------------------------------------------------
+    @staticmethod
+    def _payload_buf(fp: F.FlatParams, payload) -> jnp.ndarray:
+        """Boundary-only conversion: a payload still in tree form is
+        flattened exactly ONCE here; flat payloads (the hot path) pass
+        through untouched."""
+        if isinstance(payload, F.FlatParams):
+            return payload.buf
+        if isinstance(payload, jnp.ndarray):
+            return payload
+        return F.flatten_like(payload, fp.spec)

@@ -1,0 +1,165 @@
+"""Typed vocabulary of the VC protocol: the coordinator <-> scheme <->
+transport contract (paper §III).
+
+The paper's architecture is a coordinator handing out *parameter leases*
+to untrusted, preemptible workers and assimilating whatever comes back.
+This module makes that contract explicit:
+
+* ``Lease`` — one handout.  Carries everything the protocol previously
+  threaded ad hoc through ``note_handout``/``drop_result`` hooks and the
+  simulator's event payloads: the (cid, uid) identity, the round, the
+  reconstruction-base ref (what the client trained from — compressed
+  schemes rebuild W_c = base + delta from it), the deadline, and the wire
+  stats of the upload frame.  A lease is *live* while registered with the
+  Coordinator; assimilate/expire/drop each consume it exactly once and
+  release the base ref, so a timed-out-and-reassigned result can never be
+  assimilated twice and discarded handouts can never leak buffers.
+* ``ResultMeta`` — the assimilation context a scheme sees for one result
+  (derived from the lease + arrival-time facts by the Coordinator).
+* ``SchemeState`` — the typed, pytree-registered server state schemes
+  fold over (previously an untyped ``Dict[str, Any]``).  Schemes with
+  client-local state subclass it (``@scheme_state`` registers the
+  subclass); ``params`` always rides the FlatParams bus.
+
+``as_flat``/``as_tree`` are the tree<->bus boundary coercions (moved here
+from core/baselines.py so baselines depend on protocol, not vice versa).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, fields
+from typing import Optional
+
+import jax
+
+from repro.core import flat as F
+
+
+def as_flat(params) -> F.FlatParams:
+    """Coerce a tree onto the flat bus (no-op for FlatParams)."""
+    return params if isinstance(params, F.FlatParams) else F.flatten(params)
+
+
+def as_tree(params):
+    """Inverse boundary: what clients/evaluators consume."""
+    return F.unflatten(params) if isinstance(params, F.FlatParams) else params
+
+
+class LeaseError(RuntimeError):
+    """Protocol violation: acting on a lease that is not live (double
+    assimilation, submit after expiry, duplicate issue)."""
+
+
+# lease lifecycle: ISSUED -> IN_FLIGHT -> {ASSIMILATED | DROPPED | EXPIRED}
+LEASE_ISSUED = "issued"            # handed out, client training
+LEASE_IN_FLIGHT = "in-flight"      # result encoded and on the wire
+LEASE_ASSIMILATED = "assimilated"  # consumed by the scheme (terminal)
+LEASE_DROPPED = "dropped"          # result discarded (terminal)
+LEASE_EXPIRED = "expired"          # deadline passed (terminal)
+
+_TERMINAL = frozenset({LEASE_ASSIMILATED, LEASE_DROPPED, LEASE_EXPIRED})
+
+
+@dataclass
+class Lease:
+    """One explicit parameter handout (cid, uid) with its full lifecycle.
+
+    ``base`` is the reconstruction-base ref — the exact FlatParams the
+    coordinator handed to the client.  It is held for the lifetime of the
+    lease only: every terminal transition clears it (``released`` becomes
+    True), which is the no-leak guarantee the old per-scheme
+    ``_handout`` dicts provided implicitly."""
+
+    cid: int
+    uid: int
+    round: int                        # work epoch; rides the wire header
+    shard: int
+    read_version: int                 # server version the client started from
+    base: Optional[F.FlatParams]      # reconstruction-base ref
+    issued_at: float
+    deadline: float = math.inf
+    status: str = LEASE_ISSUED
+    # wire stats, filled at submit time
+    msg_id: Optional[int] = None
+    frame_bytes: int = 0
+
+    @property
+    def key(self) -> tuple:
+        return (self.cid, self.uid)
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in _TERMINAL
+
+    @property
+    def released(self) -> bool:
+        return self.base is None
+
+    def _release(self, status: str) -> None:
+        self.status = status
+        self.base = None
+
+
+@dataclass
+class ResultMeta:
+    """Assimilation context for one arrived result.  Built by the
+    Coordinator from the lease plus arrival-time facts; ``base`` is the
+    lease's reconstruction-base ref (None when a scheme is driven
+    directly without a coordinator — schemes fall back to the current
+    server params, matching the old ``_handout.pop(..., fp.buf)``)."""
+
+    cid: int
+    unit_uid: int
+    epoch: int
+    shard: int
+    read_version: int          # server version the client started from
+    server_version: int        # server version at assimilation time
+    t_arrival: float = 0.0
+    base: Optional[F.FlatParams] = None
+
+    @property
+    def staleness(self) -> int:
+        return max(0, self.server_version - self.read_version)
+
+
+# ---------------------------------------------------------------------------
+# typed scheme state
+# ---------------------------------------------------------------------------
+
+def scheme_state(cls):
+    """Register a SchemeState dataclass as a pytree.
+
+    Fields named in ``cls._tree_fields`` are children (arrays / FlatParams
+    / dicts of either — anything jax.tree understands); every other field
+    is carried as aux data by reference (version counters, slot maps).
+    """
+    tree_names = tuple(cls._tree_fields)
+    aux_names = tuple(f.name for f in fields(cls) if f.name not in tree_names)
+
+    def _flatten(s):
+        return (tuple(getattr(s, n) for n in tree_names),
+                tuple(getattr(s, n) for n in aux_names))
+
+    def _unflatten(aux, children):
+        obj = object.__new__(cls)
+        for n, v in zip(tree_names, children):
+            object.__setattr__(obj, n, v)
+        for n, v in zip(aux_names, aux):
+            object.__setattr__(obj, n, v)
+        return obj
+
+    jax.tree_util.register_pytree_node(cls, _flatten, _unflatten)
+    return cls
+
+
+@scheme_state
+@dataclass
+class SchemeState:
+    """Base server state: params on the FlatParams bus + version counter.
+    Schemes without client-local state use it as-is; the others subclass
+    it with typed fields (replicas, backups, barrier buffers)."""
+
+    _tree_fields = ("params",)
+
+    params: F.FlatParams
+    version: int = 0

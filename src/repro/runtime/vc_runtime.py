@@ -33,6 +33,7 @@ from repro.core import vc_asgd as V
 from repro.models.registry import Model
 from repro.optim import Adam, clip_by_global_norm
 from repro.runtime.sharding import MeshPlan
+from repro.transfer.transport import Transport
 
 
 def island_weights(n_pods: int, alpha: float, survivors: jnp.ndarray
@@ -190,7 +191,7 @@ def island_shardings(model: Model, plan: MeshPlan, n_pods: int,
 
 def compressed_assimilate(server, islands, alpha, survivors, *,
                           density: float = 0.05, residuals=None,
-                          transport=None):
+                          transport: Optional["Transport"] = None):
     """Delta-form Eq. 2 with GLOBAL (whole-model) top-k + int8 compression
     and error feedback — what actually crosses the DCN between pods.
 
@@ -202,11 +203,12 @@ def compressed_assimilate(server, islands, alpha, survivors, *,
     of the per-leaf × per-island loop.  Returns (server', residuals') with
     the same tree-in/tree-out contract as before (residuals island-major).
 
-    With ``transport`` set (transfer/transport.py), each island's payload
-    really crosses the wire: encoded to bytes (wire format v1), sent,
-    received and decoded before assimilation — the transport's stats then
-    hold the REAL per-round transfer sizes.  (Host-level path: call it
-    eagerly, not under jit.)"""
+    With ``transport`` set (any transfer/transport.py ``Transport`` —
+    the in-memory loopback or the cross-process broker), each island's
+    payload really crosses the wire: encoded to bytes (wire format v1),
+    sent, received and decoded before assimilation — the transport's
+    stats then hold the REAL per-round transfer sizes.  (Host-level
+    path: call it eagerly, not under jit.)"""
     from repro.core import compression as C
     from repro.core import flat as F
     n = islands_leading_dim(islands)

@@ -6,7 +6,8 @@ top-k + int8 deltas) into self-describing checksummed byte frames;
 bytes on the wire through this package — transfer sizes are measured,
 not assumed.
 """
-from repro.transfer.transport import (LoopbackTransport, TransportError,
+from repro.transfer.transport import (LoopbackTransport, ProcessTransport,
+                                      Transport, TransportError,
                                       TransportStats)
 from repro.transfer.wire import (HEADER_BYTES, KIND_DENSE, KIND_SPARSE,
                                  WIRE_VERSION, WireError, WireMessage,
@@ -15,7 +16,8 @@ from repro.transfer.wire import (HEADER_BYTES, KIND_DENSE, KIND_SPARSE,
                                  sparse_frame_bytes)
 
 __all__ = [
-    "LoopbackTransport", "TransportError", "TransportStats",
+    "LoopbackTransport", "ProcessTransport", "Transport", "TransportError",
+    "TransportStats",
     "HEADER_BYTES", "KIND_DENSE", "KIND_SPARSE", "WIRE_VERSION",
     "WireError", "WireMessage", "decode", "dense_frame_bytes", "encode",
     "encode_dense", "encode_sparse", "sparse_frame_bytes",

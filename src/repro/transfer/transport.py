@@ -1,17 +1,29 @@
 """Transports that carry wire frames (transfer/wire.py) between client and
 server.
 
-``LoopbackTransport`` is the in-memory reference implementation the
-simulator (core/simulator.py) and the pod schemes (core/baselines.py,
-runtime/vc_runtime.py::compressed_assimilate) ride: frames are addressed
-by message id (results travel concurrently and complete out of order, so
-a FIFO queue would mis-deliver), byte counts are the REAL encoded frame
-lengths, and a frame is only ever delivered once.  A production transport
-(gRPC / object store) implements the same three methods.
+``Transport`` is the abstract protocol the Coordinator
+(protocol/coordinator.py) drives: frames are addressed by message id
+(results travel concurrently and complete out of order, so a FIFO queue
+would mis-deliver), byte counts are the REAL encoded frame lengths, and a
+frame is only ever delivered once.
+
+* ``LoopbackTransport`` — the in-memory reference implementation the
+  simulator and the pod schemes (runtime/vc_runtime.py::
+  compressed_assimilate) ride.
+* ``ProcessTransport`` — the proof the interface is not loopback-shaped:
+  frames cross a REAL OS process boundary.  A broker process (plain
+  CPython, no jax) owns the in-flight frame store; send/recv/drop are
+  length-prefixed RPCs over a localhost TCP socket.  A production
+  transport (gRPC / object store) implements the same three methods.
 """
 from __future__ import annotations
 
+import abc
 import itertools
+import socket
+import struct
+import subprocess
+import sys
 from dataclasses import dataclass, field
 from typing import Dict
 
@@ -30,8 +42,33 @@ class TransportError(RuntimeError):
     pass
 
 
+class Transport(abc.ABC):
+    """Message-id-addressed frame carrier with real byte accounting."""
+
+    stats: TransportStats
+
+    @abc.abstractmethod
+    def send(self, frame: bytes) -> int:
+        """Put one encoded frame on the wire; returns its message id."""
+
+    @abc.abstractmethod
+    def recv(self, msg_id: int) -> bytes:
+        """Take delivery of a frame (exactly once); raises TransportError
+        if the id is unknown or already delivered/dropped."""
+
+    @abc.abstractmethod
+    def drop(self, msg_id: int) -> None:
+        """Discard an in-flight frame (the sender died / the result timed
+        out); the bytes were still spent.  Idempotent."""
+
+    @property
+    @abc.abstractmethod
+    def in_flight(self) -> int:
+        """Number of frames sent but neither delivered nor dropped."""
+
+
 @dataclass
-class LoopbackTransport:
+class LoopbackTransport(Transport):
     """In-memory message-id-addressed transport with real byte accounting."""
 
     stats: TransportStats = field(default_factory=TransportStats)
@@ -39,7 +76,6 @@ class LoopbackTransport:
     _ids: "itertools.count" = field(default_factory=itertools.count)
 
     def send(self, frame: bytes) -> int:
-        """Put one encoded frame on the wire; returns its message id."""
         if not isinstance(frame, (bytes, bytearray)):
             raise TypeError(f"transport carries bytes, got {type(frame)}")
         mid = next(self._ids)
@@ -49,7 +85,6 @@ class LoopbackTransport:
         return mid
 
     def recv(self, msg_id: int) -> bytes:
-        """Take delivery of a frame (exactly once)."""
         frame = self._inflight.pop(msg_id, None)
         if frame is None:
             raise TransportError(f"no in-flight frame with id {msg_id}")
@@ -58,8 +93,6 @@ class LoopbackTransport:
         return frame
 
     def drop(self, msg_id: int) -> None:
-        """Discard an in-flight frame (the sender died / the result timed
-        out); the bytes were still spent."""
         frame = self._inflight.pop(msg_id, None)
         if frame is not None:
             self.stats.frames_dropped += 1
@@ -68,3 +101,165 @@ class LoopbackTransport:
     @property
     def in_flight(self) -> int:
         return len(self._inflight)
+
+
+# ---------------------------------------------------------------------------
+# ProcessTransport: frames cross a real OS process boundary
+# ---------------------------------------------------------------------------
+
+# The broker is deliberately a self-contained stdlib-only script run via
+# ``python -c`` — it must not import jax (slow, fork-unsafe) or repro (the
+# in-flight store is just bytes).  RPC framing, little-endian:
+#   request:  op u8 ('S'end | 'R'ecv | 'D'rop | 'Q'uery | 'X' exit)
+#             | mid u64 | body_len u64 | body
+#   response: status u8 ('O' ok | 'E' unknown id)
+#             | value u64 (drop: dropped frame length; query: store size)
+#             | body_len u64 | body (recv: the frame)
+# On connect the broker sends its PID (u64) so callers can verify the
+# frames really live in another process.
+_BROKER_SRC = r"""
+import os, socket, struct, sys
+
+def rd(c, n):
+    b = b""
+    while len(b) < n:
+        ch = c.recv(n - len(b))
+        if not ch:
+            raise SystemExit(0)
+        b += ch
+    return b
+
+def resp(c, ok, value=0, body=b""):
+    c.sendall((b"O" if ok else b"E")
+              + struct.pack("<QQ", value, len(body)) + body)
+
+c = socket.create_connection(("127.0.0.1", int(sys.argv[1])))
+c.sendall(struct.pack("<Q", os.getpid()))
+store = {}
+while True:
+    op = rd(c, 1)
+    mid, ln = struct.unpack("<QQ", rd(c, 16))
+    body = rd(c, ln) if ln else b""
+    if op == b"S":
+        store[mid] = body
+        resp(c, True)
+    elif op == b"R":
+        f = store.pop(mid, None)
+        resp(c, f is not None, body=f or b"")
+    elif op == b"D":
+        f = store.pop(mid, None)
+        resp(c, f is not None, value=len(f) if f is not None else 0)
+    elif op == b"Q":
+        resp(c, True, value=len(store))
+    else:
+        c.close()
+        raise SystemExit(0)
+"""
+
+_REQ = struct.Struct("<QQ")
+_LEN = struct.Struct("<Q")
+_RSP = struct.Struct("<QQ")
+
+
+class ProcessTransport(Transport):
+    """Frames held by a broker in ANOTHER OS process, carried over a real
+    localhost TCP socket.  Same contract as LoopbackTransport — the
+    Coordinator cannot tell them apart except by ``broker_pid`` — but
+    every byte genuinely leaves this process and comes back.
+
+    Use as a context manager (or call ``close()``) so the broker process
+    is reaped."""
+
+    def __init__(self, timeout_s: float = 60.0):
+        self.stats = TransportStats()
+        self._ids = itertools.count()
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.bind(("127.0.0.1", 0))
+        srv.listen(1)
+        port = srv.getsockname()[1]
+        self._proc = subprocess.Popen([sys.executable, "-c", _BROKER_SRC,
+                                       str(port)])
+        srv.settimeout(timeout_s)
+        try:
+            self._conn, _ = srv.accept()
+        finally:
+            srv.close()
+        self._conn.settimeout(timeout_s)
+        (self.broker_pid,) = _LEN.unpack(self._read(8))
+
+    # -- rpc plumbing -------------------------------------------------------
+    def _read(self, n: int) -> bytes:
+        buf = b""
+        while len(buf) < n:
+            chunk = self._conn.recv(n - len(buf))
+            if not chunk:
+                raise TransportError("broker process closed the connection")
+            buf += chunk
+        return buf
+
+    def _rpc(self, op: bytes, mid: int, body: bytes = b""):
+        self._conn.sendall(op + _REQ.pack(mid, len(body)) + body)
+        status = self._read(1)
+        value, ln = _RSP.unpack(self._read(_RSP.size))
+        payload = self._read(ln) if ln else b""
+        return status == b"O", value, payload
+
+    # -- Transport ----------------------------------------------------------
+    def send(self, frame: bytes) -> int:
+        if not isinstance(frame, (bytes, bytearray)):
+            raise TypeError(f"transport carries bytes, got {type(frame)}")
+        mid = next(self._ids)
+        ok, _, _ = self._rpc(b"S", mid, bytes(frame))
+        if not ok:
+            raise TransportError(f"broker rejected frame {mid}")
+        self.stats.frames_sent += 1
+        self.stats.bytes_sent += len(frame)
+        return mid
+
+    def recv(self, msg_id: int) -> bytes:
+        ok, _, frame = self._rpc(b"R", msg_id)
+        if not ok:
+            raise TransportError(f"no in-flight frame with id {msg_id}")
+        self.stats.frames_recv += 1
+        self.stats.bytes_recv += len(frame)
+        return frame
+
+    def drop(self, msg_id: int) -> None:
+        ok, ln, _ = self._rpc(b"D", msg_id)
+        if ok:
+            self.stats.frames_dropped += 1
+            self.stats.bytes_dropped += int(ln)
+
+    @property
+    def in_flight(self) -> int:
+        ok, ln, _ = self._rpc(b"Q", 0)
+        return int(ln)
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        if getattr(self, "_conn", None) is not None:
+            try:
+                self._conn.sendall(b"X" + _REQ.pack(0, 0))
+            except OSError:
+                pass
+            self._conn.close()
+            self._conn = None
+        if getattr(self, "_proc", None) is not None:
+            try:
+                self._proc.wait(timeout=5)
+            except subprocess.TimeoutExpired:
+                self._proc.kill()
+                self._proc.wait()
+            self._proc = None
+
+    def __enter__(self) -> "ProcessTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

@@ -144,15 +144,15 @@ def test_easgd_flat_pod_round_matches_ref():
     tree = f32_tree(key)
     scheme = EASGDFlatPod(n_replicas=3, beta=0.1)
     state = scheme.init_state(F.flatten(tree))
-    center0 = state["params"].buf
+    center0 = state.params.buf
     payloads = [center0 + 0.1 * (j + 1) for j in range(3)]
     for j in range(3):
         state = scheme.assimilate(state, payloads[j], _meta(j))
-        assert state["version"] == (1 if j == 2 else 0)   # round barrier
+        assert state.version == (1 if j == 2 else 0)      # round barrier
     c_ref, x_ref = R.easgd_elastic(center0, jnp.stack(payloads), 0.1)
-    np.testing.assert_allclose(np.asarray(state["params"].buf),
+    np.testing.assert_allclose(np.asarray(state.params.buf),
                                np.asarray(c_ref), rtol=1e-6, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(scheme.replicas),
+    np.testing.assert_allclose(np.asarray(state.replicas),
                                np.asarray(x_ref), rtol=1e-6, atol=1e-6)
 
 
@@ -160,22 +160,22 @@ def test_easgd_flat_pod_drop_client_restarts_from_center():
     tree = f32_tree(jax.random.PRNGKey(10))
     scheme = EASGDFlatPod(n_replicas=2, beta=0.1)
     state = scheme.init_state(F.flatten(tree))
-    state = scheme.assimilate(state, state["params"].buf + 1.0, _meta(0))
-    scheme.drop_client(0)
+    state = scheme.assimilate(state, state.params.buf + 1.0, _meta(0))
+    scheme.drop_client(state, 0)
     # the preempted slot's handout is the center, not its stale replica
     np.testing.assert_array_equal(
         np.asarray(scheme.params_for_client(state, 0).buf),
-        np.asarray(state["params"].buf))
-    assert 0 not in scheme._pending        # the barrier re-waits for slot 0
+        np.asarray(state.params.buf))
+    assert 0 not in state.pending          # the barrier re-waits for slot 0
 
 
 def test_easgd_flat_pod_rejects_slot_collision():
     tree = f32_tree(jax.random.PRNGKey(12))
     scheme = EASGDFlatPod(n_replicas=2, beta=0.1)
     state = scheme.init_state(F.flatten(tree))
-    state = scheme.assimilate(state, state["params"].buf + 1.0, _meta(0))
+    state = scheme.assimilate(state, state.params.buf + 1.0, _meta(0))
     with pytest.raises(ValueError):        # cid 2 maps onto cid 0's slot
-        scheme.assimilate(state, state["params"].buf + 2.0, _meta(2))
+        scheme.assimilate(state, state.params.buf + 2.0, _meta(2))
 
 
 def test_easgd_elastic_update_kernel_matches_jnp():

@@ -1,0 +1,363 @@
+"""The typed VC protocol (repro.protocol): lease lifecycle, Coordinator
+bookkeeping, the pinned pre-redesign bit-identity contract, and a full VC
+round over ``ProcessTransport`` — real frames across a real OS process
+boundary.
+
+Three guarantees anchor the redesign:
+
+1. **Bit identity** — every scheme driven through the Coordinator
+   reproduces the pre-redesign simulator EXACTLY (pinned fixture,
+   results/PINNED_sim_regression.json).
+2. **Exactly once** — a lease is consumed by exactly one of
+   assimilate/expire/drop; a timed-out-and-reassigned result can never be
+   assimilated twice.
+3. **No leaks** — every terminal transition releases the lease's
+   reconstruction-base ref, and drop_client releases the client's
+   residual; live-buffer counts stay bounded over random preemption
+   schedules.
+"""
+import json
+import os
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import flat as F
+from repro.core.baselines import (CompressedVCASGD, DCASGD, Downpour,
+                                  EASGDFlatPod, EASGDPersistent, VCASGD)
+from repro.protocol import (LEASE_ASSIMILATED, LEASE_EXPIRED,
+                            LEASE_IN_FLIGHT, LEASE_ISSUED, Coordinator,
+                            LeaseError, SchemeState)
+from repro.transfer import wire
+from repro.transfer.transport import ProcessTransport, TransportError
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+import pin_sim_regression as PIN  # noqa: E402  (the single case registry)
+
+
+def _params(seed=0, shape=(64, 32)):
+    return F.flatten({"w": jax.random.normal(jax.random.PRNGKey(seed),
+                                             shape)})
+
+
+# ---------------------------------------------------------------------------
+# pinned bit-identity regression: the redesign may not move a single float
+# ---------------------------------------------------------------------------
+
+def test_pinned_regression_bit_identical():
+    """Every scheme, driven through the Lease/Coordinator API, reproduces
+    the committed pre-redesign results EXACTLY — wall clock, accuracy
+    trace, wire bytes, store/scheduler counters, all of it."""
+    pinned = json.loads(
+        (Path(__file__).resolve().parents[1] / "results" /
+         "PINNED_sim_regression.json").read_text())
+    task = PIN.MLPTask()
+    d = pinned["data"]
+    data = PIN.make_classification_data(n_train=d["n_train"],
+                                        n_val=d["n_val"], seed=d["seed"])
+    assert set(pinned["cases"]) == set(PIN.CASES)
+    for name in PIN.CASES:
+        got = PIN.run_case(task, data, name)
+        want = pinned["cases"][name]
+        mismatches = {k: (got[k], want[k]) for k in want if got[k] != want[k]}
+        assert not mismatches, f"{name}: {mismatches}"
+
+
+# ---------------------------------------------------------------------------
+# lease lifecycle: exactly-once + release guarantees
+# ---------------------------------------------------------------------------
+
+def test_lease_lifecycle_happy_path():
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=100.0)
+    lease = coord.issue(cid=0, uid=1, round=1, shard=3, read_version=0,
+                        base=fp, now=5.0)
+    assert lease.status == LEASE_ISSUED
+    assert lease.deadline == 105.0                 # now + timeout_s
+    assert coord.in_flight == 1
+    coord.submit(lease, fp.buf + 0.5)
+    assert lease.status == LEASE_IN_FLIGHT
+    assert lease.frame_bytes == wire.dense_frame_bytes(fp.spec.padded)
+    payload = coord.deliver(lease)
+    state = coord.assimilate(lease, payload, server_version=0)
+    assert lease.status == LEASE_ASSIMILATED and lease.released
+    assert coord.in_flight == 0 and coord.assimilated == 1
+    assert state.version == 1
+    n = fp.spec.n                              # padding tail stays zero
+    np.testing.assert_allclose(
+        np.asarray(state.params.buf[:n]),
+        np.asarray(0.9 * fp.buf[:n] + 0.1 * (fp.buf[:n] + 0.5)), rtol=1e-5, atol=1e-6)
+
+
+def test_lease_never_assimilated_twice():
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp)
+    lease = coord.issue(cid=0, uid=1, round=0, base=fp)
+    coord.submit(lease, fp.buf + 1.0)
+    payload = coord.deliver(lease)
+    coord.assimilate(lease, payload, server_version=0)
+    with pytest.raises(LeaseError):
+        coord.assimilate(lease, payload, server_version=0)
+
+
+def test_timed_out_and_reassigned_lease_cannot_assimilate():
+    """The BOINC double: a unit times out mid-flight, is reassigned under
+    a new lease, and THEN the stale result arrives.  The stale lease was
+    consumed by expire() — assimilating it raises, and only the fresh
+    lease's result lands."""
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=10.0)
+    stale = coord.issue(cid=0, uid=1, round=0, base=fp, now=0.0)
+    coord.submit(stale, fp.buf + 1.0)
+    expired = coord.expire(now=20.0)
+    assert expired == [stale] and stale.status == LEASE_EXPIRED
+    assert stale.released and coord.transport.in_flight == 0  # frame dropped
+    # reassignment: same shard, NEW uid, new lease
+    fresh = coord.issue(cid=1, uid=2, round=0, base=fp, now=20.0)
+    coord.submit(fresh, fp.buf + 2.0)
+    with pytest.raises(LeaseError):
+        coord.assimilate(stale, fp.buf + 1.0, server_version=0)
+    state = coord.assimilate(fresh, coord.deliver(fresh), server_version=0)
+    assert coord.assimilated == 1 and state.version == 1
+    n = fp.spec.n                              # padding tail stays zero
+    np.testing.assert_allclose(
+        np.asarray(state.params.buf[:n]),
+        np.asarray(0.9 * fp.buf[:n] + 0.1 * (fp.buf[:n] + 2.0)), rtol=1e-5, atol=1e-6)
+
+
+def test_duplicate_issue_rejected():
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp)
+    coord.issue(cid=0, uid=1, round=0, base=fp)
+    with pytest.raises(LeaseError):
+        coord.issue(cid=0, uid=1, round=0, base=fp)
+
+
+def test_renew_extends_deadline():
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=10.0)
+    lease = coord.issue(cid=0, uid=1, round=0, base=fp, now=0.0)
+    coord.renew(lease, deadline=50.0)
+    assert coord.expire(now=20.0) == []            # renewed past the timeout
+    assert coord.expire(now=60.0) == [lease]
+    with pytest.raises(LeaseError):                # terminal leases can't renew
+        coord.renew(lease, deadline=99.0)
+
+
+def test_submit_after_expiry_rejected():
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=10.0)
+    lease = coord.issue(cid=0, uid=1, round=0, base=fp, now=0.0)
+    coord.expire(now=20.0)
+    with pytest.raises(LeaseError):
+        coord.submit(lease, fp.buf)
+
+
+def _random_preemption_run(seed: int, steps: int = 120):
+    """Drive a compressed coordinator through a random schedule of
+    issue/submit/assimilate/drop/expire/drop_client and check the no-leak
+    invariants after every step."""
+    rng = np.random.default_rng(seed)
+    fp = _params(seed)
+    coord = Coordinator(CompressedVCASGD(0.9, density=0.1), fp,
+                        timeout_s=30.0)
+    uid, now, version = 0, 0.0, 0
+    live = []                                  # leases we still hold
+
+    def pick(status=None):
+        cand = [l for l in live if status is None or l.status == status]
+        return cand[int(rng.integers(0, len(cand)))] if cand else None
+
+    for _ in range(steps):
+        now += float(rng.exponential(4.0))
+        op = rng.integers(0, 6)
+        if op == 0 or not live:                # issue (to a random client)
+            lease = coord.issue(cid=int(rng.integers(0, 4)), uid=uid,
+                                round=0, base=fp, now=now)
+            uid += 1
+            live.append(lease)
+        elif op == 1:                          # client uploads (stays live)
+            lease = pick(LEASE_ISSUED)
+            if lease is not None:
+                coord.submit(lease, fp.buf + float(rng.standard_normal()))
+        elif op == 2:                          # delivery + assimilation
+            lease = pick(LEASE_IN_FLIGHT)
+            if lease is not None:
+                payload = coord.deliver(lease)
+                coord.assimilate(lease, payload, server_version=version)
+                version += 1
+                live.remove(lease)
+        elif op == 3:                          # result discarded in flight
+            lease = pick()
+            if lease is not None:
+                coord.drop(lease)
+                live.remove(lease)
+        elif op == 4:                          # client preempted
+            coord.drop_client(int(rng.integers(0, 4)))
+            live = [l for l in live if not l.terminal]
+        else:                                  # deadline sweep
+            coord.expire(now)
+            live = [l for l in live if not l.terminal]
+        # ---- invariants: nothing leaks, ever --------------------------
+        # terminated leases never linger in the registry...
+        assert len(coord.leases) == len(live)
+        # ...live leases keep their base ref, terminal ones released it
+        for lease in live:
+            assert not lease.released
+        assert coord.transport.in_flight == \
+            sum(1 for l in live if l.status == LEASE_IN_FLIGHT)
+        assert len(coord._residuals) <= 4      # bounded by fleet size
+        assert coord.residual_mass() == pytest.approx(
+            sum(coord._res_norms.values()))
+    # total drain: every client preempted -> all buffers released
+    for cid in range(4):
+        coord.drop_client(cid)
+    assert coord.leases == {} and coord._residuals == {}
+    assert coord.residual_mass() == pytest.approx(0.0)
+    assert coord.transport.in_flight == 0
+    stats = coord.wire_stats
+    assert stats.frames_sent == stats.frames_recv + stats.frames_dropped
+
+
+def test_random_preemption_no_leaks_deterministic():
+    for seed in range(3):
+        _random_preemption_run(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_property_random_preemption_no_leaks(seed):
+    _random_preemption_run(seed, steps=60)
+
+
+def test_drop_client_releases_residual_o1():
+    """Residual-norm totals are RUNNING sums (updated at submit/drop),
+    not scans: check they track exactly across submits and drops."""
+    fp = _params()
+    coord = Coordinator(CompressedVCASGD(0.9, density=0.1), fp)
+    for cid in range(3):
+        lease = coord.issue(cid=cid, uid=cid, round=0, base=fp)
+        coord.submit(lease, fp.buf + float(cid + 1))
+    norms = [coord.residual_norm(c) for c in range(3)]
+    assert all(n > 0 for n in norms)
+    assert coord.residual_mass() == pytest.approx(sum(norms))
+    coord.drop_client(1)
+    assert coord.residual_norm(1) == 0.0
+    assert coord.residual_mass() == pytest.approx(norms[0] + norms[2])
+
+
+# ---------------------------------------------------------------------------
+# typed states + checkpoint hooks
+# ---------------------------------------------------------------------------
+
+def test_scheme_states_are_pytrees():
+    fp = _params()
+    for scheme in [VCASGD(0.9), Downpour(0.5), DCASGD(0.5, lam=0.1),
+                   EASGDPersistent(0.05), EASGDFlatPod(n_replicas=2)]:
+        state = scheme.init_state(fp)
+        assert isinstance(state, SchemeState)
+        leaves = jax.tree.leaves(state)
+        assert any(l is state.params.buf for l in leaves)
+        mapped = jax.tree.map(lambda x: x, state)
+        assert type(mapped) is type(state)
+        np.testing.assert_array_equal(np.asarray(mapped.params.buf),
+                                      np.asarray(state.params.buf))
+
+
+def test_coordinator_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp)
+    lease = coord.issue(cid=0, uid=1, round=0, base=fp)
+    coord.submit(lease, fp.buf + 1.0)
+    coord.assimilate(lease, coord.deliver(lease), server_version=0)
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    coord.save_checkpoint(mgr, step=7)
+    # a fresh coordinator (fresh params) resumes the durable state
+    coord2 = Coordinator(VCASGD(0.9), _params(seed=99))
+    assert coord2.restore_checkpoint(mgr) == 7
+    assert coord2.state.version == coord.state.version == 1
+    np.testing.assert_array_equal(np.asarray(coord2.state.params.buf),
+                                  np.asarray(coord.state.params.buf))
+    # nothing to restore -> state untouched
+    coord3 = Coordinator(VCASGD(0.9), _params(seed=5))
+    assert coord3.restore_checkpoint(
+        CheckpointManager(tmp_path / "empty", async_save=False)) is None
+
+
+def test_restore_rebuilds_scheme_local_state(tmp_path):
+    """Scheme-local state is rebuilt from the RESTORED params: a resumed
+    pod coordinator hands out replicas tiled from the checkpointed
+    center, never from its construction-time fresh init."""
+    from repro.checkpoint import CheckpointManager
+    fp = _params()
+    coord = Coordinator(EASGDFlatPod(n_replicas=2, beta=0.1), fp)
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    coord.save_checkpoint(mgr, step=3)
+    resumed = Coordinator(EASGDFlatPod(n_replicas=2, beta=0.1),
+                          _params(seed=123))
+    assert resumed.restore_checkpoint(mgr) == 3
+    lease = resumed.issue(cid=0, uid=0, round=0,
+                          base=resumed.state.params)
+    np.testing.assert_array_equal(np.asarray(lease.base.buf),
+                                  np.asarray(fp.buf))
+    np.testing.assert_array_equal(np.asarray(resumed.state.replicas[1]),
+                                  np.asarray(fp.buf))
+
+
+# ---------------------------------------------------------------------------
+# ProcessTransport: frames really cross an OS process boundary
+# ---------------------------------------------------------------------------
+
+def test_process_transport_semantics():
+    with ProcessTransport() as t:
+        assert t.broker_pid != os.getpid()     # a REAL second process
+        frames = [wire.encode(jnp.arange(8192, dtype=jnp.float32)),
+                  b"short-frame"]
+        ids = [t.send(f) for f in frames]
+        assert t.in_flight == 2
+        assert t.recv(ids[1]) == frames[1]     # out-of-order by id
+        assert t.recv(ids[0]) == frames[0]
+        with pytest.raises(TransportError):
+            t.recv(ids[0])                     # exactly-once delivery
+        mid = t.send(frames[0])
+        t.drop(mid)
+        t.drop(mid)                            # idempotent
+        assert t.stats.frames_dropped == 1
+        assert t.stats.bytes_dropped == len(frames[0])
+        assert t.in_flight == 0
+        assert t.stats.bytes_sent == t.stats.bytes_recv + t.stats.bytes_dropped
+
+
+def test_full_vc_round_over_process_transport():
+    """A full VC round (dispatch -> train -> upload -> assimilate) with
+    every payload crossing a REAL OS process boundary: results are
+    bit-identical to the loopback run and byte counts equal the
+    transfer/wire.py frame lengths."""
+    task = PIN.MLPTask()
+    data = PIN.make_classification_data(n_train=600, n_val=150, seed=0)
+    cfg = PIN.SimConfig(n_param_servers=2, n_clients=3, tasks_per_client=2,
+                        n_shards=6, max_epochs=1, local_steps=2,
+                        subtask_compute_s=120.0, seed=3)
+    loop = PIN.run_simulation(task, data, VCASGD(0.95), cfg)
+    with ProcessTransport() as t:
+        proc = PIN.run_simulation(task, data, VCASGD(0.95), cfg, transport=t)
+        assert t.broker_pid != os.getpid()
+        stats = t.stats
+    padded = F.flatten(task.init_params(jax.random.PRNGKey(0))).spec.padded
+    per_frame = wire.dense_frame_bytes(padded)
+    assert proc.results_assimilated > 0
+    assert stats.frames_sent == proc.results_assimilated \
+        + stats.frames_dropped
+    assert stats.bytes_sent == stats.frames_sent * per_frame
+    assert stats.bytes_recv == proc.results_assimilated * per_frame
+    # the transport is invisible to the math: bit-identical to loopback
+    assert proc.wall_time_s == loop.wall_time_s
+    assert proc.final_accuracy == loop.final_accuracy
+    assert proc.results_assimilated == loop.results_assimilated
+    assert stats.bytes_sent == loop.wire.bytes_sent

@@ -82,14 +82,15 @@ def test_baselines_run(task_data, scheme_fn):
 
 
 def test_dcasgd_backups_are_wired(task_data):
-    """The simulator hands the dispatch-time params to note_handout, so
-    DC-ASGD's compensation backup is real — without it (W_now - W_backup)
-    is identically zero and DC-ASGD degenerates to Downpour."""
+    """The coordinator records the dispatch-time params on the lease and
+    DC-ASGD snapshots them per client at on_issue, so the compensation
+    backup is real — without it (W_now - W_backup) is identically zero
+    and DC-ASGD degenerates to Downpour."""
     task, data = task_data
     scheme = DCASGD(server_lr=0.5, lam=0.05)
     res = run_simulation(task, data, scheme, _cfg(max_epochs=2))
     assert res.results_assimilated > 0
-    assert len(scheme._backups) > 0
+    assert len(res.scheme_state.backups) > 0
 
 
 def test_sync_bsp_runs(task_data):

@@ -257,23 +257,28 @@ def test_simulator_compressed_still_learns(task_data):
 
 
 def test_compressed_scheme_bookkeeping_hooks():
-    """residual_norm feeds the wire header's error-feedback field, and
-    drop_result releases the per-unit handout base (no leak when a result
-    is discarded in flight)."""
+    """The Coordinator's residual ledger feeds the wire header's
+    error-feedback field, and dropping a lease releases the per-unit
+    reconstruction base (no leak when a result is discarded in flight)."""
     from repro.core import flat as F
     from repro.core.baselines import CompressedVCASGD
+    from repro.protocol import Coordinator
     scheme = CompressedVCASGD(0.9, density=0.1)
     fp = F.flatten({"w": jax.random.normal(jax.random.PRNGKey(0), (64, 32))})
-    state = scheme.init_state(fp)
-    assert scheme.residual_norm(cid=0) == 0.0
-    scheme.note_handout(0, fp, uid=7)
-    assert (0, 7) in scheme._handout
-    trained = fp.buf + 0.1
-    payload = scheme.payload_flat(trained, fp, cid=0)
-    assert scheme.residual_norm(cid=0) > 0.0      # top-k left mass behind
-    scheme.drop_result(0, uid=7)                  # discarded in flight
-    assert (0, 7) not in scheme._handout
-    del state, payload
+    coord = Coordinator(scheme, fp)
+    assert coord.residual_norm(0) == 0.0
+    lease = coord.issue(cid=0, uid=7, round=0, base=fp)
+    assert (0, 7) in coord.leases and lease.base is not None
+    coord.submit(lease, fp.buf + 0.1)
+    assert coord.residual_norm(0) > 0.0           # top-k left mass behind
+    assert coord.residual_mass() == coord.residual_norm(0)
+    # residual_norm rides the wire header of the submitted frame
+    msg = wire.decode(coord.transport.recv(lease.msg_id))
+    assert abs(msg.residual_norm - coord.residual_norm(0)) \
+        < 1e-3 * max(1.0, coord.residual_norm(0))
+    coord.drop(lease)                             # discarded in flight
+    assert (0, 7) not in coord.leases
+    assert lease.released and lease.base is None
 
 
 def test_compressed_assimilate_rides_transport():

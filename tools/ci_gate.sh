@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI gate: the fast test selection plus the perf ratchet, in one command.
+#
+#   tools/ci_gate.sh              # fast tests + pallas launch-count gate
+#   tools/ci_gate.sh --full       # full tier-1 suite (slow tests included)
+#                                 # + launch-count gate
+#
+# The fast gate (tools/fast_gate.sh) runs everything not marked `slow` —
+# including the examples' --smoke runs (tests/test_examples.py) and the
+# pinned simulation bit-identity regression (tests/test_protocol.py).
+# `python -m benchmarks.run --check` then fails if any suite's fused
+# pallas launch counts regress versus results/BASELINE_launches.json
+# (ratchet intentionally with --update-baseline).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--full" ]]; then
+    shift
+    python -m pytest -x -q "$@"
+else
+    tools/fast_gate.sh "$@"
+fi
+python -m benchmarks.run --check
+echo "[ci-gate] all green"

@@ -1,0 +1,100 @@
+"""Capture the pinned simulation-regression fixture.
+
+Runs every server scheme through ``run_simulation`` at a small fixed
+configuration and records the observable results (wall clock, accuracy
+trace, wire byte counts, store/scheduler counters) with full float
+precision.  The committed output, ``results/PINNED_sim_regression.json``,
+is the bit-identity contract of the protocol redesign:
+``tests/test_protocol.py::test_pinned_regression`` re-runs the same
+configurations and asserts EXACT equality — the Lease/Coordinator API may
+restructure the plumbing, but it may not change a single simulated float.
+
+Regenerate (only when an intentional semantic change is made):
+
+  PYTHONPATH=src python tools/pin_sim_regression.py
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.baselines import (CompressedVCASGD, DCASGD, Downpour,
+                                  EASGDFlatPod, EASGDPersistent, SyncBSP,
+                                  VCASGD)
+from repro.core.simulator import SimConfig, run_simulation
+from repro.core.tasks import MLPTask, make_classification_data
+
+OUT = Path(__file__).resolve().parents[1] / "results" / \
+    "PINNED_sim_regression.json"
+
+# one small shared workload; schemes that exercise the drop paths run with
+# preemption on so lease release / residual bookkeeping is covered too
+BASE = dict(n_param_servers=2, n_clients=3, tasks_per_client=2, n_shards=8,
+            max_epochs=2, local_steps=2, subtask_compute_s=120.0, seed=5)
+PREEMPT = dict(preemptible=True, mean_lifetime_s=900.0,
+               restart_delay_s=60.0)
+
+# name -> (scheme factory, config overrides).  Factories, not instances:
+# schemes carry client-local state and every run must start fresh.
+CASES = {
+    "vc-asgd": (lambda: VCASGD(0.95), {}),
+    "vc-asgd-preempt": (lambda: VCASGD(0.95), dict(PREEMPT)),
+    "vc-asgd-compressed": (
+        lambda: CompressedVCASGD(0.95, density=0.05), dict(PREEMPT)),
+    "downpour": (lambda: Downpour(server_lr=0.5), {}),
+    "dc-asgd": (lambda: DCASGD(server_lr=0.5, lam=0.05), {}),
+    "easgd-persistent": (
+        lambda: EASGDPersistent(beta=0.05), dict(PREEMPT)),
+    "easgd-flat-pod": (lambda: EASGDFlatPod(n_replicas=3, beta=0.05), {}),
+    "easgd-flat-pod-compressed": (
+        lambda: EASGDFlatPod(n_replicas=3, beta=0.05,
+                             compress_density=0.1), {}),
+    "sync-bsp": (lambda: SyncBSP(8), {}),
+    "vc-asgd-strong": (lambda: VCASGD(0.95), dict(consistency="strong")),
+}
+
+
+def run_case(task, data, name):
+    factory, overrides = CASES[name]
+    cfg = SimConfig(**{**BASE, **overrides})
+    res = run_simulation(task, data, factory(), cfg)
+    return {
+        "wall_time_s": float(res.wall_time_s),
+        "epochs_done": int(res.epochs_done),
+        "final_accuracy": float(res.final_accuracy),
+        "results_assimilated": int(res.results_assimilated),
+        "reassignments": int(res.reassignments),
+        "preemptions": int(res.preemptions),
+        "lost_updates": int(res.store_stats.lost_updates),
+        "store_updates": int(res.store_stats.updates),
+        "acc_mean": [float(p.acc_mean) for p in res.points],
+        "t_complete": [float(p.t_complete) for p in res.points],
+        "wire_frames_sent": int(res.wire.frames_sent),
+        "wire_bytes_sent": int(res.wire.bytes_sent),
+        "wire_frames_recv": int(res.wire.frames_recv),
+        "wire_bytes_recv": int(res.wire.bytes_recv),
+        "wire_frames_dropped": int(res.wire.frames_dropped),
+        "wire_bytes_dropped": int(res.wire.bytes_dropped),
+        "wire_dense_frames": int(res.wire_dense_frames),
+        "wire_sparse_frames": int(res.wire_sparse_frames),
+    }
+
+
+def main():
+    task = MLPTask()
+    data = make_classification_data(n_train=1500, n_val=300, seed=0)
+    out = {"base_cfg": BASE, "data": dict(n_train=1500, n_val=300, seed=0),
+           "cases": {}}
+    for name in CASES:
+        out["cases"][name] = run_case(task, data, name)
+        print(f"[pin] {name}: acc={out['cases'][name]['final_accuracy']:.4f} "
+              f"wall={out['cases'][name]['wall_time_s']:.1f}s "
+              f"bytes={out['cases'][name]['wire_bytes_sent']}")
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(out, indent=1) + "\n")
+    print(f"[pin] wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()
