@@ -31,15 +31,15 @@ def _task_data(quick: bool):
 
 
 def _base(quick: bool, **kw) -> SimConfig:
-    # upload_bytes pins the upload leg to the paper's measured 21.2MB .h5
-    # (§IV-A) so the figure timings stay paper-calibrated; outside these
-    # reproductions the simulator defaults to the REAL encoded frame
-    # length (transfer/wire.py)
+    # param_bytes/upload_bytes pin BOTH transfer legs to the paper's
+    # measured 21.2MB .h5 (§IV-A) so the figure timings stay
+    # paper-calibrated; outside these reproductions the simulator defaults
+    # to the REAL encoded frame lengths on both legs (transfer/wire.py)
     base = dict(n_shards=20 if quick else 50,
                 max_epochs=8 if quick else 40,
                 local_steps=2 if quick else 4,
                 subtask_compute_s=180.0, seed=11,
-                upload_bytes=21.2e6)
+                param_bytes=21.2e6, upload_bytes=21.2e6)
     base.update(kw)
     return SimConfig(**base)
 

@@ -333,9 +333,11 @@ class CheckpointManager:
 
     def restore_server_or_init(self, like, init_fn):
         """Resume (params, version) from the newest checkpoint or init
-        fresh.  Returns (params, version, step)."""
+        fresh.  Returns (params, version, extra, step) — ``extra`` is the
+        caller-supplied dict save_server persisted alongside, so runtimes
+        can resume their own counters (uids, round offsets)."""
         tree, extra, step = self.restore_or_init(like, init_fn)
-        return tree, int(extra.get("server_version", 0)), step
+        return tree, int(extra.get("server_version", 0)), extra, step
 
     def restore_or_init(self, tree_like, init_fn):
         """Resume from the newest checkpoint or initialize fresh.

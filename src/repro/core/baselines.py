@@ -7,9 +7,11 @@ contiguous buffer, so every update is a single fused pass over the whole
 model).  The protocol bookkeeping the old ``ServerScheme`` accreted —
 handout dicts, drop hooks, residual-norm ledgers — lives in the
 ``Coordinator`` now; reconstruction bases arrive on the lease
-(``ResultMeta.base``), client-side compression is the pure
-``encode_payload``, and schemes keep only genuinely algorithmic state
-(replicas, backups, barrier buffers) in their state dataclasses.
+(``ResultMeta.base``, rebuilt from the DECODED download-leg frames, so
+what a scheme reconstructs from is exactly what crossed the wire),
+client-side compression is the pure ``encode_payload``, and schemes keep
+only genuinely algorithmic state (replicas, backups, barrier buffers) in
+their state dataclasses.
 
 * VC-ASGD    — Eq. 1 lerp per arriving result; alpha schedule per epoch.
 * Downpour   — clients push accumulated deltas (n_push == one subtask), the

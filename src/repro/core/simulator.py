@@ -58,16 +58,17 @@ class SimConfig:
     mean_lifetime_s: float = 5400.0
     restart_delay_s: float = 120.0
     # transfer sizes (paper §IV-A): params 21.2MB, data shard 3.9MB, model
-    # 269KB.  These calibrate the DOWNLOAD leg only (the paper's .h5 file
-    # the server ships); the UPLOAD leg is no longer simulated — the
-    # result payload is actually encoded (transfer/wire.py), pushed
-    # through the loopback transport, and the upload time is computed
-    # from the REAL frame length.
-    param_bytes: float = 21.2e6
+    # 269KB.  NEITHER leg is simulated from an assumed size any more: the
+    # DOWNLOAD leg encodes the handout to real wire frames at lease issue
+    # (per-shard delta frames over a sharded bus, one dense frame
+    # otherwise) and times the transfer from the summed frame lengths;
+    # the UPLOAD leg encodes the result payload and times it from the
+    # frame length.  ``param_bytes``/``upload_bytes`` are the
+    # paper-calibration overrides (figure reproductions pin both to the
+    # measured 21.2MB .h5); None = real frames.
+    param_bytes: Optional[float] = None
     shard_bytes: float = 3.9e6
     model_bytes: float = 269e3
-    # override the real upload bytes with a fixed size (paper-calibrated
-    # figure reproductions set this to param_bytes); None = real frames
     upload_bytes: Optional[float] = None
     # server-side per-result processing (assimilation compute + validation)
     server_proc_s: float = 2.0
@@ -97,26 +98,37 @@ class SimResult:
     preemptions: int
     results_assimilated: int
     cost_hours: float = 0.0
-    # REAL bytes on the wire (transfer/): frame counts and byte totals are
-    # measured off the encoded payloads, never assumed
+    # REAL bytes on the wire (transfer/): frame counts and byte totals on
+    # BOTH legs are measured off the encoded payloads, never assumed.
+    # wire.bytes_sent == handout_bytes + sum of upload frame lengths.
     wire: Optional[TransportStats] = None
     wire_dense_frames: int = 0
     wire_sparse_frames: int = 0
+    handout_frames: int = 0           # download-leg frames (issue time)
+    handout_bytes: int = 0            # summed handout frame lengths
+    # coordinator lease lifecycle counters (expire wired to the scheduler
+    # timeout sweep; drops from preemption / stale arrivals)
+    leases_expired: int = 0
+    leases_dropped: int = 0
     # final server-side SchemeState (typed; replicas/backups inspectable)
     scheme_state: Any = None
 
     def acc_at_time(self, t: float) -> float:
-        best = 0.0
+        """Accuracy of the LATEST epoch completed at or before ``t`` (0.0
+        before the first point) — the value an observer reading the
+        validation curve at time t would see, not a running best."""
+        acc = 0.0
         for p in self.points:
             if p.t_complete <= t:
-                best = p.acc_mean
-        return best
+                acc = p.acc_mean
+        return acc
 
 
 # event kinds
 _UPLOAD = "upload"          # client finished local training; starts upload
 _ARRIVE = "arrive"          # result lands at the web server
 _RESPAWN = "respawn"
+_DISPATCH = "dispatch"      # client pulls new work (post-commit)
 
 
 def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
@@ -169,17 +181,37 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
         heapq.heappush(events, (t, next(eid), kind, payload))
 
     def dispatch(cid: int, now: float):
-        """Client pulls work; schedule the upload start for each unit (the
-        arrival is scheduled at upload time, once the REAL payload frame
-        length is known)."""
+        """Client pulls work; each unit's lease is issued HERE — the
+        handout crosses the transport as real wire frames at dispatch, so
+        the download leg is timed from the summed frame lengths
+        (``cfg.param_bytes`` overrides it for paper-calibrated figure
+        reproductions) and the client trains from the DECODED bytes."""
         client = fleet[cid]
         units = sched.request_work(cid, now)
         for unit in units:
             unit.param_version = store.version
-            # download params (+ shard if not cached — request_work marked it)
-            dl = client.transfer_time(cfg.param_bytes + cfg.model_bytes)
+            # ---- the lease: every handout is explicit, and REAL bytes --
+            # The client downloads the store snapshot as of now (replica
+            # schemes substitute client-local state via scheme.handout);
+            # issue() encodes it to handout frames through the transport
+            # and rebuilds the reconstruction base from the decoded bytes
+            # (bit-identical).  DC-ASGD's backup hooks off on_issue.
+            # (cid, uid) is fresh by construction: every timeout/failure
+            # reassignment mints a NEW uid (WorkGenerator.requeue), so a
+            # duplicate-issue LeaseError here would mean the scheduler
+            # leaked an assignment.
+            base_fp, _ = store.read_at(now)
+            lease = coord.issue(cid=cid, uid=unit.uid, round=unit.epoch,
+                                shard=unit.shard, read_version=store.version,
+                                base=base_fp, now=now,
+                                deadline=unit.deadline)
+            # download params (+ shard if not cached — request_work marked
+            # it): the param leg is the measured handout frame total
+            dl_bytes = (cfg.param_bytes if cfg.param_bytes is not None
+                        else lease.handout_bytes) + cfg.model_bytes
+            dl = client.transfer_time(dl_bytes)
             comp = client.compute_time(cfg.subtask_compute_s)
-            push(now + dl + comp, _UPLOAD, (cid, unit, store.version, now))
+            push(now + dl + comp, _UPLOAD, (cid, unit, lease))
 
     # boot: every client asks for work at t=0 (staggered a little)
     for c in fleet:
@@ -206,36 +238,38 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
                 c.spawn(t_now + cfg.restart_delay_s)
                 push(t_now + cfg.restart_delay_s, _RESPAWN, c.cid)
 
+        # timeout sweep: the scheduler requeues overdue units AND the
+        # coordinator expires their leases in the same breath — both key
+        # off the identical deadlines, so a timed-out unit's lease never
+        # lingers holding its reconstruction base until the stale arrival
+        # happens to fire (the stale upload/arrival handlers below then
+        # find the unit gone and the lease already consumed)
         sched.expire_timeouts(t_now)
+        coord.expire(t_now)
 
-        if kind == "boot" or kind == _RESPAWN:
+        if kind in ("boot", _RESPAWN, _DISPATCH):
+            # dispatch runs AT the event time, never ahead of it: the
+            # lease issue reads the store (and encodes the handout) at
+            # ``now``, so it can only see commits that causally precede
+            # the client's download — a post-commit pull is deferred to a
+            # _DISPATCH event at t_commit rather than evaluated eagerly
+            # inside the arrival handler (which would miss commits
+            # landing in (t_arrival, t_commit])
             dispatch(payload, t_now)
             continue
 
         if kind == _UPLOAD:
-            cid, unit, read_version, t_dispatch = payload
+            cid, unit, lease = payload
             client = fleet[cid]
             if cfg.preemptible and client.alive_until <= t_now:
-                continue                    # died mid-compute; timeout recovers
+                continue                    # died mid-compute; the preemption
+                                            # sweep dropped the lease; timeout
+                                            # recovers the unit
             if unit.uid not in sched.inflight:
-                # timed out and reassigned while computing; result discarded
+                # timed out and reassigned while computing (the expiry
+                # sweep above already consumed the lease); result discarded
                 dispatch(cid, t_now)
                 continue
-
-            # ---- the lease: every handout is explicit ---------------------
-            # the client trained from the params it downloaded at dispatch
-            # time: the store snapshot as of t_dispatch (replica schemes
-            # substitute client-local state via scheme.handout).  The lease
-            # records the reconstruction-base ref, deadline and identity;
-            # DC-ASGD's backup hooks off on_issue.  (cid, uid) is fresh by
-            # construction: every timeout/failure reassignment mints a NEW
-            # uid (WorkGenerator.requeue), so a duplicate-issue LeaseError
-            # here would mean the scheduler leaked an assignment.
-            base_fp, _ = store.read_at(t_dispatch)
-            lease = coord.issue(cid=cid, uid=unit.uid, round=unit.epoch,
-                                shard=unit.shard, read_version=read_version,
-                                base=base_fp, now=t_dispatch,
-                                deadline=unit.deadline)
 
             # ---- client-side REAL training --------------------------------
             # Conversions happen at the boundary ONLY: one unflatten per
@@ -325,7 +359,7 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
                 if (cfg.target_accuracy is not None
                         and accs.mean() >= cfg.target_accuracy):
                     target_hit = True
-            dispatch(cid, t_commit)
+            push(t_commit, _DISPATCH, cid)
 
     final_acc = task.evaluate(as_tree(store.head()), data.x_val, data.y_val)
     return SimResult(
@@ -336,6 +370,9 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
         cost_hours=t_now / 3600.0, wire=coord.wire_stats,
         wire_dense_frames=coord.frames[wire.KIND_DENSE],
         wire_sparse_frames=coord.frames[wire.KIND_SPARSE],
+        handout_frames=coord.handout_frames,
+        handout_bytes=coord.handout_bytes,
+        leases_expired=coord.expired, leases_dropped=coord.dropped,
         scheme_state=coord.state)
 
 

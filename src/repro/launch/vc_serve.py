@@ -5,8 +5,14 @@ boundary (transfer/transport.py::ProcessTransport).
 This is the proof that the Lease/Coordinator API is not simulator-shaped:
 ``core/simulator.py`` and this loop differ ONLY in where time comes from
 and where clients run — issue/submit/deliver/assimilate, the residual
-ledger, the wire framing and the checkpoint hooks are byte-for-byte the
-same code.
+ledger, the wire framing (BOTH legs: per-shard handout frames on the
+download leg, dense/sparse result frames on the upload leg) and the
+checkpoint hooks are byte-for-byte the same code.
+
+Resume is exact: a restarted server picks up at the checkpointed round
+and uid (persisted in the checkpoint ``extra``), so lease rounds, wire
+headers and checkpoint steps are monotone across kills — step k+1 never
+overwrites steps 1..k (tools/ci_gate.sh runs a kill-and-resume pass).
 
   PYTHONPATH=src python -m repro.launch.vc_serve --rounds 4 --clients 3
   PYTHONPATH=src python -m repro.launch.vc_serve --smoke   # fast-gate size
@@ -31,6 +37,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the server bus into N contiguous "
+                         "segments: handouts ship as per-shard delta "
+                         "frames (a client re-fetches only segments that "
+                         "changed since its last handout)")
     ap.add_argument("--density", type=float, default=None,
                     help="compress payloads to this top-k density "
                          "(sparse wire frames)")
@@ -41,13 +52,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.smoke:
-        args.rounds, args.clients = 2, 2
+        args.rounds, args.clients, args.shards = 2, 2, 2
 
     task = MLPTask()
     data = make_classification_data(n_train=600 if args.smoke else 3000,
                                     n_val=150 if args.smoke else 600,
                                     seed=args.seed)
-    params0 = F.flatten(task.init_params(jax.random.PRNGKey(args.seed)))
+    tree0 = task.init_params(jax.random.PRNGKey(args.seed))
+    params0 = (F.flatten(tree0) if args.shards <= 1
+               else F.flatten_sharded(tree0, args.shards))
     scheme = (VCASGD(0.9) if args.density is None
               else CompressedVCASGD(0.9, density=args.density))
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="vc_serve_")
@@ -57,24 +70,31 @@ def main(argv=None):
         coord = Coordinator(scheme, params0, transport=transport,
                             timeout_s=args.timeout_s)
         resumed = coord.restore_checkpoint(mgr)
+        # resume offsets the round counter and uid sequence: checkpoint
+        # step k holds rounds 0..k-1, so a restarted server continues at
+        # round k with the persisted next uid — rounds, wire headers and
+        # checkpoint steps stay monotone, nothing is overwritten
+        start = 0 if resumed is None else resumed
+        uid = int(coord.restored_extra.get("next_uid", 0))
         if resumed is not None:
             print(f"[vc-serve] resumed server v{coord.state.version} "
-                  f"from checkpoint step {resumed}")
+                  f"from checkpoint step {resumed} "
+                  f"(continuing at round {start}, uid {uid})")
         print(f"[vc-serve] scheme={scheme.name} clients={args.clients} "
-              f"broker pid={transport.broker_pid} (frames cross a real "
-              f"process boundary)")
-        uid = 0
-        for rnd in range(args.rounds):
+              f"shards={args.shards} broker pid={transport.broker_pid} "
+              f"(frames cross a real process boundary)")
+        for rnd in range(start, start + args.rounds):
             t0 = time.monotonic()
             leases = []
             for cid in range(args.clients):
-                # issue: the runtime's "store head" is the live state
+                # issue: the runtime's "store head" is the live state;
+                # the handout crosses the broker as per-shard frames
                 lease = coord.issue(cid=cid, uid=uid, round=rnd, shard=cid,
                                     read_version=coord.state.version,
                                     base=coord.state.params,
                                     now=time.monotonic())
                 uid += 1
-                # client-side REAL training from the lease base
+                # client-side REAL training from the DECODED handout
                 trained = task.client_train(
                     as_tree(lease.base), data.x_train, data.y_train,
                     steps=4, seed=args.seed * 1000003 + lease.uid)
@@ -90,21 +110,25 @@ def main(argv=None):
                                  server_version=coord.state.version,
                                  t_arrival=time.monotonic())
             coord.expire(time.monotonic())
-            coord.save_checkpoint(mgr, step=rnd + 1)
+            coord.save_checkpoint(mgr, step=rnd + 1,
+                                  extra={"next_uid": uid})
             acc = task.evaluate(as_tree(coord.state.params),
                                 data.x_val, data.y_val)
             s = coord.wire_stats
             print(f"[vc-serve] round {rnd}: acc={acc:.3f} "
                   f"server v{coord.state.version} "
                   f"wire {s.bytes_sent / 1e6:.2f}MB sent "
-                  f"({s.frames_dropped} frames dropped) "
+                  f"(handout {coord.handout_bytes / 1e6:.2f}MB in "
+                  f"{coord.handout_frames} frames, "
+                  f"{s.frames_dropped} frames dropped) "
                   f"residual mass {coord.residual_mass():.2f} "
                   f"[{time.monotonic() - t0:.2f}s]")
         s = coord.wire_stats
         assert s.frames_sent == s.frames_recv + s.frames_dropped
         assert coord.in_flight == 0 and transport.in_flight == 0
         print(f"[vc-serve] done: {coord.assimilated} results assimilated, "
-              f"{coord.dropped} dropped, checkpoints in {ckpt_dir}")
+              f"{coord.dropped} dropped, next uid {uid}, "
+              f"checkpoints in {ckpt_dir}")
     return 0
 
 

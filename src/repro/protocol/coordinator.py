@@ -17,10 +17,16 @@ Responsibilities:
   RUNNING l2-norm totals, updated at submit/drop time, so
   ``residual_norm(cid)`` and ``residual_mass()`` are O(1) dict/float
   reads instead of scans over per-(cid, uid) buffers.
-* **The wire** — every submitted result is encoded to a real
+* **The wire, BOTH legs** — every submitted result is encoded to a real
   transfer/wire.py frame and pushed through the ``Transport``; delivery
-  decodes and validates (torn frames never assimilate).  Frame-kind
-  counts and byte totals are measured off the encoded bytes.
+  decodes and validates (torn frames never assimilate).  The DOWNLOAD
+  leg is symmetric: ``issue`` encodes the handout as real frames too —
+  per-shard frames over a ShardedTreeSpec bus (a client re-fetches only
+  the segments that changed since its last handout: delta handouts), one
+  full-model dense frame at shard count 1 — and the lease's
+  reconstruction base is rebuilt from the DECODED bytes (bit-identical:
+  dense f32/bf16 round-trips are exact).  Frame-kind counts and byte
+  totals on both legs are measured off the encoded bytes.
 * **Checkpoint hooks** — the server copy is the only state that must
   survive (clients are disposable by design); ``save_checkpoint`` /
   ``restore_checkpoint`` snapshot (params, version) through the
@@ -32,6 +38,7 @@ import math
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import flat as F
 from repro.protocol.scheme import ServerScheme
@@ -58,11 +65,19 @@ class Coordinator:
         self._residuals: Dict[int, jnp.ndarray] = {}
         self._res_norms: Dict[int, float] = {}
         self._res_norm_total = 0.0
-        # wire frame kinds, measured at delivery
+        # DOWNLOAD-leg ledger: the bytes each client last received, so a
+        # per-shard handout re-sends only segments that changed since
+        # (delta handouts; bounded by fleet size, dropped with the client)
+        self._held: Dict[int, np.ndarray] = {}
+        self.handout_frames = 0
+        self.handout_bytes = 0
+        # UPLOAD-leg wire frame kinds, measured at delivery
         self.frames = {wire.KIND_DENSE: 0, wire.KIND_SPARSE: 0}
         self.assimilated = 0
         self.dropped = 0
         self.expired = 0
+        # extra dict of the checkpoint restore_checkpoint() last loaded
+        self.restored_extra: Dict = {}
 
     # -- lease lifecycle -----------------------------------------------------
 
@@ -71,7 +86,13 @@ class Coordinator:
               deadline: Optional[float] = None) -> Lease:
         """Hand out params for one work unit.  ``base`` is the server
         snapshot the client downloads; replica schemes may substitute
-        client-local state via ``scheme.handout``."""
+        client-local state via ``scheme.handout``.
+
+        The DOWNLOAD leg is real bytes: the handout is encoded to wire
+        frames, pushed through the transport and delivered right here
+        (the caller IS the client), so ``lease.handout_bytes`` is the
+        measured transfer size and ``lease.base`` is rebuilt from the
+        decoded frames — bit-identical to the handout buffer."""
         key = (cid, uid)
         if key in self.leases:
             raise LeaseError(f"lease {key} already live "
@@ -81,9 +102,57 @@ class Coordinator:
                       read_version=read_version, base=fp, issued_at=now,
                       deadline=(now + self.timeout_s if deadline is None
                                 else deadline))
+        lease.base = self._deliver_handout(lease, fp)
         self.leases[key] = lease
         self.scheme.on_issue(self.state, lease)
         return lease
+
+    def _deliver_handout(self, lease: Lease, fp: F.FlatParams
+                         ) -> F.FlatParams:
+        """Put the handout on the wire and take client-side delivery.
+
+        Over a ``ShardedTreeSpec`` bus (n_shards > 1) the handout ships
+        as per-shard frames (``wire.KIND_SHARD``, one per contiguous
+        segment of the shard table) and only the segments that CHANGED
+        since the client's last handout are re-sent — the delta-handout
+        rule; the client patches them into its held copy.  A plain
+        (single-shard) bus falls back to one full-model dense frame.
+        The returned FlatParams is reconstructed from the DECODED bytes;
+        dense f32/bf16 round-trips are exact, so it is bit-identical to
+        ``fp`` (asserted by the protocol tests, relied on by the pinned
+        simulator regression)."""
+        spec = fp.spec
+        buf = np.asarray(fp.buf)
+        sharded = (isinstance(spec, F.ShardedTreeSpec) and spec.n_shards > 1)
+        prev = self._held.get(lease.cid) if sharded else None
+        if sharded:
+            frames = []
+            for i in range(spec.n_shards):
+                lo, hi = spec.shard_bounds(i)
+                if prev is not None and np.array_equal(buf[lo:hi],
+                                                       prev[lo:hi]):
+                    continue                    # client already holds it
+                frames.append(wire.encode_shard(buf[lo:hi], shard=i,
+                                                n_shards=spec.n_shards,
+                                                round=lease.round))
+            held = prev.copy() if prev is not None else np.zeros_like(buf)
+        else:
+            frames = [wire.encode_dense(buf, round=lease.round)]
+            held = buf
+        for frame in frames:
+            msg = wire.decode(self.transport.recv(self.transport.send(frame)))
+            if msg.kind == wire.KIND_SHARD:
+                lo, hi = spec.shard_bounds(msg.shard)
+                held[lo:hi] = np.asarray(msg.payload)
+            else:
+                held = np.asarray(msg.payload)
+            lease.handout_frames += 1
+            lease.handout_bytes += len(frame)
+        self.handout_frames += lease.handout_frames
+        self.handout_bytes += lease.handout_bytes
+        if sharded:
+            self._held[lease.cid] = held
+        return F.FlatParams(jnp.asarray(held), spec)
 
     def renew(self, lease: Lease, deadline: float) -> Lease:
         """Extend a live lease's deadline (client asked for more time)."""
@@ -189,14 +258,16 @@ class Coordinator:
     def drop_client(self, cid: int) -> None:
         """Preemption: the client is gone.  Scheme-local state (replicas)
         is dropped, every lease held by the client is released, and the
-        client-side residual leaves the ledger (it lived on the dead
-        instance) — running norm totals updated, never rescanned."""
+        client-side residual AND held-bytes ledgers forget it (both lived
+        on the dead instance — a respawned client re-downloads the full
+        model) — running norm totals updated, never rescanned."""
         self.scheme.drop_client(self.state, cid)
         for lease in [l for l in self.leases.values() if l.cid == cid]:
             self.drop(lease)
         if cid in self._res_norms:
             self._res_norm_total -= self._res_norms.pop(cid)
             self._residuals.pop(cid, None)
+        self._held.pop(cid, None)
 
     def _live(self, lease: Lease) -> Lease:
         if self.leases.get(lease.key) is not lease:
@@ -233,7 +304,9 @@ class Coordinator:
     def restore_checkpoint(self, manager) -> Optional[int]:
         """Resume (params, version) from the newest server checkpoint.
         Returns the checkpoint step, or None if there was nothing to
-        restore (state untouched).
+        restore (state untouched).  The checkpoint's ``extra`` dict lands
+        in ``self.restored_extra`` so a runtime can resume its own
+        counters (e.g. launch/vc_serve.py's next uid).
 
         Scheme-local state is REBUILT from the restored params via
         ``init_state`` (not patched in place): replicas/backups derived
@@ -243,10 +316,12 @@ class Coordinator:
         step = manager.latest_step()
         if step is None:
             return None
-        params, version, _ = manager.restore_server_or_init(
+        params, version, extra, _ = manager.restore_server_or_init(
             self.state.params, lambda: None)
         self.state = self.scheme.init_state(params)
         self.state.version = version
+        self.restored_extra = dict(extra)
+        self._held.clear()             # every client re-downloads in full
         return step
 
     # -- introspection -------------------------------------------------------

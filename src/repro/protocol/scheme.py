@@ -56,7 +56,10 @@ class ServerScheme:
                 default: F.FlatParams) -> F.FlatParams:
         """Params for a new lease to ``cid``.  ``default`` is the driver's
         server snapshot (the store copy the client would download);
-        replica schemes override it with client-local state."""
+        replica schemes override it with client-local state.  Whatever is
+        returned here rides the DOWNLOAD leg as real wire frames (the
+        Coordinator encodes it at issue — per-shard delta frames over a
+        sharded bus), so schemes never see transfer mechanics."""
         return default
 
     def on_issue(self, state: SchemeState, lease: Lease) -> None:

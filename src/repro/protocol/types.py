@@ -79,9 +79,15 @@ class Lease:
     issued_at: float
     deadline: float = math.inf
     status: str = LEASE_ISSUED
-    # wire stats, filled at submit time
+    # UPLOAD-leg wire stats, filled at submit time
     msg_id: Optional[int] = None
     frame_bytes: int = 0
+    # DOWNLOAD-leg wire stats, filled at issue time: how many handout
+    # frames the client had to fetch (per-shard delta handouts skip the
+    # segments it already holds) and their summed REAL encoded lengths —
+    # the download duration is computed from these, never assumed
+    handout_frames: int = 0
+    handout_bytes: int = 0
 
     @property
     def key(self) -> tuple:

@@ -450,6 +450,22 @@ def sharded_adam_update_flat(p_buf, g_buf, m_buf, v_buf, lr, b1, b2, eps,
         scal, p_buf, g_buf, m_buf, v_buf)
 
 
+def sharded_broadcast_flat(server_buf, n_pods: int, mesh: Mesh,
+                           axis: str = "pod"):
+    """Redistribution leg per shard: server [N] -> islands [n_pods, N]
+    with every device broadcasting ONLY its own contiguous segment (no
+    gather — the output stays sharded along ``axis`` on the bus dim).
+    Values are plain copies, so the result is bit-identical to the
+    single-host ``broadcast_to`` at every pod count."""
+    _check_shardable(server_buf.size, mesh, axis)
+
+    def local(s):
+        return jnp.broadcast_to(s[None], (n_pods,) + s.shape)
+
+    return shard_map(local, mesh=mesh, in_specs=(P(axis),),
+                     out_specs=P(None, axis), check_rep=False)(server_buf)
+
+
 def sharded_easgd_flat(center_buf, replicas_buf, beta, mesh: Mesh,
                        axis: str = "pod", *, use_kernel: bool = False):
     """Fused elastic EASGD round per shard: center [N] + replicas [n, N]

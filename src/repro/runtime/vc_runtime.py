@@ -11,8 +11,12 @@ MeshPlan).  One **VC round** =
      with a survivor mask: islands that died this round (preemption) simply
      get weight zero and the weights renormalize (fault tolerance is
      algebraic, not protocol-level),
-  3. redistribution — the new server copy is broadcast back over pods (the
-     paper's clients always start a subtask from the server snapshot).
+  3. redistribution — the new server copy travels back over pods as a
+     per-shard broadcast ON THE FLAT BUS (each device copies only its own
+     contiguous segment under shard_map — no gather; the paper's clients
+     always start a subtask from the server snapshot).  The protocol
+     runtime ships the same segments as per-shard handout frames
+     (wire.KIND_SHARD) through the Transport at lease issue.
 
 The optional compressed path ships int8 top-k deltas with error feedback
 (core/compression.py) instead of raw weights across the DCN — globally
@@ -92,6 +96,32 @@ def assimilate_flat(server_buf, islands_buf, w, w_s, *,
         server_buf, islands_buf, w, jnp.asarray(w_s, jnp.float32))
 
 
+def redistribute_flat(server_buf, n_pods: int, *, mesh=None,
+                      shard_axis=None):
+    """Step-3 redistribution on the bus: server [N] -> islands
+    [n_pods, N] (every island restarts the next round from the server
+    snapshot, §III).  With ``mesh``/``shard_axis`` set the broadcast runs
+    per contiguous shard segment under shard_map
+    (runtime/sharding.py::sharded_broadcast_flat) — each device copies
+    only its own segment, no gather — and is bit-identical to the
+    single-host broadcast at every pod count (the values are copies
+    either way; tests pin it against the per-leaf oracle)."""
+    if mesh is None:
+        return jnp.broadcast_to(server_buf[None],
+                                (n_pods,) + server_buf.shape)
+    from repro.runtime.sharding import sharded_broadcast_flat
+    return sharded_broadcast_flat(server_buf, n_pods, mesh, shard_axis)
+
+
+def redistribute_per_leaf(server, islands):
+    """Pre-download-leg reference: the per-leaf tree.map broadcast
+    make_vc_round used before redistribution moved onto the flat bus.
+    Retained as the bit-exactness oracle (tests/test_runtime_vc.py)."""
+    return jax.tree.map(
+        lambda s, isl: jnp.broadcast_to(s[None], isl.shape).astype(isl.dtype),
+        server, islands)
+
+
 def assimilate_islands_per_leaf(server, islands, w, w_s):
     """Pre-ShardedFlat reference: the per-leaf tree.map merge make_vc_round
     used before the assimilation moved onto the flat bus.  Retained as the
@@ -160,10 +190,13 @@ def make_vc_round(model: Model, plan: MeshPlan, n_pods: int,
                                   shard_axis=flat_shard_axis,
                                   use_kernel=use_kernel)
         server = F.unflatten(F.FlatParams(out_buf, spec))
-        # 3) redistribution: every island restarts from the server snapshot
-        islands = jax.tree.map(
-            lambda s, isl: jnp.broadcast_to(s[None], isl.shape).astype(isl.dtype),
-            server, islands)
+        # 3) redistribution on the bus: every island restarts from the
+        #    server snapshot via a per-shard broadcast (sharded: each
+        #    device copies only its own contiguous segment, no gather) —
+        #    bit-identical to the retained per-leaf broadcast oracle
+        isl_out = redistribute_flat(out_buf, n_pods, mesh=mesh,
+                                    shard_axis=flat_shard_axis)
+        islands = F.unflatten_batched(isl_out, spec)
         return server, islands, opts, {"loss": losses.mean()}
 
     return vc_round

@@ -2,10 +2,11 @@
 server.
 
 ``Transport`` is the abstract protocol the Coordinator
-(protocol/coordinator.py) drives: frames are addressed by message id
-(results travel concurrently and complete out of order, so a FIFO queue
-would mis-deliver), byte counts are the REAL encoded frame lengths, and a
-frame is only ever delivered once.
+(protocol/coordinator.py) drives on BOTH transfer legs — upload result
+frames at submit, per-shard handout frames at issue: frames are
+addressed by message id (results travel concurrently and complete out of
+order, so a FIFO queue would mis-deliver), byte counts are the REAL
+encoded frame lengths, and a frame is only ever delivered once.
 
 * ``LoopbackTransport`` — the in-memory reference implementation the
   simulator and the pod schemes (runtime/vc_runtime.py::

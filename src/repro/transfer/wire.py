@@ -1,4 +1,4 @@
-"""Wire format v1 — what a FlatParams payload looks like as BYTES.
+"""Wire format v2 — what a FlatParams payload looks like as BYTES.
 
 Until now the cross-pod payloads (full flat buffers, or the compress_flat
 top-k + int8 deltas of core/compression.py) only ever existed as device
@@ -11,13 +11,17 @@ length IS the transfer size.
 Frame layout (little-endian, fixed 68-byte header + body)::
 
     magic    4s   b"VCWF"
-    version  u16  wire format version (this module speaks 1)
-    kind     u8   0 = DENSE (raw flat buffer), 1 = SPARSE (top-k + int8)
-    dtype    u8   dense payload dtype code (0=f32, 1=bf16, 2=f16)
+    version  u16  wire format version (this module speaks 2)
+    kind     u8   0 = DENSE (raw flat buffer), 1 = SPARSE (top-k + int8),
+                  2 = SHARD (one contiguous ShardedTreeSpec segment of the
+                  server bus — the DOWNLOAD/redistribution leg)
+    dtype    u8   dense/shard payload dtype code (0=f32, 1=bf16, 2=f16)
     n        u64  logical element count of the (padded) flat buffer
-    k        u64  surviving elements (dense: == n)
-    block    u32  int8 quantization block (sparse; dense: 0)
-    density  f32  sparse density budget (dense: 1.0)
+                  (shard: element count of THIS segment, == shard_len)
+    k        u64  surviving elements (dense: == n; shard: shard index)
+    block    u32  int8 quantization block (sparse; shard: n_shards;
+                  dense: 0)
+    density  f32  sparse density budget (dense/shard: 1.0)
     round    u32  error-feedback round counter (bookkeeping)
     res_norm f32  l2 norm of the residual carried AFTER this payload
                   (error-feedback bookkeeping: the receiver can monitor
@@ -31,11 +35,13 @@ Frame layout (little-endian, fixed 68-byte header + body)::
 
 Versioning rules: the magic/version pair is checked FIRST; a decoder
 rejects frames with a version newer than it speaks (no silent best-effort
-parsing), and any v1 field may only be reinterpreted by bumping the
-version.  Truncated, oversized, or bit-flipped frames fail the
-length/crc checks and raise ``WireError`` — a torn transfer is never
-assimilated (the paper's fault-tolerance requirement: dropping a payload
-is always safe, applying a corrupt one never is).
+parsing), and any field may only be reinterpreted by bumping the version
+— v2 did exactly that: it added kind 2 and reinterpreted the ``k`` /
+``block`` header fields for that kind only (v1 frames decode unchanged).
+Truncated, oversized, or bit-flipped frames fail the length/crc checks
+and raise ``WireError`` — a torn transfer is never assimilated (the
+paper's fault-tolerance requirement: dropping a payload is always safe,
+applying a corrupt one never is).
 """
 from __future__ import annotations
 
@@ -50,10 +56,11 @@ import numpy as np
 from repro.core.compression import CompressedDelta
 
 MAGIC = b"VCWF"
-WIRE_VERSION = 1
+WIRE_VERSION = 2
 
 KIND_DENSE = 0
 KIND_SPARSE = 1
+KIND_SHARD = 2                 # one contiguous segment of the server bus
 
 _HDR = struct.Struct("<4sHBBQQIfIfQQQ")      # header minus the crc field
 _CRC = struct.Struct("<I")
@@ -77,16 +84,23 @@ class WireError(ValueError):
 
 
 class WireMessage(NamedTuple):
-    kind: int                     # KIND_DENSE | KIND_SPARSE
+    kind: int                     # KIND_DENSE | KIND_SPARSE | KIND_SHARD
     payload: Union[np.ndarray, CompressedDelta]
     round: int                    # error-feedback round counter
     residual_norm: float          # client-side residual mass after sending
+    shard: int = 0                # KIND_SHARD: segment index on the bus
+    n_shards: int = 1             # KIND_SHARD: total segments of the bus
 
 
 def dense_frame_bytes(n: int, dtype: str = "float32") -> int:
     """Exact frame length of a dense buffer payload."""
     itemsize = 2 if dtype in ("bfloat16", "float16") else 4
     return HEADER_BYTES + n * itemsize
+
+
+def shard_frame_bytes(shard_len: int, dtype: str = "float32") -> int:
+    """Exact frame length of one handout segment (same body as dense)."""
+    return dense_frame_bytes(shard_len, dtype)
 
 
 def sparse_frame_bytes(k: int, block: int = 256) -> int:
@@ -115,6 +129,22 @@ def encode_dense(buf, *, round: int = 0, residual_norm: float = 0.0) -> bytes:
     header = _HDR.pack(MAGIC, WIRE_VERSION, KIND_DENSE, code,
                        arr.size, arr.size, 0, 1.0,
                        int(round), float(residual_norm),
+                       len(raw), 0, 0)
+    return _frame(header, raw)
+
+
+def encode_shard(seg, *, shard: int, n_shards: int, round: int = 0) -> bytes:
+    """Encode one contiguous handout segment of the server bus (the
+    DOWNLOAD leg): shard ``shard`` of ``n_shards``, laid out by the bus's
+    ShardedTreeSpec shard table.  ``k`` carries the shard index and
+    ``block`` the shard count (v2 reinterpretation, KIND_SHARD only)."""
+    if not 0 <= shard < n_shards:
+        raise WireError(f"shard {shard} out of range 0..{n_shards - 1}")
+    arr = _host(seg).reshape(-1)
+    code, raw = _dense_bytes(arr)
+    header = _HDR.pack(MAGIC, WIRE_VERSION, KIND_SHARD, code,
+                       arr.size, int(shard), int(n_shards), 1.0,
+                       int(round), 0.0,
                        len(raw), 0, 0)
     return _frame(header, raw)
 
@@ -164,7 +194,7 @@ def decode(frame: bytes) -> WireMessage:
                         f"{len_v + len_s + len_i}B")
     if zlib.crc32(body, zlib.crc32(frame[:_HDR.size])) != crc:
         raise WireError("crc mismatch (corrupt frame)")
-    if kind == KIND_DENSE:
+    if kind in (KIND_DENSE, KIND_SHARD):
         dtype = _CODE_DTYPES.get(dcode)
         if dtype is None:
             raise WireError(f"unknown dense dtype code {dcode}")
@@ -175,6 +205,13 @@ def decode(frame: bytes) -> WireMessage:
         if arr.size != n:
             raise WireError(f"dense payload {arr.size} elements != "
                             f"declared n={n}")
+        if kind == KIND_SHARD:
+            # v2: k = shard index, block = n_shards
+            if not (block > 0 and 0 <= k < block):
+                raise WireError(f"shard index {k} out of range for "
+                                f"{block} shards")
+            return WireMessage(KIND_SHARD, arr, rnd, res_norm,
+                               shard=int(k), n_shards=int(block))
         return WireMessage(KIND_DENSE, arr, rnd, res_norm)
     if kind == KIND_SPARSE:
         vals = np.frombuffer(body[:len_v], np.int8)

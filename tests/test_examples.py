@@ -26,10 +26,33 @@ def test_example_smoke(name, capsys):
 
 def test_vc_serve_smoke(tmp_path, capsys):
     """The real-runtime coordinator driver (launch/vc_serve.py): a couple
-    of VC rounds with payloads through the cross-process broker."""
+    of VC rounds with payloads through the cross-process broker on BOTH
+    legs (per-shard handout frames down, result frames up)."""
     sys.path.insert(0, str(ROOT / "src"))
     from repro.launch.vc_serve import main
     assert main(["--smoke", "--ckpt-dir", str(tmp_path)]) == 0
     out = capsys.readouterr().out
     assert "results assimilated" in out
+    assert "handout" in out                          # download leg is real
     assert list(tmp_path.glob("ckpt_*.msgpack"))    # checkpoint hooks ran
+
+
+def test_vc_serve_resume_rounds_monotonic(tmp_path, capsys):
+    """The resume bugfix: a killed-and-restarted vc_serve continues at the
+    checkpointed round with the persisted uid — rounds, wire headers and
+    checkpoint steps are monotone, steps 1..k are never overwritten."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.launch.vc_serve import main
+    assert main(["--smoke", "--ckpt-dir", str(tmp_path)]) == 0
+    first = capsys.readouterr().out
+    assert "round 0:" in first and "round 1:" in first
+    assert main(["--smoke", "--ckpt-dir", str(tmp_path)]) == 0
+    second = capsys.readouterr().out
+    assert "resumed" in second
+    assert "round 2:" in second and "round 3:" in second
+    assert "round 0:" not in second                  # never rewinds
+    # smoke = 2 rounds x 2 clients per run: uid continues, not restarts
+    assert "next uid 8" in second
+    steps = sorted(int(p.stem.split("_")[1])
+                   for p in tmp_path.glob("ckpt_*.msgpack"))
+    assert steps[-1] == 4                            # advanced past run one

@@ -80,6 +80,11 @@ def test_lease_lifecycle_happy_path():
     assert lease.status == LEASE_ISSUED
     assert lease.deadline == 105.0                 # now + timeout_s
     assert coord.in_flight == 1
+    # the DOWNLOAD leg shipped real bytes and the base is the DECODED copy
+    assert lease.handout_frames == 1
+    assert lease.handout_bytes == wire.dense_frame_bytes(fp.spec.padded)
+    np.testing.assert_array_equal(np.asarray(lease.base.buf),
+                                  np.asarray(fp.buf))
     coord.submit(lease, fp.buf + 0.5)
     assert lease.status == LEASE_IN_FLIGHT
     assert lease.frame_bytes == wire.dense_frame_bytes(fp.spec.padded)
@@ -277,10 +282,11 @@ def test_coordinator_checkpoint_roundtrip(tmp_path):
     coord.submit(lease, fp.buf + 1.0)
     coord.assimilate(lease, coord.deliver(lease), server_version=0)
     mgr = CheckpointManager(tmp_path, async_save=False)
-    coord.save_checkpoint(mgr, step=7)
+    coord.save_checkpoint(mgr, step=7, extra={"next_uid": 42})
     # a fresh coordinator (fresh params) resumes the durable state
     coord2 = Coordinator(VCASGD(0.9), _params(seed=99))
     assert coord2.restore_checkpoint(mgr) == 7
+    assert coord2.restored_extra["next_uid"] == 42   # runtime counters ride
     assert coord2.state.version == coord.state.version == 1
     np.testing.assert_array_equal(np.asarray(coord2.state.params.buf),
                                   np.asarray(coord.state.params.buf))
@@ -352,10 +358,15 @@ def test_full_vc_round_over_process_transport():
     padded = F.flatten(task.init_params(jax.random.PRNGKey(0))).spec.padded
     per_frame = wire.dense_frame_bytes(padded)
     assert proc.results_assimilated > 0
-    assert stats.frames_sent == proc.results_assimilated \
-        + stats.frames_dropped
-    assert stats.bytes_sent == stats.frames_sent * per_frame
-    assert stats.bytes_recv == proc.results_assimilated * per_frame
+    # both legs crossed the broker: handout frames at issue + one upload
+    # frame per result; totals are sums of the measured frame lengths
+    assert proc.handout_frames > 0
+    assert proc.handout_bytes == proc.handout_frames * per_frame
+    uploads = stats.frames_sent - proc.handout_frames
+    assert uploads == proc.results_assimilated + stats.frames_dropped
+    assert stats.bytes_sent == proc.handout_bytes + uploads * per_frame
+    assert stats.bytes_recv == proc.handout_bytes \
+        + proc.results_assimilated * per_frame
     # the transport is invisible to the math: bit-identical to loopback
     assert proc.wall_time_s == loop.wall_time_s
     assert proc.final_accuracy == loop.final_accuracy

@@ -7,9 +7,11 @@ import pytest
 from repro.core import flat as F
 from repro.core.baselines import (DCASGD, Downpour, EASGDFlatPod,
                                   EASGDPersistent, SyncBSP, VCASGD)
+from repro.core.consistency import StoreStats
 from repro.core.preemption import KillSchedule
-from repro.core.simulator import (SimConfig, run_preemptible_training,
-                                  run_simulation, run_single_instance)
+from repro.core.simulator import (EpochPoint, SimConfig, SimResult,
+                                  run_preemptible_training, run_simulation,
+                                  run_single_instance)
 from repro.core.tasks import MLPTask, make_classification_data
 from repro.core.vc_asgd import var_alpha
 
@@ -98,6 +100,39 @@ def test_sync_bsp_runs(task_data):
     cfg = _cfg(max_epochs=3)
     res = run_simulation(task, data, SyncBSP(cfg.n_shards), cfg)
     assert res.epochs_done == 3
+
+
+def test_simulator_expires_coordinator_leases(task_data):
+    """Coordinator expiry is wired next to the scheduler's timeout sweep:
+    a timed-out unit's lease is consumed (base released, in-flight frame
+    dropped) the moment the deadline passes — it never lingers until the
+    stale arrival happens to fire, and ``leases_expired`` counts it."""
+    task, data = task_data
+    # timeout shorter than the slow clients' compute: their units expire
+    # and get reassigned; the fast clients still finish the job
+    res = run_simulation(task, data, VCASGD(0.95),
+                         _cfg(max_epochs=2, timeout_s=120.0))
+    assert res.reassignments > 0
+    assert res.leases_expired > 0
+    assert res.epochs_done == 2
+
+
+def test_acc_at_time_latest_before_t():
+    """acc_at_time pins the latest-before-t contract: the value an
+    observer reading the validation curve at time t sees — NOT a running
+    best (accuracy can regress between epochs)."""
+    def pt(epoch, t, acc):
+        return EpochPoint(epoch=epoch, t_complete=t, acc_mean=acc,
+                          acc_min=acc, acc_max=acc, acc_std=0.0)
+    res = SimResult(points=[pt(1, 10.0, 0.5), pt(2, 20.0, 0.3),
+                            pt(3, 30.0, 0.7)],
+                    wall_time_s=30.0, epochs_done=3, final_accuracy=0.7,
+                    store_stats=StoreStats(), reassignments=0,
+                    preemptions=0, results_assimilated=3)
+    assert res.acc_at_time(5.0) == 0.0            # before the first point
+    assert res.acc_at_time(10.0) == 0.5           # inclusive at t_complete
+    assert res.acc_at_time(25.0) == 0.3           # LATEST, not best-so-far
+    assert res.acc_at_time(99.0) == 0.7
 
 
 def test_single_instance_baseline(task_data):

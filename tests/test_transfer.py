@@ -59,6 +59,34 @@ def test_sparse_roundtrip(density, n, logical):
                                   np.asarray(C.decompress_flat(q)))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_shard_frame_roundtrip(dtype):
+    """Handout segments (the DOWNLOAD leg) round-trip exactly, carrying
+    their shard index and shard count in the v2 header."""
+    seg = _delta(7, 8192).astype(dtype)
+    frame = wire.encode_shard(seg, shard=3, n_shards=5, round=9)
+    assert len(frame) == wire.shard_frame_bytes(8192, str(jnp.dtype(dtype)))
+    msg = wire.decode(frame)
+    assert msg.kind == wire.KIND_SHARD
+    assert msg.shard == 3 and msg.n_shards == 5 and msg.round == 9
+    np.testing.assert_array_equal(np.asarray(seg, np.float32),
+                                  np.asarray(msg.payload, np.float32))
+
+
+def test_shard_frame_bad_index_rejected():
+    seg = _delta(8, 8192)
+    with pytest.raises(WireError):
+        wire.encode_shard(seg, shard=5, n_shards=5)
+    with pytest.raises(WireError):
+        wire.encode_shard(seg, shard=-1, n_shards=5)
+    # a corrupt shard index fails the header crc before the range check
+    frame = wire.encode_shard(seg, shard=1, n_shards=3)
+    bad = bytearray(frame)
+    bad[16] ^= 0x1                                # k u64 (the shard index)
+    with pytest.raises(WireError):
+        wire.decode(bytes(bad))
+
+
 def test_roundtrip_bookkeeping_fields():
     """round / residual_norm ride the header (error-feedback bookkeeping)."""
     payload, res = C.compress_flat(_delta(2, 8192), density=0.1)
@@ -105,10 +133,11 @@ def test_property_dense_roundtrip(data):
 def _frames():
     dense = wire.encode(_delta(3, 8192))
     sparse = wire.encode(C.compress_flat(_delta(4, 8192), density=0.1)[0])
-    return [dense, sparse]
+    shard = wire.encode_shard(_delta(5, 8192), shard=1, n_shards=3)
+    return [dense, sparse, shard]
 
 
-@pytest.mark.parametrize("i", [0, 1])
+@pytest.mark.parametrize("i", [0, 1, 2])
 def test_truncated_frame_rejected(i):
     frame = _frames()[i]
     for cut in (len(frame) - 1, len(frame) // 2, wire.HEADER_BYTES,
@@ -117,7 +146,7 @@ def test_truncated_frame_rejected(i):
             wire.decode(frame[:cut])
 
 
-@pytest.mark.parametrize("i", [0, 1])
+@pytest.mark.parametrize("i", [0, 1, 2])
 def test_bitflip_rejected(i):
     """The crc covers header-sans-crc || body: a flip ANYWHERE in the
     frame — the n/k/density header fields included — is rejected."""
@@ -158,12 +187,13 @@ def test_loopback_transport_accounting():
     t = LoopbackTransport()
     frames = _frames()
     ids = [t.send(f) for f in frames]
-    assert t.in_flight == 2
-    assert t.stats.frames_sent == 2
+    assert t.in_flight == len(frames)
+    assert t.stats.frames_sent == len(frames)
     assert t.stats.bytes_sent == sum(len(f) for f in frames)
     # out-of-order delivery by id
     assert t.recv(ids[1]) == frames[1]
     assert t.recv(ids[0]) == frames[0]
+    assert t.recv(ids[2]) == frames[2]
     assert t.stats.bytes_recv == t.stats.bytes_sent
     with pytest.raises(TransportError):
         t.recv(ids[0])                            # exactly-once delivery
@@ -194,8 +224,9 @@ def _sim(task, data, scheme, **kw):
 
 
 def test_simulator_dense_byte_counts(task_data):
-    """Every full-weight payload is one dense frame whose length is the
-    flat bus size — totals are sums of measured frame lengths."""
+    """BOTH legs are sums of measured frame lengths: every handout is one
+    full-model dense frame (single-shard bus) and every full-weight
+    result payload is one dense frame of the flat bus size."""
     from repro.core import flat as F
     from repro.core.baselines import VCASGD
     task, data = task_data
@@ -206,13 +237,35 @@ def test_simulator_dense_byte_counts(task_data):
     assert res.wire_dense_frames == res.results_assimilated
     assert res.wire_sparse_frames == 0
     assert res.wire.frames_sent == res.wire.frames_recv  # nothing torn/lost
-    assert res.wire.bytes_sent == res.wire.frames_sent * per_frame
+    # download leg: one lease per handout, every dispatched unit got one
+    assert res.handout_frames >= res.results_assimilated
+    assert res.handout_bytes == res.handout_frames * per_frame
+    uploads = res.wire.frames_sent - res.handout_frames
+    assert res.wire.bytes_sent == res.handout_bytes + uploads * per_frame
     assert res.wire.bytes_recv == res.wire.bytes_sent
 
 
+def test_simulator_download_leg_timed_from_real_frames(task_data):
+    """param_bytes is ONLY the paper-calibration override: by default the
+    download leg costs the measured handout frame bytes (~66KB for the
+    MLP bus), and pinning it to the paper's 21.2MB must slow the clock
+    without touching the measured byte totals."""
+    from repro.core import flat as F
+    from repro.core.baselines import VCASGD
+    task, data = task_data
+    padded = F.flatten(task.init_params(jax.random.PRNGKey(0))).spec.padded
+    real = _sim(task, data, VCASGD(0.95))
+    paper = _sim(task, data, VCASGD(0.95), param_bytes=21.2e6)
+    for res in (real, paper):
+        assert res.handout_bytes == \
+            res.handout_frames * wire.dense_frame_bytes(padded)
+    assert paper.wall_time_s > real.wall_time_s   # 21.2MB >> one real frame
+
+
 def test_simulator_compressed_byte_counts(task_data):
-    """compress_flat payloads travel as sparse frames: per-frame length is
-    exactly header + k int8 + ceil(k/block) f32 + k int32."""
+    """compress_flat payloads travel as sparse frames (exactly header + k
+    int8 + ceil(k/block) f32 + k int32 each); handouts stay dense —
+    the total is the sum of both legs' frame lengths."""
     from repro.core import flat as F
     from repro.core.baselines import CompressedVCASGD
     task, data = task_data
@@ -222,15 +275,18 @@ def test_simulator_compressed_byte_counts(task_data):
     k = max(1, min(spec.n, int(spec.n * density)))
     per_frame = wire.sparse_frame_bytes(k)
     assert res.wire_sparse_frames == res.results_assimilated > 0
-    assert res.wire.bytes_sent == res.wire.frames_sent * per_frame
+    uploads = res.wire.frames_sent - res.handout_frames
+    assert res.handout_bytes == \
+        res.handout_frames * wire.dense_frame_bytes(spec.padded)
+    assert res.wire.bytes_sent == res.handout_bytes + uploads * per_frame
     # the sparse path actually compresses vs the dense frames
     assert per_frame < wire.dense_frame_bytes(spec.padded) / 4
 
 
 def test_simulator_easgd_flat_pod_compressed(task_data):
     """EASGDFlatPod rides the same wire: with compress_density set, every
-    replica payload is a sparse frame (byte counts asserted) and training
-    still completes."""
+    replica payload is a sparse frame (byte counts asserted, handouts
+    dense) and training still completes."""
     from repro.core import flat as F
     from repro.core.baselines import EASGDFlatPod
     task, data = task_data
@@ -240,8 +296,9 @@ def test_simulator_easgd_flat_pod_compressed(task_data):
     k = max(1, min(spec.n, int(spec.n * 0.1)))
     assert res.epochs_done == 2
     assert res.wire_sparse_frames == res.results_assimilated > 0
-    assert res.wire.bytes_sent == \
-        res.wire.frames_sent * wire.sparse_frame_bytes(k)
+    uploads = res.wire.frames_sent - res.handout_frames
+    assert res.wire.bytes_sent == res.handout_bytes \
+        + uploads * wire.sparse_frame_bytes(k)
     assert np.isfinite(res.final_accuracy)
 
 
@@ -279,6 +336,53 @@ def test_compressed_scheme_bookkeeping_hooks():
     coord.drop(lease)                             # discarded in flight
     assert (0, 7) not in coord.leases
     assert lease.released and lease.base is None
+
+
+def test_delta_handout_per_shard_frames():
+    """Over a sharded bus the DOWNLOAD leg ships per-shard frames, and a
+    client re-fetches only the segments that changed since its last
+    handout (delta handouts) — zero frames when nothing changed, full
+    model for a fresh client, byte totals equal to frame-length sums."""
+    from repro.core import flat as F
+    from repro.core.baselines import Downpour
+    from repro.protocol import Coordinator
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (40000,))}
+    fp = F.flatten_sharded(tree, 4)
+    sl = fp.spec.shard_len
+    per_shard = wire.shard_frame_bytes(sl)
+    coord = Coordinator(Downpour(server_lr=1.0), fp)
+    # fresh client: every segment ships
+    l0 = coord.issue(cid=0, uid=0, round=0, base=fp)
+    assert l0.handout_frames == 4
+    assert l0.handout_bytes == 4 * per_shard
+    np.testing.assert_array_equal(np.asarray(l0.base.buf), np.asarray(fp.buf))
+    # a delta confined to shard 2 leaves the other segments untouched
+    delta = np.zeros(fp.spec.padded, np.float32)
+    lo, hi = fp.spec.shard_bounds(2)
+    delta[lo + 5] = 1.0
+    coord.submit(l0, fp.buf + jnp.asarray(delta))
+    coord.assimilate(l0, coord.deliver(l0), server_version=0)
+    l1 = coord.issue(cid=0, uid=1, round=1, base=coord.state.params)
+    assert l1.handout_frames == 1                 # only shard 2 re-ships
+    assert l1.handout_bytes == per_shard
+    np.testing.assert_array_equal(np.asarray(l1.base.buf),
+                                  np.asarray(coord.state.params.buf))
+    # caught-up client, unchanged server: ZERO download bytes
+    l2 = coord.issue(cid=0, uid=2, round=2, base=coord.state.params)
+    assert l2.handout_frames == 0 and l2.handout_bytes == 0
+    np.testing.assert_array_equal(np.asarray(l2.base.buf),
+                                  np.asarray(coord.state.params.buf))
+    # a different (fresh) client still needs everything
+    l3 = coord.issue(cid=1, uid=3, round=0, base=coord.state.params)
+    assert l3.handout_frames == 4
+    # a preempted client loses its held copy: full re-download
+    coord.drop_client(1)
+    l4 = coord.issue(cid=1, uid=4, round=1, base=coord.state.params)
+    assert l4.handout_frames == 4
+    # transport totals == handout frames + the one upload frame
+    stats = coord.transport.stats
+    assert stats.bytes_sent == coord.handout_bytes + l0.frame_bytes
+    assert coord.handout_bytes == (4 + 1 + 0 + 4 + 4) * per_shard
 
 
 def test_compressed_assimilate_rides_transport():

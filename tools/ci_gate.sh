@@ -8,9 +8,11 @@
 # The fast gate (tools/fast_gate.sh) runs everything not marked `slow` —
 # including the examples' --smoke runs (tests/test_examples.py) and the
 # pinned simulation bit-identity regression (tests/test_protocol.py).
-# `python -m benchmarks.run --check` then fails if any suite's fused
-# pallas launch counts regress versus results/BASELINE_launches.json
-# (ratchet intentionally with --update-baseline).
+# A vc_serve kill-and-resume pass then proves the resume path stays
+# monotone (rounds/uids continue from the checkpoint, never rewind), and
+# `python -m benchmarks.run --check` fails if any suite's fused pallas
+# launch counts regress versus results/BASELINE_launches.json (ratchet
+# intentionally with --update-baseline).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -21,5 +23,24 @@ if [[ "${1:-}" == "--full" ]]; then
 else
     tools/fast_gate.sh "$@"
 fi
+
+# kill-and-resume: run the wall-clock coordinator twice against the same
+# checkpoint dir — the second run must RESUME (round 2 onward), never
+# restart at round 0 or overwrite earlier checkpoint steps
+resume_dir=$(mktemp -d)
+trap 'rm -rf "$resume_dir"' EXIT
+python -m repro.launch.vc_serve --smoke --ckpt-dir "$resume_dir" \
+    > "$resume_dir/first.log"
+python -m repro.launch.vc_serve --smoke --ckpt-dir "$resume_dir" \
+    > "$resume_dir/second.log"
+grep -q "round 1:" "$resume_dir/first.log"
+grep -q "resumed"  "$resume_dir/second.log"
+grep -q "round 3:" "$resume_dir/second.log"
+if grep -q "round 0:" "$resume_dir/second.log"; then
+    echo "[ci-gate] FAIL: resumed vc_serve rewound to round 0" >&2
+    exit 1
+fi
+echo "[ci-gate] vc_serve kill-and-resume: rounds stayed monotone"
+
 python -m benchmarks.run --check
 echo "[ci-gate] all green"

@@ -78,6 +78,10 @@ def run_case(task, data, name):
         "wire_bytes_dropped": int(res.wire.bytes_dropped),
         "wire_dense_frames": int(res.wire_dense_frames),
         "wire_sparse_frames": int(res.wire_sparse_frames),
+        "wire_handout_frames": int(res.handout_frames),
+        "wire_handout_bytes": int(res.handout_bytes),
+        "leases_expired": int(res.leases_expired),
+        "leases_dropped": int(res.leases_dropped),
     }
 
 
