@@ -131,6 +131,14 @@ _RESPAWN = "respawn"
 _DISPATCH = "dispatch"      # client pulls new work (post-commit)
 
 
+def _pick_server(ps_busy) -> int:
+    """Earliest-free parameter server (§IV-B serial processors): a result
+    goes to the PS that frees up first, never queueing behind a busy one
+    while another sits idle (blind round-robin mismodelled exactly that).
+    Ties break to the lowest index — deterministic."""
+    return min(range(len(ps_busy)), key=lambda i: (ps_busy[i], i))
+
+
 def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
                    *, transport: Optional[Transport] = None) -> SimResult:
     rng = np.random.default_rng(cfg.seed)
@@ -163,9 +171,9 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
     # ledger, wire encode/decode, transport.  This loop owns only time.
     coord = Coordinator(scheme, params0, transport=transport,
                         timeout_s=cfg.timeout_s)
-    # parameter servers: independent serial processors sharing the store
+    # parameter servers: independent serial processors sharing the store;
+    # each result lands on the earliest-free one (_pick_server)
     ps_busy = [0.0] * cfg.n_param_servers
-    ps_rr = itertools.cycle(range(cfg.n_param_servers))
 
     # validation accuracy per assimilated subtask, grouped by epoch
     epoch_accs: Dict[int, List[float]] = {}
@@ -320,7 +328,7 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
             payload_w = coord.deliver(lease)
 
             # ---- server-side assimilation ---------------------------------
-            ps = next(ps_rr)
+            ps = _pick_server(ps_busy)
             t_free = max(t_now, ps_busy[ps])
             server_version = store.version
             if eventual:

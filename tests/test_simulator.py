@@ -192,6 +192,21 @@ def test_kill_schedule_exponential_deterministic():
     assert all(0 <= s < 200 for s in a.kill_steps)
 
 
+def test_pick_server_earliest_free():
+    """The PS pick is earliest-free, not blind round-robin: a result never
+    queues behind a busy server while another sits idle (§IV-B), and ties
+    break deterministically to the lowest index."""
+    from repro.core.simulator import _pick_server
+    assert _pick_server([10.0, 0.0, 5.0]) == 1     # the idle one
+    assert _pick_server([7.0, 3.0, 5.0]) == 1      # earliest to free up
+    assert _pick_server([4.0, 4.0, 9.0]) == 0      # tie -> lowest index
+    assert _pick_server([0.0]) == 0
+    # round-robin would hand the 2nd result to PS1 (busy until 100) while
+    # PS2 idles; earliest-free never does
+    busy = [100.0, 0.0, 0.0]
+    assert _pick_server(busy) in (1, 2) and _pick_server(busy) == 1
+
+
 def test_more_servers_reduce_backlog(task_data):
     """Fig. 3's shape: with Tn high, P1 backlogs; P3 strictly faster."""
     task, data = task_data

@@ -52,6 +52,13 @@ CASES = {
                              compress_density=0.1), {}),
     "sync-bsp": (lambda: SyncBSP(8), {}),
     "vc-asgd-strong": (lambda: VCASGD(0.95), dict(consistency="strong")),
+    # enough simultaneous results per PS that the pick policy matters:
+    # pins the earliest-free server assignment (§IV-B contention model —
+    # blind round-robin queued results behind a busy PS while another
+    # idled)
+    "vc-asgd-contended": (
+        lambda: VCASGD(0.95),
+        dict(n_param_servers=2, tasks_per_client=4, server_proc_s=45.0)),
 }
 
 
