@@ -10,7 +10,9 @@ claims in ``results/BENCH_claims.json``).
 and fails (exit 1) if any suite's pallas launch counts regressed versus
 the committed baseline (results/BASELINE_launches.json) — the fused
 single-launch structure is the one perf property this CPU container can
-pin exactly.
+pin exactly.  It ALSO runs the fleet smoke scenario and fails if its
+event-loop throughput drops below the baselined events/sec floor
+(baseline * FLOOR_FRACTION, so CI noise doesn't flake the gate).
 """
 from __future__ import annotations
 
@@ -66,20 +68,36 @@ def check_launches(benches) -> int:
                                 f"baseline {allowed}")
             else:
                 print(f"check {name}.{path_name}: {count} <= {allowed} OK")
+    # event-loop throughput floor (fleet smoke scenario)
+    from benchmarks.fleet_bench import FLOOR_FRACTION, smoke_events_per_sec
+    base_eps = baseline.get("fleet", {}).get("smoke_events_per_sec")
+    if base_eps is None:
+        failures.append("fleet.smoke_events_per_sec: no baseline entry")
+    else:
+        eps = smoke_events_per_sec()
+        floor = base_eps * FLOOR_FRACTION
+        if eps < floor:
+            failures.append(f"fleet.smoke_events_per_sec: {eps:.0f} < "
+                            f"floor {floor:.0f} (baseline {base_eps:.0f})")
+        else:
+            print(f"check fleet.smoke_events_per_sec: {eps:.0f} >= "
+                  f"{floor:.0f} OK")
     if failures:
         for f in failures:
-            print(f"LAUNCH REGRESSION {f}", file=sys.stderr)
+            print(f"PERF REGRESSION {f}", file=sys.stderr)
         return 1
-    print("launch-count check passed")
+    print("launch-count + events/sec check passed")
     return 0
 
 
 def update_baseline(benches) -> None:
+    from benchmarks.fleet_bench import smoke_events_per_sec
     out = {}
     for name in LAUNCH_SUITES:
         res = benches[name]()
         _out_path(name).write_text(json.dumps(res, indent=1, default=str))
         out[name] = res.get("_launches", {})
+    out["fleet"] = {"smoke_events_per_sec": round(smoke_events_per_sec(), 1)}
     BASELINE.write_text(json.dumps(out, indent=1))
     print(f"wrote {BASELINE}: {json.dumps(out)}")
 
@@ -90,7 +108,7 @@ def main(argv=None) -> None:
                     help="paper-scale horizons (40 epochs, 50 shards)")
     ap.add_argument("--only", default="",
                     help="comma list: fig2,fig3,fig4,fig6,consistency,cost,"
-                         "kernels,flat,flat_adam,sharded_flat")
+                         "kernels,flat,flat_adam,sharded_flat,fleet")
     ap.add_argument("--check", action="store_true",
                     help="fail if any BENCH_*.json launch count regresses "
                          "vs results/BASELINE_launches.json")
@@ -102,6 +120,7 @@ def main(argv=None) -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import paper_figs as F
+    from benchmarks.fleet_bench import bench_fleet
     from benchmarks.kernel_bench import (bench_flat_adam,
                                          bench_flat_assimilate,
                                          bench_kernels, bench_sharded_flat)
@@ -117,6 +136,7 @@ def main(argv=None) -> None:
         "flat": bench_flat_assimilate,
         "flat_adam": bench_flat_adam,
         "sharded_flat": bench_sharded_flat,
+        "fleet": lambda: bench_fleet(quick),
     }
 
     if args.check:

@@ -20,6 +20,7 @@ Semantics here are faithful:
 """
 from __future__ import annotations
 
+from bisect import bisect_right
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Tuple
 
@@ -42,20 +43,18 @@ class EventualStore:
     def __init__(self, params: Any, update_latency_s: float = REDIS_UPDATE_S,
                  history: int = 64):
         self._hist: List[Tuple[float, Any]] = [(-1e18, params)]
+        self._times: List[float] = [-1e18]      # parallel commit times
         self._hist_cap = history
         self.update_latency_s = update_latency_s
         self.stats = StoreStats()
         self.version = 0
 
     def read_at(self, t: float) -> Tuple[Any, int]:
-        """Snapshot: the latest value committed at or before t."""
-        base = self._hist[0][1]
-        for tc, p in self._hist:
-            if tc <= t:
-                base = p
-            else:
-                break
-        return base, self.version
+        """Snapshot: the latest value committed at or before t (bisect
+        over the parallel times list; the oldest retained entry when
+        everything is newer — same as the old linear scan)."""
+        i = bisect_right(self._times, t) - 1
+        return self._hist[max(i, 0)][1], self.version
 
     def head(self) -> Any:
         return self._hist[-1][1]
@@ -71,6 +70,7 @@ class EventualStore:
         self._hist = [(tc, p) for tc, p in self._hist if tc <= t_read]
         self._hist.append((t_write, new_params))
         self._hist = self._hist[-self._hist_cap:]
+        self._times = [tc for tc, _ in self._hist]
         self.version += 1
         self.stats.updates += 1
         self.stats.total_latency_s += self.update_latency_s

@@ -27,7 +27,7 @@ import heapq
 import itertools
 import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -75,6 +75,20 @@ class SimConfig:
     # reference client compute per subtask on the 1.0-speed instance
     subtask_compute_s: float = 180.0
     seed: int = 0
+    # ---- fleet-scale knobs -------------------------------------------------
+    # shard count of the SERVER parameter bus (1 = dense handout frames;
+    # >1 puts the version-vector delta-handout ledger in the sim path)
+    bus_shards: int = 1
+    # evaluate validation accuracy every k-th assimilation (1 = every one,
+    # bit-identical to the historical behaviour; >1 bounds the per-event
+    # jnp cost at fleet scale — epoch stats then summarize the sampled
+    # subset)
+    eval_stride: int = 1
+    # custom fleet builder: cfg -> list[ClientModel].  The scenario
+    # registry uses this to inject spot-price / correlated-reclaim /
+    # diurnal preemption models and heterogeneous tiers; None = the
+    # historical make_fleet path (bit-identical)
+    fleet_fn: Optional[Callable] = None
 
 
 @dataclass
@@ -110,6 +124,8 @@ class SimResult:
     # timeout sweep; drops from preemption / stale arrivals)
     leases_expired: int = 0
     leases_dropped: int = 0
+    # total events popped off the heap (events/sec = this / bench wall)
+    events_processed: int = 0
     # final server-side SchemeState (typed; replicas/backups inspectable)
     scheme_state: Any = None
 
@@ -124,11 +140,16 @@ class SimResult:
         return acc
 
 
-# event kinds
-_UPLOAD = "upload"          # client finished local training; starts upload
-_ARRIVE = "arrive"          # result lands at the web server
-_RESPAWN = "respawn"
-_DISPATCH = "dispatch"      # client pulls new work (post-commit)
+# event kinds (small ints: the heap carries only (t, seq, kind, cid)
+# tuples — payloads live out-of-band, keyed by seq).  The monotone seq is
+# the EXPLICIT same-timestamp tie-breaker: two events at equal t pop in
+# push order, never by kind or payload, so batching/refactoring the
+# handlers can never reorder a pinned trace.
+_BOOT = 0
+_RESPAWN = 1
+_DISPATCH = 2               # client pulls new work (post-commit)
+_UPLOAD = 3                 # client finished local training; starts upload
+_ARRIVE = 4                 # result lands at the web server
 
 
 def _pick_server(ps_busy) -> int:
@@ -153,10 +174,13 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
     sched = Scheduler(gen, timeout_s=cfg.timeout_s,
                       tasks_per_client=cfg.tasks_per_client)
 
-    pre = PreemptionModel(mean_lifetime_s=cfg.mean_lifetime_s,
-                          restart_delay_s=cfg.restart_delay_s,
-                          enabled=cfg.preemptible)
-    fleet = make_fleet(cfg.n_clients, seed=cfg.seed, preemption=pre)
+    if cfg.fleet_fn is not None:
+        fleet = cfg.fleet_fn(cfg)
+    else:
+        pre = PreemptionModel(mean_lifetime_s=cfg.mean_lifetime_s,
+                              restart_delay_s=cfg.restart_delay_s,
+                              enabled=cfg.preemptible)
+        fleet = make_fleet(cfg.n_clients, seed=cfg.seed, preemption=pre)
     for c in fleet:
         c.spawn(0.0)
 
@@ -164,7 +188,22 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
     # contiguous buffer (the paper's Redis value IS one blob), and every
     # scheme's update is a single fused pass — the same code path as the
     # pod-scale runtime.  Clients stay tree-world; as_tree() is the boundary.
-    params0 = as_flat(task.init_params(key))
+    # ``bus_shards > 1`` lays the bus out sharded, so handouts ship as
+    # per-shard delta frames through the version-vector ledger.
+    # Flat task protocol: a task may provide flat-bus-native hooks
+    # (init_params_flat / client_train_flat / evaluate_flat) and then the
+    # whole run stays in buffer-world — no per-event tree<->bus crossing,
+    # and a numpy-backed bus (ProbeTask) never touches JAX dispatch.
+    # Tasks without the hooks take the exact tree path below, unchanged.
+    init_flat = getattr(task, "init_params_flat", None)
+    train_flat = getattr(task, "client_train_flat", None)
+    eval_flat = getattr(task, "evaluate_flat", None)
+    if init_flat is not None:
+        params0 = init_flat(key, cfg.bus_shards)
+    elif cfg.bus_shards > 1:
+        params0 = flat.flatten_sharded(task.init_params(key), cfg.bus_shards)
+    else:
+        params0 = as_flat(task.init_params(key))
     eventual = cfg.consistency == "eventual"
     store = EventualStore(params0) if eventual else StrongStore(params0)
     # the Coordinator owns the protocol: scheme state, leases, residual
@@ -180,13 +219,40 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
     epoch_done_t: Dict[int, float] = {}
     points: List[EpochPoint] = []
 
-    events: List[Tuple[float, int, str, Any]] = []
+    # the heap carries ONLY (t, seq, kind, cid) tuples; upload/arrive
+    # payloads (unit, lease) live out-of-band keyed by seq and are popped
+    # when the event fires.  seq is globally monotone, so equal-time
+    # events pop in push order — comparison never reaches kind/cid.
+    events: List[Tuple[float, int, int, int]] = []
+    payloads: Dict[int, tuple] = {}
     eid = itertools.count()
     preemptions = 0
     assimilated = 0
+    events_processed = 0
 
-    def push(t, kind, payload):
-        heapq.heappush(events, (t, next(eid), kind, payload))
+    def push(t, kind, cid, payload=None):
+        seq = next(eid)
+        if payload is not None:
+            payloads[seq] = payload
+        heapq.heappush(events, (t, seq, kind, cid))
+
+    # preemption heap: (alive_until, spawn_generation, cid).  An entry is
+    # live iff its generation matches the client's current spawn; each
+    # sweep collects every due client and handles them in ascending-cid
+    # order — exactly the old per-event `for c in fleet` scan, minus the
+    # O(n_clients) walk per event.
+    preempt_heap: List[Tuple[float, int, int]] = []
+    spawn_gen = [0] * cfg.n_clients
+    preemptible = cfg.preemptible
+
+    def track_spawn(c):
+        spawn_gen[c.cid] += 1
+        if preemptible and c.alive_until < math.inf:
+            heapq.heappush(preempt_heap,
+                           (c.alive_until, spawn_gen[c.cid], c.cid))
+
+    for c in fleet:
+        track_spawn(c)
 
     def dispatch(cid: int, now: float):
         """Client pulls work; each unit's lease is issued HERE — the
@@ -219,32 +285,43 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
                         else lease.handout_bytes) + cfg.model_bytes
             dl = client.transfer_time(dl_bytes)
             comp = client.compute_time(cfg.subtask_compute_s)
-            push(now + dl + comp, _UPLOAD, (cid, unit, lease))
+            push(now + dl + comp, _UPLOAD, cid, (unit, lease))
 
     # boot: every client asks for work at t=0 (staggered a little)
     for c in fleet:
-        push(0.001 * c.cid, "boot", c.cid)
+        push(0.001 * c.cid, _BOOT, c.cid)
 
     t_now = 0.0
     hard_stop = 10 ** 9
     target_hit = False
 
     while events and not gen.exhausted and not target_hit:
-        t_now, _, kind, payload = heapq.heappop(events)
+        t_now, seq, kind, cid = heapq.heappop(events)
         if t_now > hard_stop:
             break
+        events_processed += 1
 
-        # preemption check: any client whose lifetime expired before t_now
-        for c in fleet:
-            if cfg.preemptible and c.alive_until <= t_now:
-                lost = sched.fail_client(c.cid, t_now)
+        # preemption check: every client whose lifetime expired before
+        # t_now, in ascending-cid order (= the old full-fleet scan order).
+        # O(1) heap peek per event when nobody died.
+        if preemptible and preempt_heap and preempt_heap[0][0] <= t_now:
+            dead: List[int] = []
+            while preempt_heap and preempt_heap[0][0] <= t_now:
+                _, g, dcid = heapq.heappop(preempt_heap)
+                if g == spawn_gen[dcid]:
+                    dead.append(dcid)
+            dead.sort()
+            for dcid in dead:
+                c = fleet[dcid]
+                lost = sched.fail_client(dcid, t_now)
                 if lost:
                     preemptions += 1
                 # releases the client's leases (bases freed, in-flight
                 # frames dropped), its residual, and scheme-local state
-                coord.drop_client(c.cid)
-                c.spawn(t_now + cfg.restart_delay_s)
-                push(t_now + cfg.restart_delay_s, _RESPAWN, c.cid)
+                coord.drop_client(dcid)
+                c.spawn(t_now + c.preemption.restart_delay_s)
+                track_spawn(c)
+                push(t_now + c.preemption.restart_delay_s, _RESPAWN, dcid)
 
         # timeout sweep: the scheduler requeues overdue units AND the
         # coordinator expires their leases in the same breath — both key
@@ -255,7 +332,7 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
         sched.expire_timeouts(t_now)
         coord.expire(t_now)
 
-        if kind in ("boot", _RESPAWN, _DISPATCH):
+        if kind <= _DISPATCH:           # boot / respawn / dispatch
             # dispatch runs AT the event time, never ahead of it: the
             # lease issue reads the store (and encodes the handout) at
             # ``now``, so it can only see commits that causally precede
@@ -263,11 +340,11 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
             # _DISPATCH event at t_commit rather than evaluated eagerly
             # inside the arrival handler (which would miss commits
             # landing in (t_arrival, t_commit])
-            dispatch(payload, t_now)
+            dispatch(cid, t_now)
             continue
 
         if kind == _UPLOAD:
-            cid, unit, lease = payload
+            unit, lease = payloads.pop(seq)
             client = fleet[cid]
             if cfg.preemptible and client.alive_until <= t_now:
                 continue                    # died mid-compute; the preemption
@@ -285,12 +362,18 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
             # result (the trained tree onto the bus); the scheme then stays
             # in buffer-world.
             idx = shards[unit.shard]
-            base = as_tree(lease.base)
-            trained = task.client_train(
-                base, data.x_train[idx], data.y_train[idx],
-                steps=unit.local_steps * max(1, len(idx) // task.batch),
-                seed=cfg.seed * 1000003 + unit.uid)
-            trained_buf = flat.flatten_like(trained, lease.base.spec)
+            steps = unit.local_steps * max(1, len(idx) // task.batch)
+            seed = cfg.seed * 1000003 + unit.uid
+            if train_flat is not None:
+                trained_buf = train_flat(
+                    lease.base, data.x_train[idx], data.y_train[idx],
+                    steps=steps, seed=seed)
+            else:
+                base = as_tree(lease.base)
+                trained = task.client_train(
+                    base, data.x_train[idx], data.y_train[idx],
+                    steps=steps, seed=seed)
+                trained_buf = flat.flatten_like(trained, lease.base.spec)
 
             # ---- the wire: REAL bytes, REAL upload time -------------------
             # submit() encodes the payload (applying error feedback) to a
@@ -302,11 +385,11 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
             ul = client.transfer_time(cfg.upload_bytes
                                       if cfg.upload_bytes is not None
                                       else lease.frame_bytes)
-            push(t_now + ul, _ARRIVE, (cid, unit, lease))
+            push(t_now + ul, _ARRIVE, cid, (unit, lease))
             continue
 
         if kind == _ARRIVE:
-            cid, unit, lease = payload
+            unit, lease = payloads.pop(seq)
             client = fleet[cid]
             if cfg.preemptible and client.alive_until <= t_now:
                 # died mid-upload; bytes wasted, lease released (the
@@ -353,23 +436,37 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
             ps_busy[ps] = t_commit
             assimilated += 1
 
-            acc = task.evaluate(as_tree(store.head()), data.x_val, data.y_val)
-            epoch_accs.setdefault(unit.epoch, []).append(acc)
+            # validation accuracy: every assimilation at stride 1 (the
+            # historical, pinned behaviour); every k-th at fleet scale —
+            # epoch stats then summarize the sampled subset
+            if assimilated % cfg.eval_stride == 0:
+                acc = (eval_flat(store.head(), data.x_val, data.y_val)
+                       if eval_flat is not None
+                       else task.evaluate(as_tree(store.head()),
+                                          data.x_val, data.y_val))
+                epoch_accs.setdefault(unit.epoch, []).append(acc)
 
             rolled = gen.complete(unit)
             if rolled:
-                accs = np.array(epoch_accs.get(unit.epoch, [0.0]))
+                accs = np.array(epoch_accs.get(unit.epoch) or [0.0])
                 points.append(EpochPoint(
                     epoch=unit.epoch, t_complete=t_commit,
                     acc_mean=float(accs.mean()), acc_min=float(accs.min()),
                     acc_max=float(accs.max()), acc_std=float(accs.std())))
+                # the epoch summarized into its EpochPoint: release the
+                # per-result list (stale late arrivals of this epoch are
+                # never read again)
+                epoch_accs.pop(unit.epoch, None)
                 scheme.on_epoch(coord.state, gen.epoch)
                 if (cfg.target_accuracy is not None
                         and accs.mean() >= cfg.target_accuracy):
                     target_hit = True
             push(t_commit, _DISPATCH, cid)
 
-    final_acc = task.evaluate(as_tree(store.head()), data.x_val, data.y_val)
+    final_acc = (eval_flat(store.head(), data.x_val, data.y_val)
+                 if eval_flat is not None
+                 else task.evaluate(as_tree(store.head()),
+                                    data.x_val, data.y_val))
     return SimResult(
         points=points, wall_time_s=t_now,
         epochs_done=len(points), final_accuracy=final_acc,
@@ -381,6 +478,7 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
         handout_frames=coord.handout_frames,
         handout_bytes=coord.handout_bytes,
         leases_expired=coord.expired, leases_dropped=coord.dropped,
+        events_processed=events_processed,
         scheme_state=coord.state)
 
 

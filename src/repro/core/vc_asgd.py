@@ -26,6 +26,7 @@ from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +114,15 @@ def vc_asgd_update_flat(server, client, alpha: float | jnp.ndarray,
     if use_kernel:
         from repro.kernels import ops as K
         return server.with_buf(K.fused_lerp_flat(server.buf, c, alpha))
+    if isinstance(server.buf, np.ndarray) and isinstance(c, np.ndarray):
+        # numpy-backed bus (flat task protocol, fleet-scale sims): the
+        # same lerp without per-event JAX dispatch.  Scalar and buffer
+        # math both run in f32 with separate mul/add (no FMA), matching
+        # the eager jnp form bit-for-bit.
+        a_np = np.float32(alpha)
+        out = (a_np * server.buf.astype(np.float32)
+               + (np.float32(1.0) - a_np) * c.astype(np.float32))
+        return server.with_buf(out.astype(server.buf.dtype))
     a = jnp.asarray(alpha, jnp.float32)
     s32 = server.buf.astype(jnp.float32)
     return server.with_buf(

@@ -5,12 +5,21 @@ A subtask = (data shard, model + server parameter snapshot version, training
 recipe).  An epoch completes when every subtask of that epoch has been
 assimilated; the generator then emits the next epoch's subtasks (with the
 current server parameter version) until the stop criterion is met.
+
+``PendingQueue`` is the fleet-scale hot-path structure: the scheduler's
+sticky-first pick used to ``sorted()`` the whole pending list per request
+(O(P log P) per dispatch — quadratic over a run), which dominated the
+per-event cost at 10k+ clients.  The queue keeps uid-ordered min-heaps
+(global + per-shard, lazily invalidated) so one selection is
+O(|cache| + log P) while returning EXACTLY the units the old
+``sorted(key=(shard not in cache, uid))[:k]`` returned.
 """
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -24,6 +33,85 @@ class WorkUnit:
     replicas: int = 1            # computational redundancy (§II-C)
     deadline: float = math.inf   # absolute sim-time deadline (scheduler sets)
     local_steps: int = 1         # client-side passes over the shard
+
+
+class PendingQueue:
+    """Uid-ordered pending units with O(|cache| + log P) sticky-first picks.
+
+    Invariant (relied on for bit-identity with the old list version): units
+    are appended in strictly increasing uid order (``_emit_epoch`` and
+    ``requeue`` both mint fresh, monotone uids), so "list order" and "uid
+    order" coincide and a lazy min-heap reproduces the old stable sort.
+    Heap entries are invalidated lazily: a uid is live iff it is still in
+    ``_units`` (uids are never reused across assignments)."""
+
+    __slots__ = ("_units", "_all", "_by_shard")
+
+    def __init__(self) -> None:
+        self._units: Dict[int, WorkUnit] = {}     # uid -> unit (uid order)
+        self._all: List[int] = []                 # uid min-heap (lazy)
+        self._by_shard: Dict[int, List[int]] = {} # shard -> uid heap (lazy)
+
+    def append(self, unit: WorkUnit) -> None:
+        self._units[unit.uid] = unit
+        heapq.heappush(self._all, unit.uid)
+        heapq.heappush(self._by_shard.setdefault(unit.shard, []), unit.uid)
+
+    def remove(self, unit: WorkUnit) -> None:
+        del self._units[unit.uid]                 # heaps clean up lazily
+
+    def __len__(self) -> int:
+        return len(self._units)
+
+    def __bool__(self) -> bool:
+        return bool(self._units)
+
+    def __iter__(self):
+        return iter(self._units.values())
+
+    def _peek(self, heap: List[int]) -> Optional[int]:
+        while heap and heap[0] not in self._units:
+            heapq.heappop(heap)
+        return heap[0] if heap else None
+
+    def peek_shard(self, shard: int) -> Optional[int]:
+        """Smallest pending uid carrying ``shard`` (None if none)."""
+        heap = self._by_shard.get(shard)
+        if heap is None:
+            return None
+        uid = self._peek(heap)
+        if uid is None:
+            del self._by_shard[shard]             # keep the index bounded
+        return uid
+
+    def select(self, cache: Iterable[int], k: int) -> List[WorkUnit]:
+        """Pop up to ``k`` units, sticky-first: units whose shard is in
+        ``cache`` (snapshot at call entry — exactly like the old one-shot
+        sort key) ordered by uid, then the rest by uid."""
+        out: List[WorkUnit] = []
+        if k <= 0 or not self._units:
+            return out
+        cache0 = tuple(cache)                     # stickiness snapshot
+        while len(out) < k and self._units:
+            best: Optional[int] = None
+            for s in cache0:
+                uid = self.peek_shard(s)
+                if uid is not None and (best is None or uid < best):
+                    best = uid
+            if best is None:
+                # no sticky unit pending -> global min is non-sticky
+                best = self._peek(self._all)
+                if best is None:
+                    break
+            out.append(self._units.pop(best))
+        return out
+
+    def prune_stale_epochs(self, epoch: int) -> None:
+        """Drop every pending unit not belonging to ``epoch`` (leftover
+        replicas of a finished epoch)."""
+        stale = [uid for uid, u in self._units.items() if u.epoch != epoch]
+        for uid in stale:
+            del self._units[uid]
 
 
 @dataclass
@@ -72,7 +160,7 @@ class WorkGenerator:
         self.max_epochs = max_epochs
         self.epoch = 1
         self._uid = 0
-        self.pending: List[WorkUnit] = []
+        self.pending = PendingQueue()
         self.done_shards: set[int] = set()
         self.completed_units: Dict[int, WorkUnit] = {}
         self._emit_epoch()
@@ -97,7 +185,7 @@ class WorkGenerator:
             self.epoch += 1
             self.done_shards = set()
             # drop leftover replicas of the finished epoch
-            self.pending = [u for u in self.pending if u.epoch == self.epoch]
+            self.pending.prune_stale_epochs(self.epoch)
             if self.epoch <= self.max_epochs:
                 self._emit_epoch()
             return True

@@ -34,6 +34,7 @@ Responsibilities:
 """
 from __future__ import annotations
 
+import heapq
 import math
 from typing import Dict, List, Optional
 
@@ -61,14 +62,32 @@ class Coordinator:
         self.transport: Transport = transport or LoopbackTransport()
         self.timeout_s = timeout_s
         self.leases: Dict[tuple, Lease] = {}        # (cid, uid) -> live lease
+        # lease-deadline heap: (deadline, dl_seq, key), validated lazily
+        # against the lease's current _dl_seq (renew pushes a fresh entry),
+        # so expire() is O(1) per call when nothing is due instead of a
+        # full registry scan; _cid_leases mirrors registry insertion order
+        # per client for O(|client's leases|) drop_client
+        self._lease_heap: List = []
+        self._seq = 0
+        self._cid_leases: Dict[int, Dict[tuple, None]] = {}
         # error-feedback ledger: per-client residual buffer + running norms
         self._residuals: Dict[int, jnp.ndarray] = {}
         self._res_norms: Dict[int, float] = {}
         self._res_norm_total = 0.0
-        # DOWNLOAD-leg ledger: the bytes each client last received, so a
-        # per-shard handout re-sends only segments that changed since
-        # (delta handouts; bounded by fleet size, dropped with the client)
-        self._held: Dict[int, np.ndarray] = {}
+        # DOWNLOAD-leg ledger (version vector): the server bus carries one
+        # monotone u32 write-version per shard (`_bus_versions`, bumped when
+        # the shard's bytes change vs the cached copy `_bus_cache`); each
+        # client holds the version vector of its last handout
+        # (`_client_vec`).  Delta handout = one O(n_shards) vector compare,
+        # not a per-client byte-map diff.  `_bus_src` is an identity token
+        # for the last-seen handout buffer so repeat handouts of the SAME
+        # buffer skip the byte comparison entirely.  Safety is one-sided:
+        # a content revert (A->B->A between a client's handouts) costs a
+        # spurious re-send, never a missed one.
+        self._bus_versions: Optional[np.ndarray] = None
+        self._bus_cache: Optional[np.ndarray] = None
+        self._bus_src = None
+        self._client_vec: Dict[int, np.ndarray] = {}
         self.handout_frames = 0
         self.handout_bytes = 0
         # UPLOAD-leg wire frame kinds, measured at delivery
@@ -104,6 +123,10 @@ class Coordinator:
                                 else deadline))
         lease.base = self._deliver_handout(lease, fp)
         self.leases[key] = lease
+        self._seq += 1
+        lease._issue_seq = lease._dl_seq = self._seq
+        heapq.heappush(self._lease_heap, (lease.deadline, self._seq, key))
+        self._cid_leases.setdefault(cid, {})[key] = None
         self.scheme.on_issue(self.state, lease)
         return lease
 
@@ -113,51 +136,89 @@ class Coordinator:
 
         Over a ``ShardedTreeSpec`` bus (n_shards > 1) the handout ships
         as per-shard frames (``wire.KIND_SHARD``, one per contiguous
-        segment of the shard table) and only the segments that CHANGED
-        since the client's last handout are re-sent — the delta-handout
-        rule; the client patches them into its held copy.  A plain
-        (single-shard) bus falls back to one full-model dense frame.
-        The returned FlatParams is reconstructed from the DECODED bytes;
-        dense f32/bf16 round-trips are exact, so it is bit-identical to
-        ``fp`` (asserted by the protocol tests, relied on by the pinned
-        simulator regression)."""
+        segment of the shard table) and only the segments whose WRITE
+        VERSION moved past the client's version vector are re-sent — the
+        delta-handout rule; the client patches them into its held copy.
+        A plain (single-shard) bus falls back to one full-model dense
+        frame.  The returned FlatParams is reconstructed from the
+        DECODED bytes; dense f32/bf16 round-trips are exact, so it is
+        bit-identical to ``fp`` (asserted by the protocol tests, relied
+        on by the pinned simulator regression).
+
+        Version-vector invariant: ``client_vec[i] == bus_versions[i]``
+        if-and-only-if the client's held shard ``i`` is byte-identical
+        to the cached bus shard ``i`` — versions are bumped exactly when
+        a shard's bytes change vs the cache, and a client's vector is
+        snapshotted only after its held copy was patched to the cache's
+        content.  Equal version therefore ALWAYS implies equal bytes;
+        the converse can fail only on a content revert (A->B->A), which
+        costs a spurious re-send, never a missed one.
+
+        Caveat (documented, not exercised by any current scenario): a
+        replica scheme whose ``handout`` returns per-client buffers over
+        a sharded bus would thrash the cache and bump versions on every
+        alternation — extra frames, never wrong bytes."""
         spec = fp.spec
         buf = np.asarray(fp.buf)
         sharded = (isinstance(spec, F.ShardedTreeSpec) and spec.n_shards > 1)
-        prev = self._held.get(lease.cid) if sharded else None
-        if sharded:
-            frames = []
-            for i in range(spec.n_shards):
-                lo, hi = spec.shard_bounds(i)
-                if prev is not None and np.array_equal(buf[lo:hi],
-                                                       prev[lo:hi]):
-                    continue                    # client already holds it
-                frames.append(wire.encode_shard(buf[lo:hi], shard=i,
-                                                n_shards=spec.n_shards,
-                                                round=lease.round))
-            held = prev.copy() if prev is not None else np.zeros_like(buf)
-        else:
-            frames = [wire.encode_dense(buf, round=lease.round)]
-            held = buf
-        for frame in frames:
+        if not sharded:
+            frame = wire.encode_dense(buf, round=lease.round)
             msg = wire.decode(self.transport.recv(self.transport.send(frame)))
-            if msg.kind == wire.KIND_SHARD:
-                lo, hi = spec.shard_bounds(msg.shard)
-                held[lo:hi] = np.asarray(msg.payload)
-            else:
-                held = np.asarray(msg.payload)
+            held = np.asarray(msg.payload)
+            lease.handout_frames += 1
+            lease.handout_bytes += len(frame)
+            self.handout_frames += 1
+            self.handout_bytes += len(frame)
+            # backend-preserving: a numpy-backed bus (flat task protocol)
+            # hands out numpy — no device transfer on the hot path
+            return F.FlatParams(held if isinstance(fp.buf, np.ndarray)
+                                else jnp.asarray(held), spec)
+        n, length = spec.n_shards, spec.shard_len
+        if self._bus_versions is None or len(self._bus_versions) != n:
+            self._bus_versions = np.ones(n, np.uint32)
+            self._bus_cache = buf.copy()
+            self._bus_src = fp.buf
+            self._client_vec.clear()            # stale vectors: wrong shape
+        elif fp.buf is not self._bus_src:
+            # contiguous reshape (padded == n * shard_len) -> one
+            # vectorized per-shard comparison for the whole bus
+            cache2d = self._bus_cache.reshape(n, length)
+            buf2d = buf.reshape(n, length)
+            moved = np.any(buf2d != cache2d, axis=1)
+            if moved.any():
+                self._bus_versions = self._bus_versions.copy()
+                self._bus_versions[moved] += 1
+                cache2d[moved] = buf2d[moved]
+            self._bus_src = fp.buf
+        vec = self._client_vec.get(lease.cid)
+        if vec is None:
+            changed = range(n)                  # fresh client: full download
+        else:
+            changed = np.flatnonzero(self._bus_versions != vec).tolist()
+        held = self._bus_cache.copy()
+        for i in changed:
+            lo, hi = spec.shard_bounds(i)
+            frame = wire.encode_shard(buf[lo:hi], shard=i, n_shards=n,
+                                      round=lease.round)
+            msg = wire.decode(self.transport.recv(self.transport.send(frame)))
+            held[lo:hi] = np.asarray(msg.payload)
             lease.handout_frames += 1
             lease.handout_bytes += len(frame)
         self.handout_frames += lease.handout_frames
         self.handout_bytes += lease.handout_bytes
-        if sharded:
-            self._held[lease.cid] = held
-        return F.FlatParams(jnp.asarray(held), spec)
+        self._client_vec[lease.cid] = self._bus_versions
+        return F.FlatParams(held if isinstance(fp.buf, np.ndarray)
+                            else jnp.asarray(held), spec)
 
     def renew(self, lease: Lease, deadline: float) -> Lease:
         """Extend a live lease's deadline (client asked for more time)."""
         self._live(lease)
         lease.deadline = deadline
+        # fresh heap entry with a fresh seq; the old entry dies lazily
+        # (its seq no longer matches the lease's _dl_seq)
+        self._seq += 1
+        lease._dl_seq = self._seq
+        heapq.heappush(self._lease_heap, (deadline, self._seq, lease.key))
         return lease
 
     def submit(self, lease: Lease, trained_buf: jnp.ndarray) -> Lease:
@@ -196,8 +257,12 @@ class Coordinator:
                              f"({lease.status})")
         msg = wire.decode(self.transport.recv(lease.msg_id))
         self.frames[msg.kind] += 1
-        return (msg.payload if msg.kind == wire.KIND_SPARSE
-                else jnp.asarray(msg.payload))
+        if (msg.kind == wire.KIND_SPARSE
+                or isinstance(self.state.params.buf, np.ndarray)):
+            # sparse payloads pass through; a numpy-backed bus (flat task
+            # protocol) keeps the decoded payload on host — no device_put
+            return msg.payload
+        return jnp.asarray(msg.payload)
 
     def assimilate(self, lease: Lease, payload, *, server_version: int,
                    t_arrival: float = 0.0,
@@ -220,10 +285,18 @@ class Coordinator:
         if params_override is not None:
             self.state.params = params_override
         self.state = self.scheme.assimilate(self.state, payload, meta)
-        del self.leases[lease.key]
+        self._unregister(lease)
         lease._release(LEASE_ASSIMILATED)
         self.assimilated += 1
         return self.state
+
+    def _unregister(self, lease: Lease) -> None:
+        """Remove a lease from the registry and the per-cid index (the
+        deadline heap cleans up lazily)."""
+        del self.leases[lease.key]
+        cid_map = self._cid_leases.get(lease.cid)
+        if cid_map is not None:
+            cid_map.pop(lease.key, None)
 
     def _terminate(self, lease: Lease, status: str) -> None:
         """The single discard path (drop and expire both end here): the
@@ -232,7 +305,7 @@ class Coordinator:
         if lease.msg_id is not None:
             self.transport.drop(lease.msg_id)
         if self.leases.get(lease.key) is lease:
-            del self.leases[lease.key]
+            self._unregister(lease)
             lease._release(status)
             if status == LEASE_EXPIRED:
                 self.expired += 1
@@ -249,25 +322,35 @@ class Coordinator:
     def expire(self, now: float) -> List[Lease]:
         """Release every live lease past its deadline (the BOINC timeout:
         the unit will be reassigned under a NEW lease; this one can never
-        be assimilated afterwards)."""
-        out = [l for l in self.leases.values() if l.deadline <= now]
-        for lease in out:
-            self._terminate(lease, LEASE_EXPIRED)
+        be assimilated afterwards).  O(1) per call when nothing is due:
+        the deadline heap's root bounds the earliest live deadline."""
+        heap = self._lease_heap
+        out: List[Lease] = []
+        while heap and heap[0][0] <= now:
+            _, seq, key = heapq.heappop(heap)
+            lease = self.leases.get(key)
+            if lease is not None and getattr(lease, "_dl_seq", -1) == seq:
+                out.append(lease)
+        if out:
+            # registry-insertion order, exactly the old full-scan order
+            out.sort(key=lambda l: l._issue_seq)
+            for lease in out:
+                self._terminate(lease, LEASE_EXPIRED)
         return out
 
     def drop_client(self, cid: int) -> None:
         """Preemption: the client is gone.  Scheme-local state (replicas)
         is dropped, every lease held by the client is released, and the
-        client-side residual AND held-bytes ledgers forget it (both lived
-        on the dead instance — a respawned client re-downloads the full
-        model) — running norm totals updated, never rescanned."""
+        client-side residual AND version-vector ledgers forget it (both
+        lived on the dead instance — a respawned client re-downloads the
+        full model) — running norm totals updated, never rescanned."""
         self.scheme.drop_client(self.state, cid)
-        for lease in [l for l in self.leases.values() if l.cid == cid]:
-            self.drop(lease)
+        for key in list(self._cid_leases.get(cid, ())):
+            self.drop(self.leases[key])
         if cid in self._res_norms:
             self._res_norm_total -= self._res_norms.pop(cid)
             self._residuals.pop(cid, None)
-        self._held.pop(cid, None)
+        self._client_vec.pop(cid, None)
 
     def _live(self, lease: Lease) -> Lease:
         if self.leases.get(lease.key) is not lease:
@@ -321,7 +404,9 @@ class Coordinator:
         self.state = self.scheme.init_state(params)
         self.state.version = version
         self.restored_extra = dict(extra)
-        self._held.clear()             # every client re-downloads in full
+        # every client re-downloads in full: forget their version vectors
+        # (bus versions stay monotone across the restore)
+        self._client_vec.clear()
         return step
 
     # -- introspection -------------------------------------------------------

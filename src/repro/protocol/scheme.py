@@ -23,6 +23,7 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import flat as F
 from repro.protocol.types import Lease, ResultMeta, SchemeState, as_flat
@@ -107,6 +108,6 @@ class ServerScheme:
         through untouched."""
         if isinstance(payload, F.FlatParams):
             return payload.buf
-        if isinstance(payload, jnp.ndarray):
+        if isinstance(payload, (jnp.ndarray, np.ndarray)):
             return payload
         return F.flatten_like(payload, fp.spec)

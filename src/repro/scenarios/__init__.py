@@ -1,0 +1,3 @@
+"""Fleet-scale scenario registry (see registry.py) + the probe task."""
+from repro.scenarios.probe import ProbeTask, make_probe_data  # noqa: F401
+from repro.scenarios.registry import SCENARIOS, Scenario, get  # noqa: F401

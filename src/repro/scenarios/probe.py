@@ -1,0 +1,105 @@
+"""Fleet-probe task: the cheapest task that still drives the FULL protocol.
+
+Fleet-scale simulations (10k-100k clients) measure the *system* — event
+throughput, wire bytes, preemption churn, delta-handout behaviour — not
+learning curves.  Real JAX training at that scale would melt the clock
+for no extra information, so ``ProbeTask`` keeps the whole pipeline
+(flat bus, leases, wire frames on both legs, scheme assimilation) while
+replacing the client-side gradient computation with a deterministic
+O(dim) numpy nudge and the validation pass with a closed-form progress
+proxy.  Every byte on the wire is still real: the handout and upload
+frames are encoded/decoded/CRC'd exactly like the MLP task's.
+
+The parameter bus is ONE leaf, and ``ProbeTask`` speaks the simulator's
+**flat task protocol** (``init_params_flat`` / ``client_train_flat`` /
+``evaluate_flat``): the whole run stays on a numpy-backed flat bus, so
+the per-event hot path never crosses the tree<->bus boundary and never
+pays a JAX dispatch.  The tree-form methods remain as the reference
+semantics — the flat forms are bit-identical to tree-train +
+``flatten_like`` (the fleet fingerprints in benchmarks/fleet_bench.py
+pin this).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flat as F
+from repro.core.tasks import TaskData
+
+
+def make_probe_data(n_shards: int, seed: int = 0) -> TaskData:
+    """One sample per shard: the simulator's shard slicing stays O(1) and
+    the arrays stay tiny at 100k+ shards (the probe ignores the values)."""
+    n = max(int(n_shards), 1)
+    x = np.zeros((n, 1), np.float32)
+    y = np.zeros((n,), np.int32)
+    return TaskData(x_train=x, y_train=y,
+                    x_val=x[:1], y_val=y[:1])
+
+
+class ProbeTask:
+    """Single-leaf surrogate task for fleet-scale simulator runs.
+
+    * ``client_train`` adds a seed-deterministic one-hot nudge — O(dim)
+      numpy, no JAX dispatch, bit-reproducible across runs.
+    * ``evaluate`` maps the parameter norm through a saturating curve, so
+      scenario accuracy traces are monotone-ish in assimilated work and
+      deterministic, without a validation forward pass.
+    """
+
+    def __init__(self, dim: int = 256, lr: float = 0.05):
+        self.dim = int(dim)
+        self.lr = float(lr)
+        self.batch = 1                        # simulator sizes steps off this
+
+    def init_params(self, key):
+        del key                               # deterministic zero start
+        return {"w": jnp.zeros((self.dim,), jnp.float32)}
+
+    def client_train(self, params, x, y, *, steps: int, seed: int):
+        del x, y
+        w = np.array(params["w"], np.float32, copy=True)
+        # Knuth-hash the seed into a slot + sign: cheap, collision-spread
+        h = (int(seed) * 2654435761) & 0xFFFFFFFF
+        idx = h % self.dim
+        sign = 1.0 if (h >> 16) & 1 else -1.0
+        w[idx] += self.lr * sign * float(max(1, steps))
+        return {"w": w}
+
+    def evaluate(self, params, x, y) -> float:
+        del x, y
+        norm = float(np.linalg.norm(np.asarray(params["w"])))
+        return 1.0 - math.exp(-0.25 * norm)
+
+    # -- flat task protocol (core/simulator.py) -----------------------------
+    # Same math as the tree forms above, directly on the flat bus: the
+    # buffers these return are byte-identical to tree-train+flatten_like
+    # (the bus padding is zeros and stays zeros), so a simulator run is
+    # bit-identical whichever path it takes — just without per-event JAX
+    # dispatch.
+
+    def init_params_flat(self, key, n_shards: int = 1) -> F.FlatParams:
+        del key
+        tree = {"w": np.zeros((self.dim,), np.float32)}
+        spec = (F.sharded_tree_spec(tree, n_shards) if n_shards > 1
+                else F.tree_spec(tree))
+        return F.FlatParams(np.zeros((spec.padded,), np.float32), spec)
+
+    def client_train_flat(self, base: F.FlatParams, x, y,
+                          *, steps: int, seed: int) -> np.ndarray:
+        del x, y
+        buf = np.array(base.buf, np.float32, copy=True)
+        h = (int(seed) * 2654435761) & 0xFFFFFFFF
+        idx = h % self.dim
+        sign = 1.0 if (h >> 16) & 1 else -1.0
+        buf[base.spec.offsets[0] + idx] += self.lr * sign * float(max(1, steps))
+        return buf
+
+    def evaluate_flat(self, fp: F.FlatParams, x, y) -> float:
+        del x, y
+        off = fp.spec.offsets[0]
+        w = np.asarray(fp.buf)[off:off + self.dim]
+        return 1.0 - math.exp(-0.25 * float(np.linalg.norm(w)))

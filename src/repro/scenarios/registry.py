@@ -1,0 +1,232 @@
+"""Fleet-scale scenario registry: named, fixed (cfg, fleet, scheme)
+bundles the benchmarks, the CI smoke gate, the profiler, and the pinned
+fleet regression cases all run THE SAME WAY.
+
+Every scenario is deterministic in its seed.  The fleet-size scenarios
+(``fleet_1k/10k/100k``) use the ``ProbeTask`` surrogate (real protocol +
+wire bytes, O(dim) client compute) so the measurement is the event loop,
+not JAX; the behaviour scenarios (``az_reclaim``, ``spot_price``,
+``diurnal``, ``tiered``) open the preemption-model space stubbed by
+core/preemption.py — ``az_reclaim`` runs a SHARDED parameter bus so the
+thundering-herd mass re-download exercises the version-vector delta
+ledger end to end.
+
+Run one from the CLI::
+
+    PYTHONPATH=src python -m repro.scenarios.registry --scenario fleet_1k
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from repro.core.preemption import (PAPER_FLEET, CorrelatedReclaimModel,
+                                   DiurnalChurnModel, LatencyModel,
+                                   PreemptionModel, SpotPricePreemption,
+                                   make_fleet)
+from repro.core.simulator import SimConfig, SimResult, run_simulation
+from repro.scenarios.probe import ProbeTask, make_probe_data
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    cfg_kwargs: dict
+    # builds the fleet off cfg (None = the simulator's default path)
+    fleet_fn: Optional[Callable] = None
+    vc_beta: float = 0.95                # VC-ASGD averaging weight
+
+    def config(self) -> SimConfig:
+        return SimConfig(fleet_fn=self.fleet_fn, **self.cfg_kwargs)
+
+    def run(self) -> SimResult:
+        from repro.core.baselines import VCASGD
+        cfg = self.config()
+        task = ProbeTask()
+        data = make_probe_data(cfg.n_shards, seed=cfg.seed)
+        return run_simulation(task, data, VCASGD(self.vc_beta), cfg)
+
+
+# ---- fleet builders (cfg -> list[ClientModel]) ------------------------------
+
+def _az_reclaim_fleet(cfg: SimConfig):
+    model = CorrelatedReclaimModel(
+        mean_lifetime_s=cfg.mean_lifetime_s,
+        restart_delay_s=cfg.restart_delay_s,
+        enabled=cfg.preemptible,
+        az_reclaim_interval_s=4 * 3600.0, n_az=3, reclaim_seed=cfg.seed)
+    return make_fleet(cfg.n_clients, seed=cfg.seed, preemption=model,
+                      n_az=3)
+
+
+def _spot_price_fleet(cfg: SimConfig):
+    model = SpotPricePreemption(
+        mean_lifetime_s=cfg.mean_lifetime_s,
+        restart_delay_s=cfg.restart_delay_s,
+        enabled=cfg.preemptible,
+        bid=0.95, n_az=3, price_seed=cfg.seed)
+    return make_fleet(cfg.n_clients, seed=cfg.seed, preemption=model,
+                      n_az=3)
+
+
+def _diurnal_fleet(cfg: SimConfig):
+    model = DiurnalChurnModel(
+        mean_lifetime_s=cfg.mean_lifetime_s,
+        restart_delay_s=cfg.restart_delay_s,
+        enabled=cfg.preemptible, n_regions=4)
+    return make_fleet(cfg.n_clients, seed=cfg.seed, preemption=model,
+                      n_az=4)
+
+
+def _tiered_fleet(cfg: SimConfig):
+    # fast/medium/slow compute+bandwidth mix (weights sum to 1)
+    tiers = [(PAPER_FLEET[3], 0.2),      # c5a.4xlarge: 2.3x speed
+             (PAPER_FLEET[4], 0.5),      # m5.2xlarge: reference
+             (PAPER_FLEET[2], 0.3)]      # c5a.2xlarge: 1.2x, 2 Gbps
+    model = PreemptionModel(mean_lifetime_s=cfg.mean_lifetime_s,
+                            restart_delay_s=cfg.restart_delay_s,
+                            enabled=cfg.preemptible)
+    return make_fleet(cfg.n_clients, seed=cfg.seed, preemption=model,
+                      tiers=tiers)
+
+
+# ---- the registry -----------------------------------------------------------
+# NOTE: fleet_1k / fleet_10k are ALSO the pre-PR baseline measurement
+# configs embedded in results/BENCH_fleet.json — changing them invalidates
+# the recorded pre/post comparison.
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def _reg(s: Scenario) -> Scenario:
+    SCENARIOS[s.name] = s
+    return s
+
+
+_reg(Scenario(
+    "fleet_smoke",
+    "tiny fleet scenario for the CI gate (seconds)",
+    dict(n_param_servers=2, n_clients=200, tasks_per_client=1,
+         n_shards=400, max_epochs=1, local_steps=1,
+         timeout_s=1800.0, preemptible=True, mean_lifetime_s=5400.0,
+         restart_delay_s=120.0, subtask_compute_s=120.0,
+         server_proc_s=0.05, seed=7)))
+
+_reg(Scenario(
+    "fleet_1k",
+    "1k clients x 2 epochs, exponential churn, probe task",
+    dict(n_param_servers=4, n_clients=1000, tasks_per_client=1,
+         n_shards=2000, max_epochs=2, local_steps=1,
+         timeout_s=1800.0, preemptible=True, mean_lifetime_s=5400.0,
+         restart_delay_s=120.0, subtask_compute_s=120.0,
+         server_proc_s=0.05, seed=7)))
+
+_reg(Scenario(
+    "fleet_10k",
+    "10k clients x 1 epoch, exponential churn, probe task",
+    dict(n_param_servers=8, n_clients=10000, tasks_per_client=1,
+         n_shards=12000, max_epochs=1, local_steps=1,
+         timeout_s=1800.0, preemptible=True, mean_lifetime_s=5400.0,
+         restart_delay_s=120.0, subtask_compute_s=120.0,
+         server_proc_s=0.02, seed=7)))
+
+_reg(Scenario(
+    "fleet_100k",
+    "100k clients x 3 epochs, exponential churn, eval every 64th result",
+    dict(n_param_servers=16, n_clients=100000, tasks_per_client=1,
+         n_shards=100000, max_epochs=3, local_steps=1,
+         timeout_s=3600.0, preemptible=True, mean_lifetime_s=14400.0,
+         restart_delay_s=120.0, subtask_compute_s=300.0,
+         server_proc_s=0.005, seed=7, eval_stride=64)))
+
+_reg(Scenario(
+    "az_reclaim",
+    "correlated AZ mass reclaims over a SHARDED bus: the thundering herd "
+    "of full re-downloads goes through the version-vector delta ledger",
+    dict(n_param_servers=4, n_clients=600, tasks_per_client=1,
+         n_shards=1200, max_epochs=2, local_steps=1,
+         timeout_s=1800.0, preemptible=True, mean_lifetime_s=7200.0,
+         restart_delay_s=120.0, subtask_compute_s=120.0,
+         server_proc_s=0.05, seed=11, bus_shards=8),
+    fleet_fn=_az_reclaim_fleet))
+
+_reg(Scenario(
+    "spot_price",
+    "spot-market preemption: per-AZ mean-reverting price vs a fixed bid",
+    dict(n_param_servers=4, n_clients=600, tasks_per_client=1,
+         n_shards=1200, max_epochs=2, local_steps=1,
+         timeout_s=1800.0, preemptible=True, mean_lifetime_s=5400.0,
+         restart_delay_s=180.0, subtask_compute_s=120.0,
+         server_proc_s=0.05, seed=11),
+    fleet_fn=_spot_price_fleet))
+
+_reg(Scenario(
+    "diurnal",
+    "volunteer churn with a 24h sinusoidal departure hazard per region",
+    dict(n_param_servers=4, n_clients=600, tasks_per_client=1,
+         n_shards=1200, max_epochs=2, local_steps=1,
+         timeout_s=1800.0, preemptible=True, mean_lifetime_s=10800.0,
+         restart_delay_s=300.0, subtask_compute_s=120.0,
+         server_proc_s=0.05, seed=11),
+    fleet_fn=_diurnal_fleet))
+
+_reg(Scenario(
+    "tiered",
+    "heterogeneous compute/bandwidth tiers (20% fast / 50% ref / 30% slow)",
+    dict(n_param_servers=4, n_clients=600, tasks_per_client=1,
+         n_shards=1200, max_epochs=2, local_steps=1,
+         timeout_s=1800.0, preemptible=True, mean_lifetime_s=5400.0,
+         restart_delay_s=120.0, subtask_compute_s=120.0,
+         server_proc_s=0.05, seed=11),
+    fleet_fn=_tiered_fleet))
+
+
+def get(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; have: "
+                       f"{', '.join(sorted(SCENARIOS))}") from None
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+    import time
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", required=True,
+                    help="one of: " + ", ".join(sorted(SCENARIOS)))
+    ap.add_argument("--json", action="store_true",
+                    help="emit the result summary as json")
+    args = ap.parse_args(argv)
+    sc = get(args.scenario)
+    t0 = time.perf_counter()
+    res = sc.run()
+    wall = time.perf_counter() - t0
+    summary = {
+        "scenario": sc.name,
+        "bench_wall_s": round(wall, 3),
+        "events_processed": res.events_processed,
+        "events_per_sec": round(res.events_processed / max(wall, 1e-9), 1),
+        "sim_wall_time_s": res.wall_time_s,
+        "epochs_done": res.epochs_done,
+        "results_assimilated": res.results_assimilated,
+        "preemptions": res.preemptions,
+        "reassignments": res.reassignments,
+        "final_accuracy": res.final_accuracy,
+        "wire_bytes_sent": int(res.wire.bytes_sent),
+        "handout_frames": res.handout_frames,
+        "handout_bytes": int(res.handout_bytes),
+    }
+    if args.json:
+        print(json.dumps(summary, indent=1))
+    else:
+        for k, v in summary.items():
+            print(f"{k:>22}: {v}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,378 @@
+"""Fleet-scale PR tests: the version-vector delta ledger against a
+byte-map oracle (the OLD per-client held-bytes algorithm), the
+PendingQueue against the old sorted-list selection, event-ordering
+determinism, eval-stride memory hygiene, and the scenario registry."""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import flat as F
+from repro.core.baselines import VCASGD
+from repro.core.preemption import (CorrelatedReclaimModel, DiurnalChurnModel,
+                                   PAPER_FLEET, PreemptionModel,
+                                   SpotPricePreemption, make_fleet)
+from repro.core.simulator import SimConfig, run_simulation
+from repro.core.work_generator import PendingQueue, WorkUnit
+from repro.protocol import Coordinator
+from repro.scenarios.probe import ProbeTask, make_probe_data
+from repro.scenarios.registry import SCENARIOS, get
+from repro.transfer import wire
+from repro.transfer.transport import LoopbackTransport
+
+
+# ---------------------------------------------------------------------------
+# version-vector ledger vs the old per-client byte-map ledger
+# ---------------------------------------------------------------------------
+
+class ByteMapOracle:
+    """The pre-PR delta-handout algorithm, verbatim: one full byte copy
+    per client, per-shard np.array_equal against it on every handout."""
+
+    def __init__(self):
+        self.held = {}
+
+    def handout(self, cid, buf, spec):
+        prev = self.held.get(cid)
+        sent = []
+        for i in range(spec.n_shards):
+            lo, hi = spec.shard_bounds(i)
+            if prev is not None and np.array_equal(buf[lo:hi], prev[lo:hi]):
+                continue
+            sent.append((i, buf[lo:hi].tobytes()))
+        held = prev.copy() if prev is not None else np.zeros_like(buf)
+        for i, _ in sent:
+            lo, hi = spec.shard_bounds(i)
+            held[lo:hi] = buf[lo:hi]
+        self.held[cid] = held
+        return sent
+
+    def drop(self, cid):
+        self.held.pop(cid, None)
+
+    def restore(self):
+        self.held.clear()
+
+
+class RecordingTransport(LoopbackTransport):
+    """Captures every sent frame so tests can decode what went on the
+    wire (the handout leg is the only sender in these tests)."""
+
+    def __init__(self):
+        super().__init__()
+        self.sent_frames = []
+
+    def send(self, frame):
+        self.sent_frames.append(bytes(frame))
+        return super().send(frame)
+
+
+def _mk_bus(n_shards, fill=0.0):
+    tree = {"w": np.full((n_shards * 8,), fill, np.float32)}
+    return F.flatten_sharded(tree, n_shards)
+
+
+def _mutate(fp, shard_ids, stamp):
+    """Fresh params: write a NEVER-REPEATING stamp into the given shards
+    (monotone-distinct content — float training never reverts bytes, and
+    the version ledger's over-send-on-revert is deliberately out of
+    contract)."""
+    spec = fp.spec
+    buf = np.asarray(fp.buf).copy()
+    for s in shard_ids:
+        lo, hi = spec.shard_bounds(s)
+        buf[lo:hi] = float(stamp) + s * 0.001
+    import jax.numpy as jnp
+    return F.FlatParams(jnp.asarray(buf), spec)
+
+
+def _run_schedule(n_shards, schedule):
+    """Drive a real Coordinator and the byte-map oracle through the same
+    handout/drop schedule; compare the wire frames frame-for-frame."""
+    fp = _mk_bus(n_shards)
+    transport = RecordingTransport()
+    coord = Coordinator(VCASGD(0.95), fp, transport=transport)
+    oracle = ByteMapOracle()
+    uid = 0
+    stamp = 1
+    for op, arg in schedule:
+        if op == "mutate":
+            fp = _mutate(fp, arg, stamp)
+            stamp += 1
+        elif op == "drop":
+            coord.drop_client(arg)
+            oracle.drop(arg)
+        elif op == "handout":
+            cid = arg
+            n_before = len(transport.sent_frames)
+            lease = coord.issue(cid=cid, uid=uid, round=0, base=fp)
+            uid += 1
+            got = []
+            for fr in transport.sent_frames[n_before:]:
+                msg = wire.decode(fr)
+                assert msg.kind == wire.KIND_SHARD
+                got.append((msg.shard,
+                            np.asarray(msg.payload).tobytes()))
+            want = oracle.handout(cid, np.asarray(fp.buf), fp.spec)
+            assert got == want, (
+                f"frame mismatch for cid {cid}: sent shards "
+                f"{[s for s, _ in got]} vs oracle {[s for s, _ in want]}")
+            # the reconstructed base must be the full current bus
+            assert np.array_equal(np.asarray(lease.base.buf),
+                                  np.asarray(fp.buf))
+            coord.drop(lease)       # keep the lease registry from growing
+    return coord, oracle
+
+
+def test_version_vector_matches_byte_map_deterministic():
+    n_shards = 6
+    schedule = [
+        ("handout", 0),                 # fresh: all 6 shards
+        ("handout", 0),                 # unchanged: 0 frames
+        ("mutate", [2, 4]), ("handout", 0),     # delta: shards 2,4
+        ("handout", 1),                 # fresh client: all 6
+        ("mutate", [0]), ("handout", 1),        # delta: shard 0
+        ("handout", 0),                 # client 0 missed the [0] write too
+        ("drop", 0), ("handout", 0),    # preempted: full re-download
+        ("mutate", [1, 2, 3]), ("handout", 1),
+        ("drop", 1), ("mutate", [5]), ("handout", 1),
+    ]
+    _run_schedule(n_shards, schedule)
+
+
+def test_version_vector_full_redownload_after_restore(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    fp = _mk_bus(4)
+    transport = RecordingTransport()
+    coord = Coordinator(VCASGD(0.95), fp, transport=transport)
+    l0 = coord.issue(cid=0, uid=0, round=0, base=fp)
+    assert l0.handout_frames == 4           # fresh: full download
+    coord.drop(l0)
+    l1 = coord.issue(cid=0, uid=1, round=0, base=fp)
+    assert l1.handout_frames == 0           # caught up
+    coord.drop(l1)
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    coord.save_checkpoint(mgr, step=1)
+    assert coord.restore_checkpoint(mgr) == 1
+    l2 = coord.issue(cid=0, uid=2, round=0, base=fp)
+    assert l2.handout_frames == 4           # restore forgets client vectors
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_version_vector_matches_byte_map_property(data):
+    n_shards = data.draw(st.integers(min_value=2, max_value=8))
+    n_clients = data.draw(st.integers(min_value=1, max_value=4))
+    ops = data.draw(st.lists(st.tuples(
+        st.sampled_from(["handout", "mutate", "drop"]),
+        st.integers(min_value=0, max_value=9)), min_size=1, max_size=40))
+    schedule = []
+    for op, x in ops:
+        if op == "handout" or op == "drop":
+            schedule.append((op, x % n_clients))
+        else:
+            shards = [x % n_shards, (x * 7 + 1) % n_shards]
+            schedule.append((op, sorted(set(shards))))
+    _run_schedule(n_shards, schedule)
+
+
+# ---------------------------------------------------------------------------
+# PendingQueue vs the old sorted-list selection
+# ---------------------------------------------------------------------------
+
+def _unit(uid, shard, epoch=1):
+    return WorkUnit(uid=uid, epoch=epoch, shard=shard, param_version=-1)
+
+
+def test_pending_queue_matches_sorted_oracle_deterministic():
+    rng = np.random.default_rng(0)
+    q = PendingQueue()
+    shadow = []
+    uid = 0
+    for _ in range(300):
+        op = rng.integers(3)
+        if op == 0 or not shadow:
+            u = _unit(uid, int(rng.integers(8)))
+            uid += 1
+            q.append(u)
+            shadow.append(u)
+        elif op == 1:
+            cache = set(int(s) for s in
+                        rng.choice(8, size=int(rng.integers(4)),
+                                   replace=False))
+            k = int(rng.integers(1, 4))
+            want = sorted(shadow,
+                          key=lambda u: (u.shard not in cache, u.uid))[:k]
+            got = q.select(cache, k)
+            assert [u.uid for u in got] == [u.uid for u in want]
+            for u in want:
+                shadow.remove(u)
+        else:
+            u = shadow.pop(int(rng.integers(len(shadow))))
+            q.remove(u)
+        assert len(q) == len(shadow)
+        assert sorted(u.uid for u in q) == sorted(u.uid for u in shadow)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7),
+                          st.integers(1, 3)), min_size=1, max_size=60))
+def test_pending_queue_matches_sorted_oracle_property(ops):
+    q = PendingQueue()
+    shadow = []
+    uid = 0
+    for op, shard, k in ops:
+        if op == 0 or not shadow:
+            u = _unit(uid, shard)
+            uid += 1
+            q.append(u)
+            shadow.append(u)
+        elif op == 1:
+            cache = {shard, (shard + 3) % 8}
+            want = sorted(shadow,
+                          key=lambda u: (u.shard not in cache, u.uid))[:k]
+            got = q.select(cache, k)
+            assert [u.uid for u in got] == [u.uid for u in want]
+            for u in want:
+                shadow.remove(u)
+        else:
+            u = shadow.pop(shard % len(shadow))
+            q.remove(u)
+
+
+# ---------------------------------------------------------------------------
+# event loop: determinism, eval stride, sharded bus in-sim
+# ---------------------------------------------------------------------------
+
+def _small_cfg(**kw):
+    base = dict(n_param_servers=2, n_clients=60, tasks_per_client=1,
+                n_shards=120, max_epochs=1, local_steps=1,
+                timeout_s=1800.0, preemptible=True, mean_lifetime_s=3600.0,
+                restart_delay_s=60.0, subtask_compute_s=60.0,
+                server_proc_s=0.05, seed=3)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _fingerprint(res):
+    return (res.wall_time_s, res.results_assimilated, res.preemptions,
+            res.reassignments, res.final_accuracy,
+            int(res.wire.bytes_sent), int(res.handout_bytes),
+            res.events_processed)
+
+
+def _run(cfg):
+    task = ProbeTask()
+    data = make_probe_data(cfg.n_shards, seed=cfg.seed)
+    return run_simulation(task, data, VCASGD(0.95), cfg)
+
+
+def test_same_seed_same_trace():
+    a, b = _run(_small_cfg()), _run(_small_cfg())
+    assert _fingerprint(a) == _fingerprint(b)
+    assert a.events_processed > 0
+
+
+def test_eval_stride_changes_only_eval_sampling():
+    full = _run(_small_cfg())
+    strided = _run(_small_cfg(eval_stride=8))
+    # the virtual clock, wire traffic, and churn are eval-independent
+    assert strided.wall_time_s == full.wall_time_s
+    assert strided.results_assimilated == full.results_assimilated
+    assert int(strided.wire.bytes_sent) == int(full.wire.bytes_sent)
+    assert strided.preemptions == full.preemptions
+    assert strided.events_processed == full.events_processed
+    # the final (unconditional) evaluation is identical
+    assert strided.final_accuracy == full.final_accuracy
+
+
+def test_sharded_bus_runs_delta_ledger_in_sim():
+    dense = _run(_small_cfg(preemptible=False))
+    sharded = _run(_small_cfg(preemptible=False, bus_shards=4))
+    # same virtual-time behaviour class, but per-shard delta frames:
+    # later handouts skip unchanged shards, so frame count per handout
+    # drops below bus_shards on average
+    assert sharded.results_assimilated == dense.results_assimilated
+    assert sharded.handout_frames > 0
+    n_handouts = sharded.handout_frames  # frames, not handouts; bound it:
+    assert n_handouts < 4 * (sharded.results_assimilated + 60)
+
+
+# ---------------------------------------------------------------------------
+# preemption models + registry
+# ---------------------------------------------------------------------------
+
+def test_lifetime_end_base_matches_sample_lifetime():
+    m = PreemptionModel(mean_lifetime_s=500.0)
+    r1, r2 = np.random.default_rng(9), np.random.default_rng(9)
+    assert m.lifetime_end(r1, 10.0) == 10.0 + m.sample_lifetime(r2)
+    off = PreemptionModel(enabled=False)
+    assert m.lifetime_end(np.random.default_rng(0), 0.0) < float("inf")
+    assert off.lifetime_end(np.random.default_rng(0), 0.0) == float("inf")
+
+
+def test_correlated_reclaim_kills_whole_az_together():
+    m = CorrelatedReclaimModel(mean_lifetime_s=1e12, n_az=2,
+                               az_reclaim_interval_s=3600.0, reclaim_seed=1)
+    fleet = make_fleet(6, seed=1, preemption=m, n_az=2)
+    ends = {}
+    for c in fleet:
+        ends.setdefault(c.az, set()).add(m.lifetime_end(c.rng, 0.0, c))
+    # individual lifetimes are ~inf, so every client in an AZ dies at
+    # the AZ's first reclaim time
+    assert all(len(v) == 1 for v in ends.values())
+    assert ends[0] != ends[1]
+
+
+def test_spot_price_is_deterministic_and_az_correlated():
+    m = SpotPricePreemption(n_az=2, bid=0.9, price_seed=3)
+    fleet = make_fleet(4, seed=2, preemption=m, n_az=2)
+    e0 = m.lifetime_end(fleet[0].rng, 0.0, fleet[0])
+    e2 = m.lifetime_end(fleet[2].rng, 0.0, fleet[2])
+    assert e0 == e2                     # same AZ -> same crossing
+    later = m.lifetime_end(fleet[0].rng, e0 + 1.0, fleet[0])
+    assert later > e0                   # strictly the NEXT crossing
+
+
+def test_diurnal_lifetimes_monotone_in_hazard_draw():
+    m = DiurnalChurnModel(mean_lifetime_s=3600.0, n_regions=2)
+    fleet = make_fleet(2, seed=5, preemption=m, n_az=2)
+    e = m.lifetime_end(np.random.default_rng(1), 0.0, fleet[0])
+    assert 0.0 < e < float("inf")
+
+
+def test_tiered_fleet_keeps_default_rng_stream():
+    f_plain = make_fleet(8, seed=6)
+    tiers = [(PAPER_FLEET[0], 0.5), (PAPER_FLEET[3], 0.5)]
+    f_tier = make_fleet(8, seed=6, tiers=tiers, n_az=2)
+    for a, b in zip(f_plain, f_tier):
+        assert a.rng.integers(2 ** 32) == b.rng.integers(2 ** 32)
+    assert {c.az for c in f_tier} == {0, 1}
+
+
+def test_registry_scenarios_resolve_and_smoke_runs():
+    for name in ("fleet_smoke", "fleet_1k", "fleet_10k", "fleet_100k",
+                 "az_reclaim", "spot_price", "diurnal", "tiered"):
+        assert get(name).name == name
+    with pytest.raises(KeyError):
+        get("nope")
+    res = get("fleet_smoke").run()
+    assert res.results_assimilated == 400
+    assert res.events_processed > 0
+
+
+def test_behaviour_scenarios_run_small():
+    """Each fleet_fn drives an actual (tiny) simulation end to end; the
+    az_reclaim variant keeps the sharded bus so the thundering-herd
+    re-downloads go through the version-vector ledger."""
+    from repro.scenarios import registry as R
+
+    for fleet_fn, extra in ((R._az_reclaim_fleet, {"bus_shards": 4}),
+                            (R._spot_price_fleet, {}),
+                            (R._diurnal_fleet, {}),
+                            (R._tiered_fleet, {})):
+        cfg = _small_cfg(n_clients=40, n_shards=80, fleet_fn=fleet_fn,
+                         **extra)
+        res = _run(cfg)
+        assert res.results_assimilated == 80
+        assert res.final_accuracy > 0.0

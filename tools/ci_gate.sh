@@ -42,5 +42,11 @@ if grep -q "round 0:" "$resume_dir/second.log"; then
 fi
 echo "[ci-gate] vc_serve kill-and-resume: rounds stayed monotone"
 
+# fleet smoke: a 200-client preemptible scenario end to end through the
+# scenario registry (probe task, real wire frames) — proves the fleet
+# path stays runnable; throughput is gated separately by --check below
+python -m repro.scenarios.registry --scenario fleet_smoke > /dev/null
+echo "[ci-gate] fleet smoke scenario completed"
+
 python -m benchmarks.run --check
 echo "[ci-gate] all green"

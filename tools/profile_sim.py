@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""cProfile wrapper around run_simulation for a named scenario.
+
+Prints the top-N cumulative-time hotspots (pstats), so per-event cost
+claims are evidence-backed instead of guessed::
+
+    PYTHONPATH=src python tools/profile_sim.py --scenario fleet_smoke
+    PYTHONPATH=src python tools/profile_sim.py --scenario fleet_1k -n 30 \
+        --sort tottime
+
+Any scenario from repro.scenarios.registry works; the probe task keeps
+client compute out of the way, so what you see IS the event loop +
+protocol + wire stack.
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import pstats
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main(argv=None) -> int:
+    from repro.scenarios.registry import SCENARIOS, get
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="fleet_smoke",
+                    help="one of: " + ", ".join(sorted(SCENARIOS)))
+    ap.add_argument("-n", "--top", type=int, default=20,
+                    help="how many rows to print (default 20)")
+    ap.add_argument("--sort", default="cumulative",
+                    choices=["cumulative", "tottime", "ncalls"],
+                    help="pstats sort key (default cumulative)")
+    ap.add_argument("--dump", default=None,
+                    help="optional path to write the raw .prof stats")
+    args = ap.parse_args(argv)
+
+    sc = get(args.scenario)
+    prof = cProfile.Profile()
+    t0 = time.perf_counter()
+    prof.enable()
+    res = sc.run()
+    prof.disable()
+    wall = time.perf_counter() - t0
+
+    print(f"scenario {sc.name}: {res.events_processed} events in "
+          f"{wall:.2f}s wall ({res.events_processed / max(wall, 1e-9):,.0f} "
+          f"events/sec), {res.results_assimilated} results, "
+          f"{res.preemptions} preemptions")
+    print()
+    stats = pstats.Stats(prof)
+    stats.sort_stats(args.sort).print_stats(args.top)
+    if args.dump:
+        stats.dump_stats(args.dump)
+        print(f"raw stats -> {args.dump}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
