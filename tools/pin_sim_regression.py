@@ -61,10 +61,33 @@ CASES = {
         dict(n_param_servers=2, tasks_per_client=4, server_proc_s=45.0)),
 }
 
+# fleet-scale pins (PR 6): ProbeTask over the probe dataset (third tuple
+# element "probe"), exercising the flat task protocol end to end — the
+# O(1)-per-event loop with churn, the version-vector delta ledger over a
+# sharded bus, and the bounded eval_stride accumulation.
+FLEET_BASE = dict(n_param_servers=2, n_clients=120, tasks_per_client=1,
+                  n_shards=240, max_epochs=2, local_steps=1,
+                  timeout_s=1800.0, preemptible=True,
+                  mean_lifetime_s=5400.0, restart_delay_s=120.0,
+                  subtask_compute_s=120.0, server_proc_s=0.05, seed=7)
+CASES.update({
+    "fleet-churn": (lambda: VCASGD(0.95), dict(FLEET_BASE), "probe"),
+    "fleet-sharded-bus": (
+        lambda: VCASGD(0.95),
+        dict(FLEET_BASE, bus_shards=4, seed=11), "probe"),
+    "fleet-eval-stride": (
+        lambda: VCASGD(0.95), dict(FLEET_BASE, eval_stride=8), "probe"),
+})
+
 
 def run_case(task, data, name):
-    factory, overrides = CASES[name]
+    case = CASES[name]
+    factory, overrides = case[0], case[1]
     cfg = SimConfig(**{**BASE, **overrides})
+    if len(case) > 2 and case[2] == "probe":
+        from repro.scenarios.probe import ProbeTask, make_probe_data
+        task = ProbeTask()
+        data = make_probe_data(cfg.n_shards, seed=cfg.seed)
     res = run_simulation(task, data, factory(), cfg)
     return {
         "wall_time_s": float(res.wall_time_s),
