@@ -1,7 +1,10 @@
 """Fleet-scale event-loop benchmark (``--only fleet``).
 
 Runs the registry's fleet scenarios (1k/10k clients; 100k with --full)
-and reports events/sec + wall-clock into ``results/BENCH_fleet.json``.
+and reports events/sec + wall-clock into ``results/BENCH_fleet.json``,
+plus the aggregation-tier comparison: the same 10k fleet behind 32 edge
+aggregators (``fleet_10k_tier``), claiming the hub's upstream frame count
+shrinks by at least half the fan-in versus flat.
 
 ``PRE_PR`` holds the measured wall times of the SAME scenario configs on
 the pre-refactor event loop (per-event O(n_clients) preemption sweep,
@@ -62,6 +65,12 @@ def _run(name: str) -> dict:
         "wire_bytes_sent": int(res.wire.bytes_sent),
         "handout_frames": res.handout_frames,
         "handout_bytes": int(res.handout_bytes),
+        # result frames the HUB transport carried upward (frames_sent
+        # minus download-leg handouts): per-client payloads when flat,
+        # merged KIND_AGG frames behind an aggregation tier
+        "upstream_frames": int(res.wire.frames_sent) - res.handout_frames,
+        "aggregators": res.aggregators,
+        "agg_flushes": res.agg_flushes,
     }
 
 
@@ -89,6 +98,24 @@ def bench_fleet(quick: bool = True) -> dict:
         out[name] = entry
     if "fleet_10k" in out:
         claims["10k_speedup_ge_10x"] = out["fleet_10k"]["speedup"] >= 10.0
+        # ---- aggregation tier: same 10k fleet behind 32 edges ----------
+        # the hub sees ONE merged frame per flush window instead of one
+        # frame per client result; the reduction should be on the order
+        # of the fan-in (10000/32 = 312.5 clients per aggregator)
+        tier = _run("fleet_10k_tier")
+        flat_up = out["fleet_10k"]["upstream_frames"]
+        fan_in = 10000 / 32
+        tier["upstream_reduction_x"] = round(
+            flat_up / max(tier["upstream_frames"], 1), 1)
+        tier["upstream_bytes_reduction_x"] = round(
+            out["fleet_10k"]["wire_bytes_sent"]
+            / max(tier["wire_bytes_sent"], 1), 1)
+        out["fleet_10k_tier"] = tier
+        claims["10k_tier_all_results_assimilated"] = (
+            tier["results_assimilated"]
+            == out["fleet_10k"]["results_assimilated"])
+        claims["10k_tier_upstream_reduction_ge_half_fan_in"] = (
+            tier["upstream_reduction_x"] >= 0.5 * fan_in)
     if "fleet_100k" in out:
         claims["100k_single_digit_minutes"] = (
             out["fleet_100k"]["bench_wall_s"] < 600.0)

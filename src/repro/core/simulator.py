@@ -38,9 +38,9 @@ from repro.core.preemption import (ClientModel, LatencyModel, PreemptionModel,
                                    make_fleet)
 from repro.core.scheduler import Scheduler
 from repro.core.work_generator import WorkGenerator, split_dataset
-from repro.protocol import Coordinator, ServerScheme, as_flat, as_tree
+from repro.protocol import Aggregator, Coordinator, ServerScheme, as_flat, as_tree
 from repro.transfer import wire
-from repro.transfer.transport import Transport, TransportStats
+from repro.transfer.transport import LoopbackTransport, Transport, TransportStats
 
 
 @dataclass
@@ -89,6 +89,17 @@ class SimConfig:
     # diurnal preemption models and heterogeneous tiers; None = the
     # historical make_fleet path (bit-identical)
     fleet_fn: Optional[Callable] = None
+    # ---- hierarchical aggregation tier -------------------------------------
+    # 0 = flat (every client leases from the hub; bit-identical to the
+    # pre-tier engine).  N > 0 inserts N edge aggregators: client cid
+    # leases from aggregator cid % N, each aggregator folds its window's
+    # arrivals with the scheme's own per-arrival assimilate and ships ONE
+    # merged KIND_AGG frame upstream per flush — the hub transport then
+    # carries only upstream traffic (the fan-in reduction the ROADMAP
+    # "millions of users" item asks for).  Aggregators are modelled as
+    # infrastructure (not preemptible); losing one is covered by
+    # Aggregator.fail() property tests, not the preemption process.
+    aggregators: int = 0
 
 
 @dataclass
@@ -128,6 +139,16 @@ class SimResult:
     events_processed: int = 0
     # final server-side SchemeState (typed; replicas/backups inspectable)
     scheme_state: Any = None
+    # ---- aggregation tier (cfg.aggregators > 0) ----------------------------
+    # In tier mode ``wire``/``handout_*`` cover the HUB transport only —
+    # upstream merged frames down, window-base handouts up — which is the
+    # measurable fan-in reduction; ``edge_wire`` sums the per-aggregator
+    # edge transports (client handouts + result uploads), and the dense/
+    # sparse frame counters above already include the edge legs.
+    aggregators: int = 0
+    agg_flushes: int = 0              # merged frames shipped upstream
+    wire_agg_frames: int = 0          # KIND_AGG frames the hub assimilated
+    edge_wire: Optional[TransportStats] = None
 
     def acc_at_time(self, t: float) -> float:
         """Accuracy of the LATEST epoch completed at or before ``t`` (0.0
@@ -150,6 +171,8 @@ _RESPAWN = 1
 _DISPATCH = 2               # client pulls new work (post-commit)
 _UPLOAD = 3                 # client finished local training; starts upload
 _ARRIVE = 4                 # result lands at the web server
+_AGG_ARRIVE = 5             # merged edge frame lands at the hub (tier mode)
+_WINDOW_OPEN = 6            # aggregator handout downloaded; window usable
 
 
 def _pick_server(ps_busy) -> int:
@@ -214,6 +237,39 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
     # each result lands on the earliest-free one (_pick_server)
     ps_busy = [0.0] * cfg.n_param_servers
 
+    # ---- the aggregation tier (cfg.aggregators > 0) ------------------------
+    # Each edge aggregator is a REAL Aggregator over its own loopback
+    # transport: client handouts/uploads cross the EDGE transport, the hub
+    # transport carries only upstream window handouts and merged KIND_AGG
+    # frames.  A window admits one dispatch per assigned client (its
+    # fan-in) and flushes when every lease it issued has terminated;
+    # clients pulling against a closed/full window are deferred and
+    # drained when the next window opens.  Aggregators are server-class
+    # infrastructure: their upstream transfers draw from a dedicated
+    # per-aggregator rng stream (never the clients' — the flat event
+    # trace is untouched) through the shared LatencyModel at 10 Gbps.
+    n_agg = cfg.aggregators
+    aggs: List[Aggregator] = []
+    if n_agg:
+        aggs = [Aggregator(scheme, coord, agg_id=a,
+                           transport=LoopbackTransport(),
+                           timeout_s=cfg.timeout_s)
+                for a in range(n_agg)]
+        agg_lat = LatencyModel()
+        agg_rngs = [np.random.default_rng((cfg.seed, 0xA66, a))
+                    for a in range(n_agg)]
+        fan = [0] * n_agg               # clients assigned per aggregator
+        for c in fleet:
+            fan[c.cid % n_agg] += 1
+        agg_open = [False] * n_agg      # window accepting dispatches
+        agg_disp = [0] * n_agg          # dispatches admitted this window
+        agg_rv = [0] * n_agg            # store version of the window base
+        agg_busy = [0.0] * n_agg        # serial fold chain (like a PS)
+        agg_deferred: List[List[int]] = [[] for _ in range(n_agg)]
+        agg_def_set: List[set] = [set() for _ in range(n_agg)]
+    upstream_live = 0                   # merged frames in flight to the hub
+    pending_rolls: List[int] = []       # epochs rolled, awaiting hub commit
+
     # validation accuracy per assimilated subtask, grouped by epoch
     epoch_accs: Dict[int, List[float]] = {}
     epoch_done_t: Dict[int, float] = {}
@@ -254,6 +310,44 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
     for c in fleet:
         track_spawn(c)
 
+    def maybe_flush(a: int, now: float):
+        """Flush aggregator ``a``'s window iff it is open, admitted at
+        least one dispatch, and every lease it issued has terminated
+        (folded, expired, or dropped) — called after every event that can
+        retire an edge lease.  The merged frame's upstream transfer is
+        timed off its REAL encoded length; a window whose every result
+        was lost flushes to nothing (the upstream lease is dropped, never
+        submitted) and reopens immediately."""
+        nonlocal upstream_live
+        agg = aggs[a]
+        if not agg_open[a] or agg_disp[a] == 0 or agg.in_flight != 0:
+            return
+        agg_open[a] = False
+        t_flush = max(now, agg_busy[a])
+        up = agg.flush(now=t_flush)
+        if up is None:
+            reopen_window(a, t_flush)
+            return
+        ul = agg_lat.sample(agg_rngs[a], up.frame_bytes, 10.0)
+        upstream_live += 1
+        push(t_flush + ul, _AGG_ARRIVE, a, (up,))
+
+    def reopen_window(a: int, t: float):
+        """Take the next upstream lease for aggregator ``a`` — the window
+        base is the store snapshot at ``t``, encoded over the HUB
+        transport — and schedule _WINDOW_OPEN once the handout download
+        lands at the edge.  Upstream leases never time out (math.inf
+        deadline): an aggregator is infrastructure, its loss is modelled
+        by Aggregator.fail(), not the BOINC timeout sweep."""
+        agg = aggs[a]
+        base_fp, _ = store.read_at(t)
+        up = agg.open_window(round=gen.epoch, now=t, base=base_fp,
+                             read_version=store.version,
+                             deadline=math.inf)
+        agg_rv[a] = store.version
+        dl = agg_lat.sample(agg_rngs[a], up.handout_bytes, 10.0)
+        push(t + dl, _WINDOW_OPEN, a)
+
     def dispatch(cid: int, now: float):
         """Client pulls work; each unit's lease is issued HERE — the
         handout crosses the transport as real wire frames at dispatch, so
@@ -261,6 +355,40 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
         (``cfg.param_bytes`` overrides it for paper-calibrated figure
         reproductions) and the client trains from the DECODED bytes."""
         client = fleet[cid]
+        if n_agg:
+            # tier mode: the client leases from ITS aggregator, against
+            # the aggregator's live fold state (round 0 of a window this
+            # is the decoded hub base, bit-identical to what a flat hub
+            # would hand out).  A closed or full window defers the pull.
+            a = cid % n_agg
+            agg = aggs[a]
+            if not agg_open[a] or agg_disp[a] >= fan[a]:
+                if cid not in agg_def_set[a]:
+                    agg_def_set[a].add(cid)
+                    agg_deferred[a].append(cid)
+                return
+            units = sched.request_work(cid, now)
+            if units:
+                agg_disp[a] += 1
+            for unit in units:
+                unit.param_version = agg_rv[a]
+                lease = agg.issue(cid=cid, uid=unit.uid, round=unit.epoch,
+                                  shard=unit.shard,
+                                  read_version=agg.state.version,
+                                  base=agg.state.params, now=now,
+                                  deadline=unit.deadline)
+                dl_bytes = (cfg.param_bytes if cfg.param_bytes is not None
+                            else lease.handout_bytes) + cfg.model_bytes
+                dl = client.transfer_time(dl_bytes)
+                comp = client.compute_time(cfg.subtask_compute_s)
+                push(now + dl + comp, _UPLOAD, cid, (unit, lease))
+            if not units and agg.window_merged:
+                # an empty pull must not wedge FOLDED results in a window
+                # nothing else will close (every remaining unit may be in
+                # flight at other aggregators); an empty idle window just
+                # stays open — no flush/reopen churn from polling
+                maybe_flush(a, now)
+            return
         units = sched.request_work(cid, now)
         for unit in units:
             unit.param_version = store.version
@@ -291,15 +419,39 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
     for c in fleet:
         push(0.001 * c.cid, _BOOT, c.cid)
 
+    if n_agg:
+        # first windows open instantly at t=0 (the edge starts warm — W0
+        # is already resident, like the store replicas), so boot pulls
+        # are admitted at the exact instants the flat engine dispatches
+        # them.  Aggregators with no assigned clients never open.
+        for a in range(n_agg):
+            if fan[a] == 0:
+                continue
+            base_fp, _ = store.read_at(0.0)
+            aggs[a].open_window(round=0, now=0.0, base=base_fp,
+                                read_version=store.version,
+                                deadline=math.inf)
+            agg_rv[a] = store.version
+            agg_open[a] = True
+
     t_now = 0.0
     hard_stop = 10 ** 9
     target_hit = False
 
-    while events and not gen.exhausted and not target_hit:
+    # flat mode drains exactly like the historical loop (upstream_live is
+    # always 0); tier mode keeps popping until in-flight merged frames
+    # land — the work the edges folded must reach the hub — while every
+    # other post-exhaustion event is discarded unprocessed.
+    while events and not target_hit:
+        if gen.exhausted and upstream_live == 0:
+            break
         t_now, seq, kind, cid = heapq.heappop(events)
         if t_now > hard_stop:
             break
         events_processed += 1
+        if gen.exhausted and kind != _AGG_ARRIVE:
+            payloads.pop(seq, None)
+            continue
 
         # preemption check: every client whose lifetime expired before
         # t_now, in ascending-cid order (= the old full-fleet scan order).
@@ -317,8 +469,14 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
                 if lost:
                     preemptions += 1
                 # releases the client's leases (bases freed, in-flight
-                # frames dropped), its residual, and scheme-local state
-                coord.drop_client(dcid)
+                # frames dropped), its residual, and scheme-local state —
+                # held by the client's AGGREGATOR in tier mode, whose
+                # window may become flushable right here
+                if n_agg:
+                    aggs[dcid % n_agg].drop_client(dcid)
+                    maybe_flush(dcid % n_agg, t_now)
+                else:
+                    coord.drop_client(dcid)
                 c.spawn(t_now + c.preemption.restart_delay_s)
                 track_spawn(c)
                 push(t_now + c.preemption.restart_delay_s, _RESPAWN, dcid)
@@ -331,6 +489,13 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
         # find the unit gone and the lease already consumed)
         sched.expire_timeouts(t_now)
         coord.expire(t_now)
+        if n_agg:
+            # edge leases carry the same BOINC deadlines; an expiry can
+            # leave a window with nothing in flight — flush it.  O(1)
+            # heap-root peek per aggregator when nothing is due.
+            for a in range(n_agg):
+                if aggs[a].expire(t_now):
+                    maybe_flush(a, t_now)
 
         if kind <= _DISPATCH:           # boot / respawn / dispatch
             # dispatch runs AT the event time, never ahead of it: the
@@ -341,6 +506,77 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
             # inside the arrival handler (which would miss commits
             # landing in (t_arrival, t_commit])
             dispatch(cid, t_now)
+            continue
+
+        if kind == _WINDOW_OPEN:
+            # the aggregator's fresh window base finished downloading:
+            # admit pulls again and drain every client deferred while the
+            # previous window was closed or full (same order they asked)
+            a = cid
+            agg_open[a] = True
+            agg_disp[a] = 0
+            drain = agg_deferred[a]
+            agg_deferred[a] = []
+            agg_def_set[a].clear()
+            for dcid in drain:
+                dispatch(dcid, t_now)
+            continue
+
+        if kind == _AGG_ARRIVE:
+            # ONE merged frame lands at the hub: deliver/assimilate via
+            # the identical PS + store path a flat result takes — the
+            # scheme folds it with assimilate_aggregate
+            # (W' = M + (1 - w)(W - B)), exact adoption of the merge when
+            # the hub hasn't moved since the window opened
+            a = cid
+            (up,) = payloads.pop(seq)
+            upstream_live -= 1
+            payload_w = coord.deliver(up)
+            ps = _pick_server(ps_busy)
+            t_free = max(t_now, ps_busy[ps])
+            server_version = store.version
+            if eventual:
+                snap, _ = store.read_at(t_free)
+                state = coord.assimilate(up, payload_w,
+                                         server_version=server_version,
+                                         t_arrival=t_now,
+                                         params_override=snap)
+                t_commit = store.commit(t_free, t_free + cfg.server_proc_s,
+                                        state.params)
+            else:
+                def txn(head):
+                    st = coord.assimilate(up, payload_w,
+                                          server_version=server_version,
+                                          t_arrival=t_now,
+                                          params_override=head)
+                    return st.params
+                t_commit = store.transact(t_free + cfg.server_proc_s, txn)
+            ps_busy[ps] = t_commit
+
+            # validation reads the HUB store, so it only moves at flush
+            # commits; epoch points emit at the first hub commit after
+            # the generator rolled (the rolling fold itself reaches the
+            # hub no later than this frame)
+            if coord.assimilated % cfg.eval_stride == 0:
+                acc = (eval_flat(store.head(), data.x_val, data.y_val)
+                       if eval_flat is not None
+                       else task.evaluate(as_tree(store.head()),
+                                          data.x_val, data.y_val))
+                epoch_accs.setdefault(up.round, []).append(acc)
+            while pending_rolls:
+                e = pending_rolls.pop(0)
+                accs = np.array(epoch_accs.get(e) or [0.0])
+                points.append(EpochPoint(
+                    epoch=e, t_complete=t_commit,
+                    acc_mean=float(accs.mean()), acc_min=float(accs.min()),
+                    acc_max=float(accs.max()), acc_std=float(accs.std())))
+                epoch_accs.pop(e, None)
+                scheme.on_epoch(coord.state, gen.epoch)
+                if (cfg.target_accuracy is not None
+                        and accs.mean() >= cfg.target_accuracy):
+                    target_hit = True
+            if not gen.exhausted:
+                reopen_window(a, t_commit)
             continue
 
         if kind == _UPLOAD:
@@ -377,11 +613,13 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
 
             # ---- the wire: REAL bytes, REAL upload time -------------------
             # submit() encodes the payload (applying error feedback) to a
-            # wire-format frame and pushes it through the transport; the
-            # upload leg's duration comes from the frame's actual length
+            # wire-format frame and pushes it through the transport (the
+            # client's EDGE transport in tier mode); the upload leg's
+            # duration comes from the frame's actual length
             # (cfg.upload_bytes overrides it for paper-calibrated figure
             # reproductions).
-            coord.submit(lease, trained_buf)
+            srv = aggs[cid % n_agg] if n_agg else coord
+            srv.submit(lease, trained_buf)
             ul = client.transfer_time(cfg.upload_bytes
                                       if cfg.upload_bytes is not None
                                       else lease.frame_bytes)
@@ -391,6 +629,39 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
         if kind == _ARRIVE:
             unit, lease = payloads.pop(seq)
             client = fleet[cid]
+            if n_agg:
+                # result lands at the client's EDGE aggregator: folded
+                # into the window with the scheme's own per-arrival
+                # assimilate on a serial per-aggregator chain (the edge
+                # is one processor, like a PS).  Terminating the lease —
+                # fold, stale drop, or death — can complete the window.
+                a = cid % n_agg
+                agg = aggs[a]
+                if cfg.preemptible and client.alive_until <= t_now:
+                    agg.drop(lease)
+                    maybe_flush(a, t_now)
+                    continue
+                if unit.uid not in sched.inflight:
+                    agg.drop(lease)
+                    maybe_flush(a, t_now)
+                    dispatch(cid, t_now)
+                    continue
+                sched.complete(unit.uid, t_now)
+                payload_w = agg.deliver(lease)
+                t_free = max(t_now, agg_busy[a])
+                agg.assimilate(lease, payload_w,
+                               server_version=agg.state.version,
+                               t_arrival=t_now)
+                t_commit = t_free + cfg.server_proc_s
+                agg_busy[a] = t_commit
+                assimilated += 1
+                if gen.complete(unit):
+                    # the hub hasn't seen this yet: the EpochPoint emits
+                    # at the next merged-frame commit (_AGG_ARRIVE)
+                    pending_rolls.append(unit.epoch)
+                push(t_commit, _DISPATCH, cid)
+                maybe_flush(a, t_commit)
+                continue
             if cfg.preemptible and client.alive_until <= t_now:
                 # died mid-upload; bytes wasted, lease released (the
                 # preemption sweep may already have dropped it — idempotent)
@@ -463,6 +734,25 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
                     target_hit = True
             push(t_commit, _DISPATCH, cid)
 
+    edge_stats: Optional[TransportStats] = None
+    if n_agg:
+        # windows still open at exit (exhaustion / target hit / hard
+        # stop) are abandoned exactly as a lost aggregator would be:
+        # downstream leases, residuals and the upstream lease all release
+        # through the protocol — nothing leaks into the counters below
+        for agg in aggs:
+            if agg.in_flight or agg.window_open:
+                agg.fail()
+        edge_stats = TransportStats()
+        for agg in aggs:
+            s = agg.wire_stats
+            edge_stats.frames_sent += s.frames_sent
+            edge_stats.bytes_sent += s.bytes_sent
+            edge_stats.frames_recv += s.frames_recv
+            edge_stats.bytes_recv += s.bytes_recv
+            edge_stats.frames_dropped += s.frames_dropped
+            edge_stats.bytes_dropped += s.bytes_dropped
+
     final_acc = (eval_flat(store.head(), data.x_val, data.y_val)
                  if eval_flat is not None
                  else task.evaluate(as_tree(store.head()),
@@ -473,13 +763,20 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
         store_stats=store.stats, reassignments=sched.reassignments,
         preemptions=preemptions, results_assimilated=assimilated,
         cost_hours=t_now / 3600.0, wire=coord.wire_stats,
-        wire_dense_frames=coord.frames[wire.KIND_DENSE],
-        wire_sparse_frames=coord.frames[wire.KIND_SPARSE],
+        wire_dense_frames=(coord.frames[wire.KIND_DENSE]
+                           + sum(a.frames[wire.KIND_DENSE] for a in aggs)),
+        wire_sparse_frames=(coord.frames[wire.KIND_SPARSE]
+                            + sum(a.frames[wire.KIND_SPARSE] for a in aggs)),
         handout_frames=coord.handout_frames,
         handout_bytes=coord.handout_bytes,
-        leases_expired=coord.expired, leases_dropped=coord.dropped,
+        leases_expired=coord.expired + sum(a.expired for a in aggs),
+        leases_dropped=coord.dropped + sum(a.dropped for a in aggs),
         events_processed=events_processed,
-        scheme_state=coord.state)
+        scheme_state=coord.state,
+        aggregators=n_agg,
+        agg_flushes=sum(a.flushes for a in aggs),
+        wire_agg_frames=coord.frames[wire.KIND_AGG],
+        edge_wire=edge_stats)
 
 
 @dataclass

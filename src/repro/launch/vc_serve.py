@@ -14,12 +14,22 @@ and uid (persisted in the checkpoint ``extra``), so lease rounds, wire
 headers and checkpoint steps are monotone across kills — step k+1 never
 overwrites steps 1..k (tools/ci_gate.sh runs a kill-and-resume pass).
 
+``--tier N`` inserts N edge aggregators between the clients and the hub —
+a REAL 2-level round: every aggregator runs over its OWN ProcessTransport
+(client payloads cross one process boundary to the edge, ONE merged
+``KIND_AGG`` frame per aggregator crosses another to the hub).  With one
+aggregator the run is bit-identical to flat — rounds are synchronous, so
+the hub never moves inside a window and adopts the merge exactly
+(tests/test_aggregator.py asserts it).
+
   PYTHONPATH=src python -m repro.launch.vc_serve --rounds 4 --clients 3
   PYTHONPATH=src python -m repro.launch.vc_serve --smoke   # fast-gate size
+  PYTHONPATH=src python -m repro.launch.vc_serve --smoke --tier
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import tempfile
 import time
 
@@ -29,8 +39,17 @@ from repro.checkpoint import CheckpointManager
 from repro.core import flat as F
 from repro.core.baselines import CompressedVCASGD, VCASGD
 from repro.core.tasks import MLPTask, make_classification_data
-from repro.protocol import Coordinator, as_tree
+from repro.protocol import Aggregator, Coordinator, as_tree
+from repro.transfer import wire
 from repro.transfer.transport import ProcessTransport
+
+
+def _check(cond: bool, what: str) -> None:
+    """End-of-run invariant check that survives ``python -O`` (a bare
+    assert is compiled away, which is exactly when a silent protocol leak
+    would go unnoticed in production)."""
+    if not cond:
+        raise SystemExit(f"[vc-serve] INVARIANT VIOLATED: {what}")
 
 
 def main(argv=None):
@@ -45,6 +64,12 @@ def main(argv=None):
     ap.add_argument("--density", type=float, default=None,
                     help="compress payloads to this top-k density "
                          "(sparse wire frames)")
+    ap.add_argument("--tier", type=int, nargs="?", const=1, default=0,
+                    help="insert N edge aggregators (default 1 when the "
+                         "flag is given bare): clients lease from their "
+                         "aggregator, each aggregator submits ONE merged "
+                         "v3 frame upstream per round over its own "
+                         "process transport")
     ap.add_argument("--timeout-s", type=float, default=600.0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--smoke", action="store_true",
@@ -66,7 +91,8 @@ def main(argv=None):
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="vc_serve_")
     mgr = CheckpointManager(ckpt_dir, async_save=False)
 
-    with ProcessTransport() as transport:
+    with contextlib.ExitStack() as stack:
+        transport = stack.enter_context(ProcessTransport())
         coord = Coordinator(scheme, params0, transport=transport,
                             timeout_s=args.timeout_s)
         resumed = coord.restore_checkpoint(mgr)
@@ -80,41 +106,71 @@ def main(argv=None):
             print(f"[vc-serve] resumed server v{coord.state.version} "
                   f"from checkpoint step {resumed} "
                   f"(continuing at round {start}, uid {uid})")
+        # the aggregation tier: each edge aggregator speaks the same
+        # protocol downward (to its clients) and upward (to the hub),
+        # over its OWN process transport
+        aggs = []
+        for a in range(args.tier):
+            at = stack.enter_context(ProcessTransport())
+            aggs.append(Aggregator(scheme, coord, agg_id=a, transport=at,
+                                   timeout_s=args.timeout_s))
         print(f"[vc-serve] scheme={scheme.name} clients={args.clients} "
               f"shards={args.shards} broker pid={transport.broker_pid} "
-              f"(frames cross a real process boundary)")
+              f"(frames cross a real process boundary)"
+              + (f" tier={len(aggs)} aggregators, broker pids "
+                 f"{[a.transport.broker_pid for a in aggs]}" if aggs
+                 else ""))
         for rnd in range(start, start + args.rounds):
             t0 = time.monotonic()
+            for agg in aggs:
+                agg.open_window(round=rnd, now=time.monotonic())
             leases = []
             for cid in range(args.clients):
                 # issue: the runtime's "store head" is the live state;
-                # the handout crosses the broker as per-shard frames
-                lease = coord.issue(cid=cid, uid=uid, round=rnd, shard=cid,
-                                    read_version=coord.state.version,
-                                    base=coord.state.params,
-                                    now=time.monotonic())
+                # the handout crosses the broker as per-shard frames.
+                # In tier mode the client leases from ITS aggregator,
+                # whose window state is the decoded hub handout.
+                srv = aggs[cid % len(aggs)] if aggs else coord
+                lease = srv.issue(cid=cid, uid=uid, round=rnd, shard=cid,
+                                  read_version=srv.state.version,
+                                  base=srv.state.params,
+                                  now=time.monotonic())
                 uid += 1
                 # client-side REAL training from the DECODED handout
                 trained = task.client_train(
                     as_tree(lease.base), data.x_train, data.y_train,
                     steps=4, seed=args.seed * 1000003 + lease.uid)
-                coord.submit(lease, F.flatten_like(trained, lease.base.spec))
-                leases.append(lease)
+                srv.submit(lease, F.flatten_like(trained, lease.base.spec))
+                leases.append((srv, lease))
             # one straggler per round is "preempted" mid-upload: its lease
             # is dropped, its bytes wasted — assimilation shrugs it off
             if args.clients > 1 and rnd % 2 == 1:
-                coord.drop(leases.pop())
-            for lease in leases:
-                payload = coord.deliver(lease)
-                coord.assimilate(lease, payload,
-                                 server_version=coord.state.version,
-                                 t_arrival=time.monotonic())
+                srv, lease = leases.pop()
+                srv.drop(lease)
+            for srv, lease in leases:
+                payload = srv.deliver(lease)
+                srv.assimilate(lease, payload,
+                               server_version=srv.state.version,
+                               t_arrival=time.monotonic())
+            # tier flush: each aggregator ships ONE merged v3 frame (its
+            # fold state + summed client weight) upstream; the hub adopts
+            # it via assimilate_aggregate — bit-identical to folding the
+            # window's results directly, because the hub never moved
+            # inside the window (rounds are synchronous here)
+            for agg in aggs:
+                up = agg.flush(now=time.monotonic())
+                if up is not None:
+                    coord.assimilate(up, coord.deliver(up),
+                                     server_version=coord.state.version,
+                                     t_arrival=time.monotonic())
+                agg.expire(time.monotonic())
             coord.expire(time.monotonic())
             coord.save_checkpoint(mgr, step=rnd + 1,
                                   extra={"next_uid": uid})
             acc = task.evaluate(as_tree(coord.state.params),
                                 data.x_val, data.y_val)
             s = coord.wire_stats
+            up_frames = coord.frames[wire.KIND_AGG]
             print(f"[vc-serve] round {rnd}: acc={acc:.3f} "
                   f"server v{coord.state.version} "
                   f"wire {s.bytes_sent / 1e6:.2f}MB sent "
@@ -122,10 +178,24 @@ def main(argv=None):
                   f"{coord.handout_frames} frames, "
                   f"{s.frames_dropped} frames dropped) "
                   f"residual mass {coord.residual_mass():.2f} "
-                  f"[{time.monotonic() - t0:.2f}s]")
+                  + (f"upstream agg frames {up_frames} " if aggs else "")
+                  + f"[{time.monotonic() - t0:.2f}s]")
         s = coord.wire_stats
-        assert s.frames_sent == s.frames_recv + s.frames_dropped
-        assert coord.in_flight == 0 and transport.in_flight == 0
+        _check(s.frames_sent == s.frames_recv + s.frames_dropped,
+               f"hub frame conservation: {s.frames_sent} sent != "
+               f"{s.frames_recv} recv + {s.frames_dropped} dropped")
+        _check(coord.in_flight == 0,
+               f"{coord.in_flight} hub leases still live at shutdown")
+        _check(transport.in_flight == 0,
+               f"{transport.in_flight} frames stranded in the hub broker")
+        for agg in aggs:
+            es = agg.wire_stats
+            _check(es.frames_sent == es.frames_recv + es.frames_dropped,
+                   f"agg {agg.agg_id} frame conservation violated")
+            _check(agg.in_flight == 0 and not agg.window_open,
+                   f"agg {agg.agg_id} still holds leases/window")
+            _check(agg.transport.in_flight == 0,
+                   f"frames stranded in agg {agg.agg_id}'s broker")
         print(f"[vc-serve] done: {coord.assimilated} results assimilated, "
               f"{coord.dropped} dropped, next uid {uid}, "
               f"checkpoints in {ckpt_dir}")

@@ -7,6 +7,7 @@ algorithm folded over typed ``SchemeState``.  The discrete-event
 simulator (core/simulator.py) and real runtimes (launch/vc_serve.py)
 drive the same Coordinator — see docs/PROTOCOL.md.
 """
+from repro.protocol.aggregator import Aggregator
 from repro.protocol.coordinator import Coordinator
 from repro.protocol.scheme import ServerScheme
 from repro.protocol.types import (LEASE_ASSIMILATED, LEASE_DROPPED,
@@ -15,7 +16,8 @@ from repro.protocol.types import (LEASE_ASSIMILATED, LEASE_DROPPED,
                                   SchemeState, as_flat, as_tree, scheme_state)
 
 __all__ = [
-    "Coordinator", "ServerScheme", "Lease", "LeaseError", "ResultMeta",
+    "Aggregator", "Coordinator", "ServerScheme", "Lease", "LeaseError",
+    "ResultMeta",
     "SchemeState", "as_flat", "as_tree", "scheme_state",
     "LEASE_ISSUED", "LEASE_IN_FLIGHT", "LEASE_ASSIMILATED",
     "LEASE_DROPPED", "LEASE_EXPIRED",

@@ -90,8 +90,11 @@ class Coordinator:
         self._client_vec: Dict[int, np.ndarray] = {}
         self.handout_frames = 0
         self.handout_bytes = 0
-        # UPLOAD-leg wire frame kinds, measured at delivery
-        self.frames = {wire.KIND_DENSE: 0, wire.KIND_SPARSE: 0}
+        # UPLOAD-leg wire frame kinds, measured at delivery.  This dict is
+        # ALSO the allow-list of kinds valid on the upload leg: handout
+        # kinds (KIND_SHARD) arriving here are rejected by deliver().
+        self.frames = {wire.KIND_DENSE: 0, wire.KIND_SPARSE: 0,
+                       wire.KIND_AGG: 0}
         self.assimilated = 0
         self.dropped = 0
         self.expired = 0
@@ -125,7 +128,12 @@ class Coordinator:
         self.leases[key] = lease
         self._seq += 1
         lease._issue_seq = lease._dl_seq = self._seq
-        heapq.heappush(self._lease_heap, (lease.deadline, self._seq, key))
+        # nothing with an infinite deadline can ever expire: pushing it
+        # would grow the heap unboundedly under the default timeout_s=inf
+        # (terminal transitions clean the heap only lazily, and expire()
+        # can never pop past a finite root to reach the inf entries)
+        if lease.deadline != math.inf:
+            heapq.heappush(self._lease_heap, (lease.deadline, self._seq, key))
         self._cid_leases.setdefault(cid, {})[key] = None
         self.scheme.on_issue(self.state, lease)
         return lease
@@ -215,10 +223,13 @@ class Coordinator:
         self._live(lease)
         lease.deadline = deadline
         # fresh heap entry with a fresh seq; the old entry dies lazily
-        # (its seq no longer matches the lease's _dl_seq)
+        # (its seq no longer matches the lease's _dl_seq).  A renewal to
+        # an infinite deadline needs no entry at all — bumping _dl_seq
+        # already invalidated the old finite one.
         self._seq += 1
         lease._dl_seq = self._seq
-        heapq.heappush(self._lease_heap, (deadline, self._seq, lease.key))
+        if deadline != math.inf:
+            heapq.heappush(self._lease_heap, (deadline, self._seq, lease.key))
         return lease
 
     def submit(self, lease: Lease, trained_buf: jnp.ndarray) -> Lease:
@@ -229,8 +240,14 @@ class Coordinator:
         if self._live(lease).status != LEASE_ISSUED:
             raise LeaseError(f"lease {lease.key} already submitted "
                              f"({lease.status})")
-        payload, new_res = self.scheme.encode_payload(
-            trained_buf, lease.base, self._residuals.get(lease.cid))
+        if isinstance(trained_buf, wire.AggregatePayload):
+            # aggregation tier: the payload is already post-assimilation —
+            # the edge aggregator ran the scheme encode AND the residual
+            # ledger on its own downward leg, so neither applies here
+            payload, new_res = trained_buf, None
+        else:
+            payload, new_res = self.scheme.encode_payload(
+                trained_buf, lease.base, self._residuals.get(lease.cid))
         # the header carries the POST-payload residual norm; the ledger is
         # only committed after the send succeeds, so a transport failure
         # leaves submit() all-or-nothing (the mass the payload extracted is
@@ -256,7 +273,24 @@ class Coordinator:
             raise LeaseError(f"nothing in flight for lease {lease.key} "
                              f"({lease.status})")
         msg = wire.decode(self.transport.recv(lease.msg_id))
+        if msg.kind not in self.frames:
+            # a handout kind (KIND_SHARD) on the upload leg: structurally
+            # valid wire bytes, semantically never assimilable.  The recv
+            # already consumed the frame, so the lease must terminate HERE
+            # — otherwise it would sit IN_FLIGHT forever with its msg_id
+            # pointing at nothing.
+            self._unregister(lease)
+            lease._release(LEASE_DROPPED)
+            self.dropped += 1
+            raise wire.WireError(
+                f"frame kind {msg.kind} invalid on the upload leg "
+                f"(lease {lease.key} dropped)")
         self.frames[msg.kind] += 1
+        if msg.kind == wire.KIND_AGG:
+            buf = (msg.payload if isinstance(self.state.params.buf,
+                                             np.ndarray)
+                   else jnp.asarray(msg.payload))
+            return wire.AggregatePayload(buf, msg.weight)
         if (msg.kind == wire.KIND_SPARSE
                 or isinstance(self.state.params.buf, np.ndarray)):
             # sparse payloads pass through; a numpy-backed bus (flat task
@@ -284,7 +318,14 @@ class Coordinator:
                           t_arrival=t_arrival, base=lease.base)
         if params_override is not None:
             self.state.params = params_override
-        self.state = self.scheme.assimilate(self.state, payload, meta)
+        if isinstance(payload, wire.AggregatePayload):
+            # a merged frame from an edge aggregator: the scheme's
+            # aggregate rule (W' = M + (1-w)(W - B)) instead of the
+            # per-result fold — B is the lease base, already on the meta
+            self.state = self.scheme.assimilate_aggregate(
+                self.state, payload, meta)
+        else:
+            self.state = self.scheme.assimilate(self.state, payload, meta)
         self._unregister(lease)
         lease._release(LEASE_ASSIMILATED)
         self.assimilated += 1
@@ -399,6 +440,18 @@ class Coordinator:
         step = manager.latest_step()
         if step is None:
             return None
+        # everything in flight predates the restore point: live leases are
+        # dropped (bases released, frames discarded at the transport) and
+        # the error-feedback ledger is reset — residual mass accumulated
+        # AFTER the checkpoint must not be re-injected into the restored
+        # params, and residual_mass() must not report it.  A restarted
+        # coordinator reissues the work under fresh leases.
+        for lease in list(self.leases.values()):
+            self.drop(lease)
+        self._lease_heap.clear()
+        self._residuals.clear()
+        self._res_norms.clear()
+        self._res_norm_total = 0.0
         params, version, extra, _ = manager.restore_server_or_init(
             self.state.params, lambda: None)
         self.state = self.scheme.init_state(params)

@@ -83,6 +83,59 @@ class ServerScheme:
     def on_epoch(self, state: SchemeState, epoch: int) -> None:
         pass
 
+    # -- aggregation tier (protocol/aggregator.py) --------------------------
+    def assimilation_retention(self, meta: ResultMeta) -> float:
+        """Fraction of the pre-update server mass ``assimilate`` RETAINS
+        when folding ONE result — e.g. VC-ASGD's effective alpha.  The
+        aggregation tier composes this multiplicatively across a flush
+        window: the merged frame's summed client weight is
+        ``1 - prod(retention_i)``.  Default 1.0: pure-delta schemes
+        (Downpour family) add to the server copy without discounting it,
+        so their merged frame carries zero displaced server mass."""
+        return 1.0
+
+    def assimilate_aggregate(self, state: SchemeState, payload,
+                             meta: ResultMeta) -> SchemeState:
+        """Fold ONE merged (already pre-assimilated) aggregate frame from
+        an edge aggregator: ``payload`` is a ``wire.AggregatePayload``
+        whose buf M is the aggregator's fold state — the scheme's own
+        per-arrival ``assimilate`` applied at the edge, seeded from the
+        upstream lease base B (``meta.base``) — and whose weight w is the
+        summed client mass ``1 - prod(retention)``.
+
+        The scheme-independent staleness correction is linear::
+
+            W' = M + (1 - w) * (W - B)
+
+        i.e. whatever the hub folded since the aggregator's handout
+        (W - B) survives scaled by the merge's retained server mass.  When
+        the hub has not moved (W == B bitwise, e.g. a round-synchronous
+        driver or a single serialized flush) the correction term is
+        exactly zero and the hub adopts M bit-for-bit — the same floats a
+        flat hub folding the window's results in arrival order would
+        produce.  Schemes with client-local replicas/barriers should
+        override or reject; the weighted-averaging/delta family composes
+        as-is."""
+        fp = state.params
+        base = meta.base.buf if meta.base is not None else fp.buf
+        m = self._payload_buf(fp, payload.buf)
+        if isinstance(fp.buf, np.ndarray):
+            # numpy-backed bus: f32 scalar/buffer math with separate
+            # mul/add (no FMA), matching the eager jnp form bit-for-bit —
+            # the same convention as vc_asgd_update_flat
+            keep = np.float32(1.0) - np.float32(payload.weight)
+            out = (np.asarray(m).astype(np.float32)
+                   + keep * (fp.buf.astype(np.float32)
+                             - np.asarray(base).astype(np.float32)))
+        else:
+            keep = jnp.float32(1.0) - jnp.float32(payload.weight)
+            out = (jnp.asarray(m).astype(jnp.float32)
+                   + keep * (fp.buf.astype(jnp.float32)
+                             - jnp.asarray(base).astype(jnp.float32)))
+        state.params = fp.with_buf(out.astype(fp.buf.dtype))
+        state.version += 1
+        return state
+
     def drop_client(self, state: SchemeState, cid: int) -> None:
         """Preemption hook: schemes with client-local state lose it here.
         (Lease release and residual cleanup are the Coordinator's job.)"""

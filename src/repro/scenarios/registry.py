@@ -132,6 +132,27 @@ _reg(Scenario(
          server_proc_s=0.02, seed=7)))
 
 _reg(Scenario(
+    "fleet_smoke_tier",
+    "fleet_smoke behind 4 edge aggregators (2-level CI smoke)",
+    dict(n_param_servers=2, n_clients=200, tasks_per_client=1,
+         n_shards=400, max_epochs=1, local_steps=1,
+         timeout_s=1800.0, preemptible=True, mean_lifetime_s=5400.0,
+         restart_delay_s=120.0, subtask_compute_s=120.0,
+         server_proc_s=0.05, seed=7, aggregators=4)))
+
+_reg(Scenario(
+    "fleet_10k_tier",
+    "fleet_10k behind 32 edge aggregators: clients lease from their edge, "
+    "the hub sees ONE merged KIND_AGG frame per flush window (~312 "
+    "clients' results) — the 2-level fan-in the ROADMAP scale item asks "
+    "for; compare hub wire counters against flat fleet_10k",
+    dict(n_param_servers=8, n_clients=10000, tasks_per_client=1,
+         n_shards=12000, max_epochs=1, local_steps=1,
+         timeout_s=1800.0, preemptible=True, mean_lifetime_s=5400.0,
+         restart_delay_s=120.0, subtask_compute_s=120.0,
+         server_proc_s=0.02, seed=7, aggregators=32)))
+
+_reg(Scenario(
     "fleet_100k",
     "100k clients x 3 epochs, exponential churn, eval every 64th result",
     dict(n_param_servers=16, n_clients=100000, tasks_per_client=1,
@@ -220,6 +241,13 @@ def main(argv=None) -> int:
         "handout_frames": res.handout_frames,
         "handout_bytes": int(res.handout_bytes),
     }
+    if res.aggregators:
+        summary.update({
+            "aggregators": res.aggregators,
+            "agg_flushes": res.agg_flushes,
+            "upstream_agg_frames": res.wire_agg_frames,
+            "edge_bytes_sent": int(res.edge_wire.bytes_sent),
+        })
     if args.json:
         print(json.dumps(summary, indent=1))
     else:

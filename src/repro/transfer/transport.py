@@ -178,15 +178,29 @@ class ProcessTransport(Transport):
         srv.bind(("127.0.0.1", 0))
         srv.listen(1)
         port = srv.getsockname()[1]
+        self._conn = None
         self._proc = subprocess.Popen([sys.executable, "-c", _BROKER_SRC,
                                        str(port)])
         srv.settimeout(timeout_s)
+        # if the handshake fails at ANY point (accept timeout, connection
+        # reset, short PID read) the broker must be reaped here — the
+        # constructor raising means no ProcessTransport exists to close(),
+        # and an orphaned Popen handle leaks a live OS process
         try:
-            self._conn, _ = srv.accept()
-        finally:
-            srv.close()
-        self._conn.settimeout(timeout_s)
-        (self.broker_pid,) = _LEN.unpack(self._read(8))
+            try:
+                self._conn, _ = srv.accept()
+            finally:
+                srv.close()
+            self._conn.settimeout(timeout_s)
+            (self.broker_pid,) = _LEN.unpack(self._read(8))
+        except BaseException:
+            if self._conn is not None:
+                self._conn.close()
+                self._conn = None
+            self._proc.kill()
+            self._proc.wait()
+            self._proc = None
+            raise
 
     # -- rpc plumbing -------------------------------------------------------
     def _read(self, n: int) -> bytes:

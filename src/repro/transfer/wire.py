@@ -1,4 +1,4 @@
-"""Wire format v2 — what a FlatParams payload looks like as BYTES.
+"""Wire format v3 — what a FlatParams payload looks like as BYTES.
 
 Until now the cross-pod payloads (full flat buffers, or the compress_flat
 top-k + int8 deltas of core/compression.py) only ever existed as device
@@ -8,13 +8,19 @@ payload is encoded into a self-describing, versioned, checksummed frame
 that an actual transport (transfer/transport.py) can carry, and whose
 length IS the transfer size.
 
-Frame layout (little-endian, fixed 68-byte header + body)::
+Frame layout (little-endian, fixed 68-byte header + body; version 3
+frames append one ``weight f32`` field before the crc — 72 bytes)::
 
     magic    4s   b"VCWF"
-    version  u16  wire format version (this module speaks 2)
+    version  u16  wire format version (this module speaks 3; a frame is
+                  EMITTED at the oldest version that can express it, so
+                  dense/sparse/shard frames stay version 2 byte-for-byte)
     kind     u8   0 = DENSE (raw flat buffer), 1 = SPARSE (top-k + int8),
                   2 = SHARD (one contiguous ShardedTreeSpec segment of the
-                  server bus — the DOWNLOAD/redistribution leg)
+                  server bus — the DOWNLOAD/redistribution leg),
+                  3 = AGG (v3 only: ONE merged, already-assimilated frame
+                  from an edge aggregator — dense body + summed client
+                  weight in the v3 ``weight`` header field)
     dtype    u8   dense/shard payload dtype code (0=f32, 1=bf16, 2=f16)
     n        u64  logical element count of the (padded) flat buffer
                   (shard: element count of THIS segment, == shard_len)
@@ -29,6 +35,9 @@ Frame layout (little-endian, fixed 68-byte header + body)::
     len_val  u64  byte length of the values section
     len_scl  u64  byte length of the scales section
     len_idx  u64  byte length of the indices section
+    weight   f32  (v3 headers ONLY) summed client mass of an aggregate
+                  frame: 1 - prod(per-assimilation retention) over the
+                  results the aggregator folded; 0 <= weight <= 1
     crc      u32  crc32 over header-sans-crc || body — a bit flip ANYWHERE
                   in the frame (including the n/k/density header fields)
                   fails the checksum, not just body corruption
@@ -37,11 +46,13 @@ Versioning rules: the magic/version pair is checked FIRST; a decoder
 rejects frames with a version newer than it speaks (no silent best-effort
 parsing), and any field may only be reinterpreted by bumping the version
 — v2 did exactly that: it added kind 2 and reinterpreted the ``k`` /
-``block`` header fields for that kind only (v1 frames decode unchanged).
-Truncated, oversized, or bit-flipped frames fail the length/crc checks
-and raise ``WireError`` — a torn transfer is never assimilated (the
-paper's fault-tolerance requirement: dropping a payload is always safe,
-applying a corrupt one never is).
+``block`` header fields for that kind only, and v3 adds kind 3 plus the
+``weight`` header field (v1/v2 frames decode unchanged, and the old
+kinds are still EMITTED as version-2 frames so their byte counts never
+move).  Truncated, oversized, or bit-flipped frames fail the length/crc
+checks and raise ``WireError`` — a torn transfer is never assimilated
+(the paper's fault-tolerance requirement: dropping a payload is always
+safe, applying a corrupt one never is).
 """
 from __future__ import annotations
 
@@ -56,15 +67,24 @@ import numpy as np
 from repro.core.compression import CompressedDelta
 
 MAGIC = b"VCWF"
-WIRE_VERSION = 2
+WIRE_VERSION = 3
 
 KIND_DENSE = 0
 KIND_SPARSE = 1
 KIND_SHARD = 2                 # one contiguous segment of the server bus
+KIND_AGG = 3                   # merged pre-assimilated frame (v3 only)
 
-_HDR = struct.Struct("<4sHBBQQIfIfQQQ")      # header minus the crc field
+# emission rule: a frame is written at the OLDEST version that can express
+# it, so dense/sparse/shard frames keep the v2 68-byte header (every
+# pinned byte count stays exact) and only aggregate frames pay for v3's
+# extra ``weight f32``
+_EMIT_VERSION = 2
+_HDR = struct.Struct("<4sHBBQQIfIfQQQ")      # v1/v2 header minus the crc
+_HDR3 = struct.Struct("<4sHBBQQIfIfQQQf")    # v3: + weight f32
 _CRC = struct.Struct("<I")
+_PEEK = struct.Struct("<4sH")                # magic/version, checked FIRST
 HEADER_BYTES = _HDR.size + _CRC.size
+HEADER_BYTES_V3 = _HDR3.size + _CRC.size
 
 
 def _frame(header_wo_crc: bytes, body: bytes) -> bytes:
@@ -84,18 +104,36 @@ class WireError(ValueError):
 
 
 class WireMessage(NamedTuple):
-    kind: int                     # KIND_DENSE | KIND_SPARSE | KIND_SHARD
+    kind: int                     # KIND_DENSE|KIND_SPARSE|KIND_SHARD|KIND_AGG
     payload: Union[np.ndarray, CompressedDelta]
     round: int                    # error-feedback round counter
     residual_norm: float          # client-side residual mass after sending
     shard: int = 0                # KIND_SHARD: segment index on the bus
     n_shards: int = 1             # KIND_SHARD: total segments of the bus
+    weight: float = 1.0           # KIND_AGG: summed client mass (v3 header)
+
+
+class AggregatePayload(NamedTuple):
+    """What an edge aggregator submits upstream: its merged (already
+    assimilated) fold state plus the summed client mass it represents.
+    Travels as a ``KIND_AGG`` v3 frame; the hub folds it with
+    ``ServerScheme.assimilate_aggregate`` instead of the per-result path
+    (no scheme encode, no residual ledger — both ran at the edge)."""
+
+    buf: np.ndarray               # merged flat buffer (padded bus layout)
+    weight: float                 # 1 - prod(retention) over folded results
 
 
 def dense_frame_bytes(n: int, dtype: str = "float32") -> int:
     """Exact frame length of a dense buffer payload."""
     itemsize = 2 if dtype in ("bfloat16", "float16") else 4
     return HEADER_BYTES + n * itemsize
+
+
+def agg_frame_bytes(n: int, dtype: str = "float32") -> int:
+    """Exact frame length of one merged aggregate frame (v3 header)."""
+    itemsize = 2 if dtype in ("bfloat16", "float16") else 4
+    return HEADER_BYTES_V3 + n * itemsize
 
 
 def shard_frame_bytes(shard_len: int, dtype: str = "float32") -> int:
@@ -126,10 +164,30 @@ def encode_dense(buf, *, round: int = 0, residual_norm: float = 0.0) -> bytes:
     """Encode a full flat buffer (the uncompressed payload kind)."""
     arr = _host(buf).reshape(-1)
     code, raw = _dense_bytes(arr)
-    header = _HDR.pack(MAGIC, WIRE_VERSION, KIND_DENSE, code,
+    header = _HDR.pack(MAGIC, _EMIT_VERSION, KIND_DENSE, code,
                        arr.size, arr.size, 0, 1.0,
                        int(round), float(residual_norm),
                        len(raw), 0, 0)
+    return _frame(header, raw)
+
+
+def encode_aggregate(buf, *, weight: float, round: int = 0,
+                     residual_norm: float = 0.0) -> bytes:
+    """Encode an edge aggregator's merged upstream frame (KIND_AGG): the
+    dense fold-state body plus the summed client mass in the v3 header's
+    ``weight`` field.  The weight is the only thing distinguishing the
+    body from a dense payload — it tells the hub how much of its own
+    pre-window mass the merge already retains (see
+    ``ServerScheme.assimilate_aggregate``)."""
+    w = float(weight)
+    if not 0.0 <= w <= 1.0:
+        raise WireError(f"aggregate weight {w} outside [0, 1]")
+    arr = _host(buf).reshape(-1)
+    code, raw = _dense_bytes(arr)
+    header = _HDR3.pack(MAGIC, 3, KIND_AGG, code,
+                        arr.size, arr.size, 0, 1.0,
+                        int(round), float(residual_norm),
+                        len(raw), 0, 0, w)
     return _frame(header, raw)
 
 
@@ -142,7 +200,7 @@ def encode_shard(seg, *, shard: int, n_shards: int, round: int = 0) -> bytes:
         raise WireError(f"shard {shard} out of range 0..{n_shards - 1}")
     arr = _host(seg).reshape(-1)
     code, raw = _dense_bytes(arr)
-    header = _HDR.pack(MAGIC, WIRE_VERSION, KIND_SHARD, code,
+    header = _HDR.pack(MAGIC, _EMIT_VERSION, KIND_SHARD, code,
                        arr.size, int(shard), int(n_shards), 1.0,
                        int(round), 0.0,
                        len(raw), 0, 0)
@@ -160,7 +218,7 @@ def encode_sparse(p: CompressedDelta, *, round: int = 0,
         n *= int(s)
     v_raw, s_raw, i_raw = vals.tobytes(), scls.tobytes(), idxs.tobytes()
     body = v_raw + s_raw + i_raw
-    header = _HDR.pack(MAGIC, WIRE_VERSION, KIND_SPARSE, 0,
+    header = _HDR.pack(MAGIC, _EMIT_VERSION, KIND_SPARSE, 0,
                        n, vals.size, int(p.block), float(p.density),
                        int(round), float(residual_norm),
                        len(v_raw), len(s_raw), len(i_raw))
@@ -168,9 +226,13 @@ def encode_sparse(p: CompressedDelta, *, round: int = 0,
 
 
 def encode(payload, *, round: int = 0, residual_norm: float = 0.0) -> bytes:
-    """Dispatch on payload type: buffers go dense, CompressedDelta sparse."""
+    """Dispatch on payload type: buffers go dense, CompressedDelta sparse,
+    AggregatePayload rides the v3 aggregate frame."""
     if isinstance(payload, CompressedDelta):
         return encode_sparse(payload, round=round, residual_norm=residual_norm)
+    if isinstance(payload, AggregatePayload):
+        return encode_aggregate(payload.buf, weight=payload.weight,
+                                round=round, residual_norm=residual_norm)
     return encode_dense(payload, round=round, residual_norm=residual_norm)
 
 
@@ -178,23 +240,36 @@ def decode(frame: bytes) -> WireMessage:
     """Validate and decode one frame.  Raises WireError on ANY structural
     problem — short frame, bad magic, unknown version, length mismatch,
     crc mismatch — so a torn transfer can never be assimilated."""
-    if len(frame) < HEADER_BYTES:
-        raise WireError(f"frame too short: {len(frame)} < {HEADER_BYTES}")
-    (magic, version, kind, dcode, n, k, block, density, rnd, res_norm,
-     len_v, len_s, len_i) = _HDR.unpack_from(frame)
-    (crc,) = _CRC.unpack_from(frame, _HDR.size)
+    if len(frame) < _PEEK.size:
+        raise WireError(f"frame too short: {len(frame)} < {_PEEK.size}")
+    magic, version = _PEEK.unpack_from(frame)
     if magic != MAGIC:
         raise WireError(f"bad magic {magic!r}")
     if version > WIRE_VERSION:
         raise WireError(f"wire version {version} newer than spoken "
                         f"{WIRE_VERSION}")
-    body = frame[HEADER_BYTES:]
+    # the header struct is selected by the (already validated) version:
+    # v1/v2 = 68 bytes, v3 = 72 (trailing weight f32); the crc always
+    # covers the whole header-sans-crc, so the weight field is protected
+    hdr = _HDR3 if version >= 3 else _HDR
+    hdr_bytes = hdr.size + _CRC.size
+    if len(frame) < hdr_bytes:
+        raise WireError(f"frame too short: {len(frame)} < {hdr_bytes}")
+    fields = hdr.unpack_from(frame)
+    (_, _, kind, dcode, n, k, block, density, rnd, res_norm,
+     len_v, len_s, len_i) = fields[:13]
+    weight = fields[13] if version >= 3 else 1.0
+    (crc,) = _CRC.unpack_from(frame, hdr.size)
+    body = frame[hdr_bytes:]
     if len(body) != len_v + len_s + len_i:
         raise WireError(f"torn frame: body {len(body)}B != declared "
                         f"{len_v + len_s + len_i}B")
-    if zlib.crc32(body, zlib.crc32(frame[:_HDR.size])) != crc:
+    if zlib.crc32(body, zlib.crc32(frame[:hdr.size])) != crc:
         raise WireError("crc mismatch (corrupt frame)")
-    if kind in (KIND_DENSE, KIND_SHARD):
+    if kind == KIND_AGG and version < 3:
+        raise WireError(f"kind {KIND_AGG} (aggregate) requires wire v3, "
+                        f"got v{version}")
+    if kind in (KIND_DENSE, KIND_SHARD, KIND_AGG):
         dtype = _CODE_DTYPES.get(dcode)
         if dtype is None:
             raise WireError(f"unknown dense dtype code {dcode}")
@@ -212,6 +287,11 @@ def decode(frame: bytes) -> WireMessage:
                                 f"{block} shards")
             return WireMessage(KIND_SHARD, arr, rnd, res_norm,
                                shard=int(k), n_shards=int(block))
+        if kind == KIND_AGG:
+            if not 0.0 <= weight <= 1.0:
+                raise WireError(f"aggregate weight {weight} outside [0, 1]")
+            return WireMessage(KIND_AGG, arr, rnd, res_norm,
+                               weight=float(weight))
         return WireMessage(KIND_DENSE, arr, rnd, res_norm)
     if kind == KIND_SPARSE:
         vals = np.frombuffer(body[:len_v], np.int8)

@@ -1,0 +1,361 @@
+"""The hierarchical aggregation tier (protocol/aggregator.py) and the
+lease-lifecycle bugfix sweep that ships with it.
+
+The tier's load-bearing claim is BIT identity: an aggregator that folds a
+window's results and flushes ONE merged v3 frame upstream leaves the hub
+in exactly the state a flat hub reaches folding the same arrivals — by
+construction (same float op sequence, fold seeded from the decoded
+upstream base), not by algebraic argument.  The failure-model claims are
+the usual protocol trio one level up: exactly-once upstream, no leaks
+when clients die mid-window, no leaks when the whole aggregator dies.
+
+The bugfix regressions pinned here:
+  * ``_lease_heap`` must stay empty under ``timeout_s=math.inf`` (it
+    grew one dead entry per issue, unbounded in long-lived servers);
+  * a mis-kinded frame on the upload leg must terminate the lease, not
+    KeyError out of ``deliver`` leaving it IN_FLIGHT forever;
+  * ``restore_checkpoint`` must drop live leases and reset the residual
+    ledger (post-checkpoint mass must not survive a rollback);
+  * a ``ProcessTransport`` whose broker never completes the handshake
+    must kill AND reap the broker subprocess before raising.
+"""
+import math
+import subprocess
+
+import numpy as np
+import pytest
+
+from repro.core import flat as F
+from repro.core.baselines import CompressedVCASGD, SyncBSP, VCASGD
+from repro.protocol import (LEASE_DROPPED, Aggregator, Coordinator,
+                            LeaseError)
+from repro.transfer import wire
+from repro.transfer.transport import ProcessTransport
+import repro.transfer.transport as transport_mod
+
+import jax
+
+
+def _params(seed=0, shape=(64, 32)):
+    return F.flatten({"w": jax.random.normal(jax.random.PRNGKey(seed),
+                                             shape)})
+
+
+# ---------------------------------------------------------------------------
+# the tier: bit identity, exactly-once upstream, no-leak failure
+# ---------------------------------------------------------------------------
+
+def test_tier_protocol_bit_identical_to_flat():
+    """Hub + aggregator folding a window then flushing == flat hub
+    folding the same five arrivals directly, to the BIT (uint32 views),
+    and the hub sees ONE upstream frame instead of five."""
+    fp = _params()
+    flat_hub = Coordinator(VCASGD(0.9), fp)
+    hub = Coordinator(VCASGD(0.9), fp)
+    agg = Aggregator(VCASGD(0.9), hub, agg_id=0)
+    up = agg.open_window(round=0)
+    for i in range(5):
+        fl = flat_hub.issue(cid=i, uid=i, round=0,
+                            base=flat_hub.state.params)
+        flat_hub.submit(fl, fl.base.buf + (i + 1) * 0.25)
+        flat_hub.assimilate(fl, flat_hub.deliver(fl), server_version=i)
+        el = agg.issue(cid=i, uid=i, round=0, base=agg.state.params)
+        agg.submit(el, el.base.buf + (i + 1) * 0.25)
+        agg.assimilate(el, agg.deliver(el), server_version=i)
+    assert agg.window_merged == 5
+    assert agg.window_retention == pytest.approx(0.9 ** 5)
+    assert agg.flush() is up
+    assert not agg.window_open and agg.flushes == 1
+    hub.assimilate(up, hub.deliver(up), server_version=0)
+    np.testing.assert_array_equal(
+        np.asarray(flat_hub.state.params.buf).view(np.uint32),
+        np.asarray(hub.state.params.buf).view(np.uint32))
+    assert hub.frames[wire.KIND_AGG] == 1 and hub.assimilated == 1
+    assert up.frame_bytes == wire.agg_frame_bytes(fp.spec.padded)
+    assert agg.transport.in_flight == 0 and hub.transport.in_flight == 0
+
+
+def test_preempted_client_mid_window_exactly_once_upstream():
+    """A client dies mid-upload inside a window: its lease drops, the
+    survivors' folds still flush upstream exactly ONCE, and the merge
+    equals a flat fold of only the surviving result."""
+    fp = _params()
+    hub = Coordinator(VCASGD(0.9), fp)
+    agg = Aggregator(VCASGD(0.9), hub, agg_id=0)
+    up = agg.open_window(round=0)
+    keep = agg.issue(cid=0, uid=1, round=0, base=agg.state.params)
+    dead = agg.issue(cid=1, uid=2, round=0, base=agg.state.params)
+    agg.submit(keep, keep.base.buf + 1.0)
+    agg.submit(dead, dead.base.buf + 99.0)    # uploaded, never delivered
+    agg.drop_client(1)                        # preempted mid-upload
+    assert dead.status == LEASE_DROPPED and dead.released
+    agg.assimilate(keep, agg.deliver(keep), server_version=0)
+    assert agg.window_merged == 1 and agg.in_flight == 0
+    assert agg.flush() is up
+    hub.assimilate(up, hub.deliver(up), server_version=0)
+    assert hub.assimilated == 1 and hub.frames[wire.KIND_AGG] == 1
+    with pytest.raises(LeaseError):           # the window is consumed
+        agg.flush()
+    ref = Coordinator(VCASGD(0.9), fp)
+    rl = ref.issue(cid=0, uid=1, round=0, base=fp)
+    ref.submit(rl, rl.base.buf + 1.0)
+    ref.assimilate(rl, ref.deliver(rl), server_version=0)
+    np.testing.assert_array_equal(
+        np.asarray(hub.state.params.buf).view(np.uint32),
+        np.asarray(ref.state.params.buf).view(np.uint32))
+    assert agg.transport.in_flight == 0 and hub.transport.in_flight == 0
+
+
+def test_empty_window_flush_never_counts_as_a_result():
+    """A window that folded nothing (every client lost) flushes to None:
+    the upstream lease is dropped, never submitted — an empty merge must
+    not bump the hub's assimilation count or move its params."""
+    fp = _params()
+    hub = Coordinator(VCASGD(0.9), fp)
+    agg = Aggregator(VCASGD(0.9), hub, agg_id=0)
+    agg.open_window(round=0)
+    lease = agg.issue(cid=0, uid=1, round=0, base=agg.state.params)
+    agg.submit(lease, lease.base.buf + 1.0)
+    agg.drop(lease)
+    assert agg.flush() is None
+    assert hub.assimilated == 0 and hub.dropped == 1
+    assert hub.in_flight == 0 and hub.transport.in_flight == 0
+    np.testing.assert_array_equal(np.asarray(hub.state.params.buf),
+                                  np.asarray(fp.buf))
+
+
+def test_aggregator_fail_releases_everything():
+    """Losing the whole aggregator node: every downstream lease AND
+    residual releases, the hub reclaims the upstream lease, and a fresh
+    window can be issued immediately — nothing leaks at either level."""
+    fp = _params()
+    hub = Coordinator(CompressedVCASGD(0.9, density=0.05), fp)
+    agg = Aggregator(CompressedVCASGD(0.9, density=0.05), hub, agg_id=7)
+    agg.open_window(round=0)
+    for i in range(3):
+        lease = agg.issue(cid=i, uid=i, round=0, base=agg.state.params)
+        agg.submit(lease, lease.base.buf + 1.0)
+        if i == 0:
+            # one fold leaves error-feedback residual behind at the edge
+            agg.assimilate(lease, agg.deliver(lease), server_version=0)
+    assert agg.residual_mass() > 0.0 and agg.in_flight == 2
+    assert hub.in_flight == 1
+    agg.fail()
+    assert agg.in_flight == 0 and agg.residual_mass() == 0.0
+    assert not agg.window_open and hub.in_flight == 0
+    assert agg.transport.in_flight == 0 and hub.transport.in_flight == 0
+    up2 = agg.open_window(round=1)
+    assert up2.uid == 1                       # window uids stay monotone
+
+
+def test_barrier_scheme_rejected_at_construction():
+    """BSP/persistent-replica schemes need every client every round; a
+    partial edge merge cannot represent them and must be refused."""
+    hub = Coordinator(VCASGD(0.9), _params())
+    with pytest.raises(ValueError, match="requires every client"):
+        Aggregator(SyncBSP(4), hub, agg_id=0)
+
+
+def test_fold_without_open_window_rejected():
+    fp = _params()
+    hub = Coordinator(VCASGD(0.9), fp)
+    agg = Aggregator(VCASGD(0.9), hub, agg_id=0)
+    lease = agg.issue(cid=0, uid=1, round=0, base=agg.state.params)
+    agg.submit(lease, lease.base.buf + 1.0)
+    with pytest.raises(LeaseError, match="no open window"):
+        agg.assimilate(lease, agg.deliver(lease), server_version=0)
+    with pytest.raises(LeaseError):
+        agg.flush()
+    up = agg.open_window(round=0)
+    with pytest.raises(LeaseError, match="already holds"):
+        agg.open_window(round=0)
+    hub.drop(up)
+
+
+# ---------------------------------------------------------------------------
+# the tier inside the simulator: 2-level == flat, churn accounting
+# ---------------------------------------------------------------------------
+
+def test_sim_two_level_bit_identical_to_flat():
+    """The whole point of fold relocation: a 2-level run (one aggregator
+    in front of one strong parameter server) produces the SAME final
+    bits as the flat run — identical float op sequence, not approximate
+    equivalence."""
+    from repro.core.simulator import SimConfig, run_simulation
+    from repro.core.tasks import MLPTask, make_classification_data
+
+    task = MLPTask()
+    data = make_classification_data(n_train=600, n_val=150, seed=0)
+    base = dict(n_param_servers=1, n_clients=3, tasks_per_client=3,
+                n_shards=9, max_epochs=1, local_steps=2,
+                consistency="strong", subtask_compute_s=120.0, seed=5)
+    flat = run_simulation(task, data, VCASGD(0.9), SimConfig(**base))
+    tier = run_simulation(task, data, VCASGD(0.9),
+                          SimConfig(aggregators=1, **base))
+    assert tier.final_accuracy == flat.final_accuracy   # bitwise
+    assert tier.results_assimilated == flat.results_assimilated == 9
+    assert tier.aggregators == 1 and tier.agg_flushes >= 1
+    assert tier.wire_agg_frames == tier.agg_flushes
+    # the hub's upstream leg shrinks from one frame per result to one
+    # per flush window
+    assert tier.wire.frames_sent < flat.wire.frames_sent
+
+
+def test_sim_tier_fleet_churn_accounting():
+    """A preemptible probe fleet behind 4 aggregators: every produced
+    result is assimilated exactly once, every flush maps to exactly one
+    hub KIND_AGG frame, and the tier survives client churn."""
+    from repro.core.baselines import VCASGD as _V
+    from repro.core.simulator import SimConfig, run_simulation
+    from repro.scenarios.probe import ProbeTask, make_probe_data
+
+    cfg = SimConfig(n_param_servers=2, n_clients=120, tasks_per_client=1,
+                    n_shards=240, max_epochs=2, local_steps=1,
+                    timeout_s=1800.0, preemptible=True,
+                    mean_lifetime_s=5400.0, restart_delay_s=120.0,
+                    subtask_compute_s=120.0, server_proc_s=0.05,
+                    seed=7, aggregators=4)
+    res = run_simulation(ProbeTask(), make_probe_data(cfg.n_shards, seed=7),
+                         _V(0.95), cfg)
+    assert res.epochs_done == 2
+    assert res.results_assimilated == 480
+    assert res.wire_agg_frames == res.agg_flushes > 0
+    assert res.preemptions > 0
+    # edge transports carried the per-client traffic the hub no longer sees
+    assert res.edge_wire.frames_sent > res.wire.frames_sent
+
+
+# ---------------------------------------------------------------------------
+# bugfix 1: the deadline heap under infinite timeouts
+# ---------------------------------------------------------------------------
+
+def test_lease_heap_bounded_under_inf_timeout():
+    """timeout_s=inf (vc_serve-style trusting runtimes): issue/renew must
+    not push never-expiring entries — the heap grew one dead tuple per
+    lease forever.  Finite deadlines still expire."""
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=math.inf)
+    for i in range(64):
+        lease = coord.issue(cid=0, uid=i, round=0,
+                            base=coord.state.params)
+        coord.submit(lease, lease.base.buf + 1.0)
+        coord.assimilate(lease, coord.deliver(lease), server_version=i)
+    assert coord.in_flight == 0 and coord.assimilated == 64
+    assert len(coord._lease_heap) == 0
+    live = coord.issue(cid=0, uid=999, round=0, base=coord.state.params)
+    coord.renew(live, deadline=math.inf)
+    assert len(coord._lease_heap) == 0        # renew-to-inf doesn't push
+    finite = coord.issue(cid=1, uid=1000, round=0,
+                         base=coord.state.params, now=0.0, deadline=5.0)
+    assert len(coord._lease_heap) == 1
+    assert coord.expire(now=10.0) == [finite]
+    coord.drop(live)
+
+
+# ---------------------------------------------------------------------------
+# bugfix 2: mis-kinded frames on the upload leg
+# ---------------------------------------------------------------------------
+
+def test_upload_leg_wrong_kind_terminates_lease():
+    """A structurally valid SHARD frame arriving on the UPLOAD leg (shard
+    frames are download-only) must raise WireError AND terminate the
+    lease — before the fix the frame-counter lookup KeyError'd and the
+    lease sat IN_FLIGHT forever, wedging its base and window."""
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp)
+    lease = coord.issue(cid=0, uid=1, round=0, base=fp)
+    coord.submit(lease, fp.buf + 1.0)
+    evil = wire.encode_shard(np.asarray(fp.buf), shard=0, n_shards=1)
+    coord.transport._inflight[lease.msg_id] = evil
+    with pytest.raises(wire.WireError, match="upload"):
+        coord.deliver(lease)
+    assert lease.status == LEASE_DROPPED and lease.released
+    assert coord.in_flight == 0 and coord.dropped == 1
+    # the coordinator is not wedged: the next round works end to end
+    l2 = coord.issue(cid=0, uid=2, round=0, base=coord.state.params)
+    coord.submit(l2, l2.base.buf + 1.0)
+    coord.assimilate(l2, coord.deliver(l2), server_version=0)
+    assert coord.assimilated == 1
+
+
+def test_upload_leg_agg_frame_rejected_at_plain_coordinator_lease():
+    """KIND_AGG is only valid under an upstream (aggregator) submission:
+    a client lease whose upload mutates into an aggregate frame is
+    dropped the same way."""
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp)
+    lease = coord.issue(cid=0, uid=1, round=0, base=fp)
+    coord.submit(lease, fp.buf + 1.0)
+    # an aggregate frame IS legal on this coordinator's upload leg (the
+    # hub accepts merges) — but a DOWNLOAD-kind frame never is
+    evil = wire.encode_shard(np.asarray(fp.buf), shard=0, n_shards=2)
+    coord.transport._inflight[lease.msg_id] = evil
+    with pytest.raises(wire.WireError):
+        coord.deliver(lease)
+    assert lease.released and coord.in_flight == 0
+
+
+# ---------------------------------------------------------------------------
+# bugfix 3: restore_checkpoint must not leak pre-restore protocol state
+# ---------------------------------------------------------------------------
+
+def test_restore_checkpoint_drops_leases_and_resets_ledger(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    fp = _params()
+    coord = Coordinator(CompressedVCASGD(0.9, density=0.05), fp)
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    l1 = coord.issue(cid=0, uid=1, round=0, base=fp)
+    coord.submit(l1, l1.base.buf + 1.0)
+    coord.assimilate(l1, coord.deliver(l1), server_version=0)
+    coord.save_checkpoint(mgr, step=1)
+    # post-checkpoint: more residual mass and two live leases
+    l2 = coord.issue(cid=1, uid=2, round=0, base=coord.state.params)
+    coord.submit(l2, l2.base.buf + 2.0)
+    coord.assimilate(l2, coord.deliver(l2), server_version=1)
+    l3 = coord.issue(cid=1, uid=3, round=0, base=coord.state.params)
+    coord.submit(l3, l3.base.buf + 3.0)
+    l4 = coord.issue(cid=2, uid=4, round=0, base=coord.state.params)
+    assert coord.in_flight == 2 and coord.residual_mass() > 0.0
+    restored_version = coord.state.version
+    assert coord.restore_checkpoint(mgr) == 1
+    # the rollback is total: no live leases, no heap entries, no
+    # in-flight frames, and the post-checkpoint residual mass is gone
+    assert coord.in_flight == 0
+    assert len(coord._lease_heap) == 0
+    assert coord.transport.in_flight == 0
+    assert coord.residual_mass() == 0.0
+    assert l3.released and l4.released
+    assert coord.state.version < restored_version
+    # stale leases from before the restore can never assimilate
+    with pytest.raises(LeaseError):
+        coord.assimilate(l3, fp.buf + 3.0, server_version=0)
+    # and the restored server runs fresh rounds cleanly
+    l5 = coord.issue(cid=0, uid=5, round=1, base=coord.state.params)
+    coord.submit(l5, l5.base.buf + 1.0)
+    coord.assimilate(l5, coord.deliver(l5), server_version=0)
+
+
+# ---------------------------------------------------------------------------
+# bugfix 4: the broker process must never outlive a failed handshake
+# ---------------------------------------------------------------------------
+
+def test_broker_reaped_when_handshake_times_out(monkeypatch):
+    """A broker that spawns but never connects: the constructor raises
+    (accept timeout) and must kill AND reap its subprocess — an orphaned
+    Popen handle leaks a live OS process per failed construction."""
+    procs = []
+    real_popen = subprocess.Popen
+
+    def capturing_popen(*args, **kwargs):
+        p = real_popen(*args, **kwargs)
+        procs.append(p)
+        return p
+
+    monkeypatch.setattr(transport_mod.subprocess, "Popen", capturing_popen)
+    monkeypatch.setattr(transport_mod, "_BROKER_SRC",
+                        "import time; time.sleep(600)")
+    with pytest.raises(OSError):
+        ProcessTransport(timeout_s=0.5)
+    assert len(procs) == 1
+    # killed and waited on: returncode is populated, no zombie left
+    assert procs[0].returncode is not None

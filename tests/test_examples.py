@@ -37,6 +37,21 @@ def test_vc_serve_smoke(tmp_path, capsys):
     assert list(tmp_path.glob("ckpt_*.msgpack"))    # checkpoint hooks ran
 
 
+def test_vc_serve_smoke_tier(tmp_path, capsys):
+    """vc_serve with an aggregation tier: clients lease from an edge
+    aggregator over its own broker, the hub only ever sees merged
+    KIND_AGG frames on the upstream leg — all three process boundaries
+    (hub<->agg, agg<->client) are real."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.launch.vc_serve import main
+    assert main(["--smoke", "--tier", "--ckpt-dir", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "results assimilated" in out
+    assert "upstream agg frames" in out             # merged leg is live
+    assert "aggregators" in out
+    assert list(tmp_path.glob("ckpt_*.msgpack"))
+
+
 def test_vc_serve_resume_rounds_monotonic(tmp_path, capsys):
     """The resume bugfix: a killed-and-restarted vc_serve continues at the
     checkpointed round with the persisted uid — rounds, wire headers and

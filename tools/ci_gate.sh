@@ -42,6 +42,17 @@ if grep -q "round 0:" "$resume_dir/second.log"; then
 fi
 echo "[ci-gate] vc_serve kill-and-resume: rounds stayed monotone"
 
+# aggregation tier: the same wall-clock driver behind an edge aggregator
+# (real broker process on every hop) — the hub must only ever see merged
+# KIND_AGG frames on the upstream leg
+tier_dir=$(mktemp -d)
+trap 'rm -rf "$resume_dir" "$tier_dir"' EXIT
+python -m repro.launch.vc_serve --smoke --tier --ckpt-dir "$tier_dir" \
+    > "$tier_dir/tier.log"
+grep -q "upstream agg frames" "$tier_dir/tier.log"
+grep -q "results assimilated" "$tier_dir/tier.log"
+echo "[ci-gate] vc_serve aggregation-tier smoke completed"
+
 # fleet smoke: a 200-client preemptible scenario end to end through the
 # scenario registry (probe task, real wire frames) — proves the fleet
 # path stays runnable; throughput is gated separately by --check below
