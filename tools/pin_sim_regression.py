@@ -79,6 +79,23 @@ CASES.update({
         lambda: VCASGD(0.95), dict(FLEET_BASE, eval_stride=8), "probe"),
 })
 
+# aggregation-tier pins (aggregation-tier PR).  `tier-flat-twin` and
+# `tier-2level` are the SAME workload flat vs behind one aggregator over
+# a single strong parameter server: fold relocation is exact there, so
+# their final_accuracy (and the whole accuracy trace) must be
+# bit-identical — asserted against each other by
+# tests/test_protocol.py::test_pinned_tier_matches_flat_twin, not just
+# against this fixture.  `tier-fleet` pins the multi-aggregator path
+# under churn (flush scheduling, per-agg latency rng, drop routing).
+TWIN_BASE = dict(BASE, n_param_servers=1, consistency="strong",
+                 tasks_per_client=3, n_shards=9, max_epochs=1)
+CASES.update({
+    "tier-flat-twin": (lambda: VCASGD(0.9), dict(TWIN_BASE)),
+    "tier-2level": (lambda: VCASGD(0.9), dict(TWIN_BASE, aggregators=1)),
+    "tier-fleet": (
+        lambda: VCASGD(0.95), dict(FLEET_BASE, aggregators=4), "probe"),
+})
+
 
 def run_case(task, data, name):
     case = CASES[name]
@@ -89,6 +106,17 @@ def run_case(task, data, name):
         task = ProbeTask()
         data = make_probe_data(cfg.n_shards, seed=cfg.seed)
     res = run_simulation(task, data, factory(), cfg)
+    # tier cases also pin the edge/flush accounting; flat cases keep the
+    # exact pre-tier fingerprint shape (aggregators == 0 adds nothing)
+    extra = {}
+    if res.aggregators:
+        extra = {
+            "aggregators": int(res.aggregators),
+            "agg_flushes": int(res.agg_flushes),
+            "wire_agg_frames": int(res.wire_agg_frames),
+            "edge_wire_frames_sent": int(res.edge_wire.frames_sent),
+            "edge_wire_bytes_sent": int(res.edge_wire.bytes_sent),
+        }
     return {
         "wall_time_s": float(res.wall_time_s),
         "epochs_done": int(res.epochs_done),
@@ -112,6 +140,7 @@ def run_case(task, data, name):
         "wire_handout_bytes": int(res.handout_bytes),
         "leases_expired": int(res.leases_expired),
         "leases_dropped": int(res.leases_dropped),
+        **extra,
     }
 
 
