@@ -280,6 +280,134 @@ def bench_flat_adam(*, write_json: bool = True) -> Dict[str, Dict]:
     return out
 
 
+# pre-PR wall-clock of the compressed_flat assimilation on this container
+# (the committed results/BENCH_flat_assimilate.json before the blocked
+# top-k landed) — the denominator of the compression suite's speedup row
+_PRE_BLOCKED_TOPK_US = 801836.2
+
+
+def bench_compression(*, write_json: bool = True) -> Dict[str, Dict]:
+    """The compression hot path end to end on the bench-scale bus
+    (~2.1M params, density 0.05):
+
+    (a) blocked top-k selection (core/compression.py::select_topk) and the
+        full compress_flat pass (select + quantize + error feedback);
+    (b) the fused wire encode leg — encode_sparse packs the frame body in
+        ONE device buffer / ONE host transfer — plus decode and the dense
+        decompress;
+    (c) launch counts of the blocked Pallas pipeline (stats + exact-k emit
+        + pack), gated by ``run.py --check`` like the other suites.
+
+    Writes results/BENCH_compression.json.
+    """
+    from repro.core import compression as C
+    from repro.kernels import vc_asgd_update as VK
+    from repro.runtime.vc_runtime import compressed_assimilate
+    from repro.transfer import wire
+
+    key = jax.random.PRNGKey(0)
+    n_logical = 2101504                  # bench-model logical params
+    n_padded = 2105344                   # BLOCK=256-padded bus length
+    density = 0.05
+    k = max(1, int(n_logical * density))
+    delta = 0.02 * jax.random.normal(key, (n_padded,), jnp.float32)
+    residual = 0.002 * jax.random.normal(jax.random.fold_in(key, 1),
+                                         (n_padded,), jnp.float32)
+
+    us_select = _time(lambda d: C.select_topk(d, k), delta, iters=5)
+    us_compress = _time(
+        lambda d, r: C.compress_flat(d, density=density, logical_n=n_logical,
+                                     residual=r)[1],
+        delta, residual, iters=5)
+
+    payload, _ = C.compress_flat(delta, density=density, logical_n=n_logical,
+                                 residual=residual)
+    jax.block_until_ready(payload.values)
+
+    frame = wire.encode_sparse(payload)          # warm the jitted pack
+    t0 = time.perf_counter()
+    for _ in range(10):
+        frame = wire.encode_sparse(payload)
+    us_encode = (time.perf_counter() - t0) / 10 * 1e6
+    t0 = time.perf_counter()
+    for _ in range(10):
+        wire.decode(frame)
+    us_decode = (time.perf_counter() - t0) / 10 * 1e6
+
+    us_decompress = _time(
+        lambda v, s, i: C.decompress_flat(
+            C.CompressedDelta(v, s, i, (n_padded,), density, 256)),
+        payload.values, payload.scales, payload.indices, iters=5)
+
+    # (c) launch counts of the Pallas pipeline (trace-time, interpret mode)
+    small = 0.02 * jax.random.normal(jax.random.fold_in(key, 2),
+                                     (C._MIN_FAST_N,), jnp.float32)
+    VK.reset_launch_count()
+    K.blocked_topk_sparsify(small, int(C._MIN_FAST_N * density))
+    launches_topk = VK.launch_count()
+    VK.reset_launch_count()
+    K.fused_quantize_pack(payload.values.astype(jnp.float32)[:4096],
+                          payload.indices[:4096])
+    launches_qpack = VK.launch_count()
+    VK.reset_launch_count()
+    K.fused_pack_body(payload.values[:4096], payload.scales[:16],
+                      payload.indices[:4096])
+    launches_pack = VK.launch_count()
+
+    # end-to-end compressed assimilation on the SAME 24-leaf/4-island model
+    # bench_flat_assimilate times — apples-to-apples with the committed
+    # pre-PR wall-clock
+    sizes = [(256, 256), (1024, 64), (64,), (512, 512), (128, 1024), (1024,)]
+    tree = {}
+    for rep in range(4):
+        for i, shp in enumerate(sizes):
+            k2 = jax.random.fold_in(key, rep * 16 + i)
+            tree[f"layer{rep}/p{i}"] = jax.random.normal(k2, shp, jnp.float32)
+    clients = [jax.tree.map(
+        lambda x, c=c: x + 0.01 * jax.random.normal(
+            jax.random.fold_in(key, 1000 + c), x.shape), tree)
+        for c in range(4)]
+    islands = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
+    surv = jnp.ones((4,), bool)
+    us_total = _time(
+        lambda t, i: compressed_assimilate(t, i, 0.9, surv, density=0.05)[0],
+        tree, islands, iters=3)
+
+    out = {
+        # no commas in derived: run.py prints name,us_per_call,derived CSV
+        "model": {"us_per_call": 0.0,
+                  "derived": f"n={n_logical} padded={n_padded} k={k} "
+                             f"density={density}"},
+        "select_topk": {"us_per_call": round(us_select, 1),
+                        "derived": "blocked exact top-k (sampled bracket)"},
+        "compress_flat": {"us_per_call": round(us_compress, 1),
+                          "derived": "select+quantize+error-feedback"},
+        "encode_sparse": {"us_per_call": round(us_encode, 1),
+                          "derived": f"{len(frame)} bytes one-transfer body"},
+        "decode": {"us_per_call": round(us_decode, 1),
+                   "derived": "validate+split frame"},
+        "decompress_flat": {"us_per_call": round(us_decompress, 1),
+                            "derived": "dequant+scatter to dense"},
+        "compressed_vs_pre_pr": {
+            "us_per_call": round(us_total, 1),
+            "derived": f"speedup={_PRE_BLOCKED_TOPK_US / max(us_total, 1e-9):.2f}x"
+                       f" vs pre-blocked-topk {_PRE_BLOCKED_TOPK_US:.0f}us"},
+        "pallas_launches": {"us_per_call": 0.0,
+                            "derived": f"blocked_topk={launches_topk} "
+                                       f"quantize_pack={launches_qpack} "
+                                       f"pack_body={launches_pack}"},
+        "_launches": {"blocked_topk": launches_topk,
+                      "quantize_pack": launches_qpack,
+                      "pack_body": launches_pack},
+    }
+    if write_json:
+        results = Path(__file__).resolve().parents[1] / "results"
+        results.mkdir(exist_ok=True)
+        (results / "BENCH_compression.json").write_text(
+            json.dumps(out, indent=1))
+    return out
+
+
 def _bench_sharded_flat_impl(n_shards: int) -> Dict[str, Dict]:
     """Runs inside a process whose host platform has >= n_shards devices."""
     from repro.core import flat as F

@@ -1,4 +1,5 @@
-"""Roofline report generator: dryrun.json -> EXPERIMENTS.md tables.
+"""Roofline report generator: dryrun.json -> EXPERIMENTS.md tables,
+plus the PER-KERNEL roofline gate for the compression hot path.
 
 Per (arch x cell x mesh):
   compute_s   = HLO dot FLOPs / peak            (per device, trip-scaled)
@@ -8,12 +9,23 @@ Per (arch x cell x mesh):
                 + exact attention/recurrence terms)
   ratio       = MODEL_FLOPS / (HLO_FLOPs * n_dev)   (remat/padding waste)
   frac        = projected roofline fraction = ideal compute time / bound
+
+Per kernel (KERNEL_ROOFLINES registry; docs/ROOFLINE.md):
+  analytic_bytes   = hand-derived minimum traffic the algorithm must move
+  hlo_bytes        = essential bytes parsed from the compiled HLO
+  traffic_fraction = analytic / hlo  (deterministic on a pinned jaxlib —
+                     extra traffic from a broken fusion lowers it)
+  achieved_bw      = hlo_bytes / measured wall-clock (loose floor only)
+
+``check_kernel_rooflines`` enforces both against
+results/BASELINE_roofline.json from ``benchmarks/run.py --check``.
 """
 from __future__ import annotations
 
 import json
+import sys
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 
@@ -21,9 +33,21 @@ from repro.configs import ARCHS, get_config
 from repro.configs.shapes import SHAPES
 from repro.models.common import ModelConfig
 from repro.models.registry import build_model
-from repro.runtime.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.runtime.hlo_analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                        KernelProfile, profile_kernel)
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
+ROOFLINE_BASELINE = RESULTS / "BASELINE_roofline.json"
+
+# gate thresholds (docs/ROOFLINE.md):
+# traffic_fraction is deterministic per jaxlib, so a RELATIVE ratchet with
+# 25% slack is safe (layout-level jitter across minor recompiles) while a
+# doubled-bytes regression halves the fraction and always trips; the
+# measured-bandwidth floor is deliberately loose — it only exists to catch
+# order-of-magnitude slowdowns without letting CI wall-clock noise flake
+# the gate.
+FRACTION_RTOL = 0.25
+BW_FLOOR_FRACTION = 0.30
 
 _COUNTS: Dict[str, tuple] = {}
 
@@ -175,6 +199,144 @@ def markdown_table(rows, single_pod_only=True) -> str:
             f"{r['ratio']:.2f} | {r['roofline_frac']:.2%} | "
             f"{r['peak_gib']:.1f} |")
     return hdr + "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# per-kernel roofline gate (the compression hot path)
+# ---------------------------------------------------------------------------
+
+# bench-scale bus (same model as benchmarks/kernel_bench.py)
+_N_LOGICAL = 2101504
+_N_PADDED = 2105344
+_DENSITY = 0.05
+_K = max(1, int(_N_LOGICAL * _DENSITY))
+_NG = -(-_K // 256)
+
+
+def _kernel_inputs():
+    import jax.numpy as jnp
+    from repro.core import compression as C
+    key = jax.random.PRNGKey(7)
+    delta = 0.02 * jax.random.normal(key, (_N_PADDED,), jnp.float32)
+    residual = 0.002 * jax.random.normal(jax.random.fold_in(key, 1),
+                                         (_N_PADDED,), jnp.float32)
+    payload, _ = C.compress_flat(delta, density=_DENSITY,
+                                 logical_n=_N_LOGICAL, residual=residual)
+    return delta, residual, payload
+
+
+def _entry_select_topk() -> Tuple[Callable, tuple, float]:
+    from repro.core import compression as C
+    delta, _, _ = _kernel_inputs()
+    # floor: one streaming read of the input magnitudes
+    return (lambda d: C.select_topk(d, _K)), (delta,), 4.0 * _N_PADDED
+
+
+def _entry_compress_flat() -> Tuple[Callable, tuple, float]:
+    from repro.core import compression as C
+    delta, residual, _ = _kernel_inputs()
+
+    def f(d, r):
+        p, res = C.compress_flat(d, density=_DENSITY, logical_n=_N_LOGICAL,
+                                 residual=r)
+        return p.values, p.scales, p.indices, res
+    # floor: read delta + read residual + write residual (+payload, small)
+    return f, (delta, residual), 12.0 * _N_PADDED + 5.0 * _K + 4.0 * _NG
+
+
+def _entry_threshold_sparsify() -> Tuple[Callable, tuple, float]:
+    from repro.kernels import ref as R
+    delta, _, _ = _kernel_inputs()
+    # floor: read x + write kept + write residual
+    return (lambda d: R.threshold_sparsify(d, 0.01)), (delta,), \
+        12.0 * _N_PADDED
+
+
+def _entry_pack_body() -> Tuple[Callable, tuple, float]:
+    from repro.kernels import ref as R
+    _, _, payload = _kernel_inputs()
+    body = float(_K + 4 * _NG + 4 * _K)
+    # floor: read the three sections + write the packed body
+    return (lambda q, s, i: R.pack_body(q, s, i)), \
+        (payload.values, payload.scales, payload.indices), 2.0 * body
+
+
+def _entry_decompress_flat() -> Tuple[Callable, tuple, float]:
+    from repro.core import compression as C
+    _, _, payload = _kernel_inputs()
+
+    def f(v, s, i):
+        return C.decompress_flat(
+            C.CompressedDelta(v, s, i, (_N_PADDED,), _DENSITY, 256))
+    # floor: read the payload + write the dense buffer
+    return f, (payload.values, payload.scales, payload.indices), \
+        4.0 * _N_PADDED + 5.0 * _K + 4.0 * _NG
+
+
+KERNEL_ROOFLINES: Dict[str, Callable[[], Tuple[Callable, tuple, float]]] = {
+    "select_topk": _entry_select_topk,
+    "compress_flat": _entry_compress_flat,
+    "threshold_sparsify": _entry_threshold_sparsify,
+    "pack_body": _entry_pack_body,
+    "decompress_flat": _entry_decompress_flat,
+}
+
+
+def kernel_profiles(iters: int = 5) -> Dict[str, KernelProfile]:
+    out = {}
+    for name, build in KERNEL_ROOFLINES.items():
+        fn, args, analytic = build()
+        out[name] = profile_kernel(name, fn, args, analytic, iters=iters)
+    return out
+
+
+def write_roofline_baseline(profiles: Optional[Dict[str, KernelProfile]]
+                            = None) -> Dict:
+    profiles = profiles or kernel_profiles()
+    data = {name: p.as_dict() for name, p in profiles.items()}
+    ROOFLINE_BASELINE.write_text(json.dumps(data, indent=1))
+    return data
+
+
+def check_kernel_rooflines(profiles: Optional[Dict[str, KernelProfile]]
+                           = None,
+                           baseline_path: Path = ROOFLINE_BASELINE) -> int:
+    """Per-kernel roofline gate.  Fails (returns 1) when a kernel's
+    traffic fraction drops more than FRACTION_RTOL (relative) below its
+    pinned value (it moves more bytes than it used to — e.g. a fused pass
+    broke apart or a buffer got duplicated) or its achieved bandwidth
+    falls under BW_FLOOR_FRACTION of the pinned measurement."""
+    if not baseline_path.exists():
+        print(f"no roofline baseline at {baseline_path}; run "
+              f"--update-baseline first", file=sys.stderr)
+        return 2
+    pinned = json.loads(baseline_path.read_text())
+    profiles = profiles or kernel_profiles()
+    failures = []
+    for name, pin in pinned.items():
+        prof = profiles.get(name)
+        if prof is None:
+            failures.append(f"{name}: kernel missing from registry")
+            continue
+        frac, pfrac = prof.traffic_fraction, pin["traffic_fraction"]
+        floor = pfrac * (1.0 - FRACTION_RTOL)
+        if frac < floor:
+            failures.append(
+                f"{name}: traffic fraction {frac:.3f} < pinned "
+                f"{pfrac:.3f} x {1.0 - FRACTION_RTOL} (hlo bytes "
+                f"{prof.hlo_bytes / 1e6:.1f}MB vs analytic "
+                f"{prof.analytic_bytes / 1e6:.1f}MB)")
+        else:
+            print(f"check roofline {name}: fraction {frac:.3f} >= "
+                  f"{floor:.3f} OK")
+        bw, pbw = prof.achieved_bw, pin["achieved_gbps"] * 1e9
+        if bw < pbw * BW_FLOOR_FRACTION:
+            failures.append(
+                f"{name}: achieved bandwidth {bw / 1e9:.2f}GB/s < "
+                f"{BW_FLOOR_FRACTION:.2f} x pinned {pbw / 1e9:.2f}GB/s")
+    for f in failures:
+        print(f"ROOFLINE REGRESSION {f}", file=sys.stderr)
+    return 1 if failures else 0
 
 
 def main():

@@ -12,7 +12,10 @@ the committed baseline (results/BASELINE_launches.json) — the fused
 single-launch structure is the one perf property this CPU container can
 pin exactly.  It ALSO runs the fleet smoke scenario and fails if its
 event-loop throughput drops below the baselined events/sec floor
-(baseline * FLOOR_FRACTION, so CI noise doesn't flake the gate).
+(baseline * FLOOR_FRACTION, so CI noise doesn't flake the gate), and the
+per-kernel ROOFLINE gate (results/BASELINE_roofline.json): compiled-HLO
+traffic per compression kernel vs its hand-derived analytic minimum, plus
+a loose measured-bandwidth floor (see docs/ROOFLINE.md).
 """
 from __future__ import annotations
 
@@ -35,7 +38,7 @@ CANONICAL = {
 
 BASELINE = RESULTS / "BASELINE_launches.json"
 # suites that carry a numeric _launches dict, gated by --check
-LAUNCH_SUITES = ("flat", "flat_adam", "sharded_flat")
+LAUNCH_SUITES = ("flat", "flat_adam", "sharded_flat", "compression")
 
 
 def _out_path(name: str) -> Path:
@@ -82,16 +85,23 @@ def check_launches(benches) -> int:
         else:
             print(f"check fleet.smoke_events_per_sec: {eps:.0f} >= "
                   f"{floor:.0f} OK")
+    # per-kernel roofline gate (results/BASELINE_roofline.json)
+    from benchmarks.roofline_report import check_kernel_rooflines
+    rc = check_kernel_rooflines()
+    if rc:
+        failures.append("kernel roofline gate failed (see above)")
     if failures:
         for f in failures:
             print(f"PERF REGRESSION {f}", file=sys.stderr)
         return 1
-    print("launch-count + events/sec check passed")
+    print("launch-count + events/sec + roofline check passed")
     return 0
 
 
 def update_baseline(benches) -> None:
     from benchmarks.fleet_bench import smoke_events_per_sec
+    from benchmarks.roofline_report import (ROOFLINE_BASELINE,
+                                            write_roofline_baseline)
     out = {}
     for name in LAUNCH_SUITES:
         res = benches[name]()
@@ -100,6 +110,8 @@ def update_baseline(benches) -> None:
     out["fleet"] = {"smoke_events_per_sec": round(smoke_events_per_sec(), 1)}
     BASELINE.write_text(json.dumps(out, indent=1))
     print(f"wrote {BASELINE}: {json.dumps(out)}")
+    write_roofline_baseline()
+    print(f"wrote {ROOFLINE_BASELINE}")
 
 
 def main(argv=None) -> None:
@@ -108,7 +120,8 @@ def main(argv=None) -> None:
                     help="paper-scale horizons (40 epochs, 50 shards)")
     ap.add_argument("--only", default="",
                     help="comma list: fig2,fig3,fig4,fig6,consistency,cost,"
-                         "kernels,flat,flat_adam,sharded_flat,fleet")
+                         "kernels,flat,flat_adam,sharded_flat,fleet,"
+                         "compression,frontier")
     ap.add_argument("--check", action="store_true",
                     help="fail if any BENCH_*.json launch count regresses "
                          "vs results/BASELINE_launches.json")
@@ -121,7 +134,8 @@ def main(argv=None) -> None:
 
     from benchmarks import paper_figs as F
     from benchmarks.fleet_bench import bench_fleet
-    from benchmarks.kernel_bench import (bench_flat_adam,
+    from benchmarks.frontier_bench import bench_frontier
+    from benchmarks.kernel_bench import (bench_compression, bench_flat_adam,
                                          bench_flat_assimilate,
                                          bench_kernels, bench_sharded_flat)
 
@@ -136,7 +150,9 @@ def main(argv=None) -> None:
         "flat": bench_flat_assimilate,
         "flat_adam": bench_flat_adam,
         "sharded_flat": bench_sharded_flat,
+        "compression": bench_compression,
         "fleet": lambda: bench_fleet(quick),
+        "frontier": lambda: bench_frontier(quick),
     }
 
     if args.check:
@@ -155,7 +171,8 @@ def main(argv=None) -> None:
         dt_us = (time.perf_counter() - t0) * 1e6
         _out_path(name).write_text(json.dumps(res, indent=1, default=str))
         claims = res.pop("_claims", None) if isinstance(res, dict) else None
-        if name in ("kernels", "flat", "flat_adam", "sharded_flat"):
+        if name in ("kernels", "flat", "flat_adam", "sharded_flat",
+                    "compression"):
             for k, v in res.items():
                 if k.startswith("_"):
                     continue
@@ -170,8 +187,12 @@ def main(argv=None) -> None:
         if claims:
             all_claims[name] = claims
     if all_claims:
-        (RESULTS / "BENCH_claims.json").write_text(
-            json.dumps(all_claims, indent=1))
+        # merge-on-write: a partial --only run must not drop the claims
+        # recorded by suites it didn't run
+        path = RESULTS / "BENCH_claims.json"
+        merged = json.loads(path.read_text()) if path.exists() else {}
+        merged.update(all_claims)
+        path.write_text(json.dumps(merged, indent=1))
 
 
 if __name__ == "__main__":

@@ -28,17 +28,148 @@ import jax.numpy as jnp
 class CompressedDelta(NamedTuple):
     values: jnp.ndarray      # int8 quantized surviving values [k]
     scales: jnp.ndarray      # f32 per-block scales [k / block]
-    indices: jnp.ndarray     # int32 flat indices [k]
+    indices: jnp.ndarray     # int32 flat indices [k], ASCENDING (canonical)
     shape: tuple             # original shape
     density: float
     block: int = 256         # quantization block (the wire format ships it)
 
 
+# ---------------------------------------------------------------------------
+# blocked exact top-k selection (replaces the global O(N log N) sort).
+#
+# The full-buffer ``jax.lax.top_k`` was the measured soft spot of the
+# compressed path (ROADMAP perf trajectory: compressed_flat 0.47x vs the
+# per-leaf walk).  Selection only needs the SET of the k largest-|x|
+# entries, and that set is determined by one scalar: the k-th magnitude.
+# Magnitudes compare exactly as their float bit patterns (bitcast of |x|
+# is monotone for non-negative floats), so the whole pipeline runs in
+# uint32 bit space with zero float-compare subtleties:
+#
+#   1. sample: sort a strided sample of the magnitude bits and pick a
+#      conservative lower bracket ``lo`` (count(bits >= lo) lands in
+#      [k, k + _MARGIN] w.h.p. — one O(N) count pass verifies),
+#   2. stats pass: ONE memory-bound pass packs the ``bits >= lo`` mask
+#      into uint32 words (the blocked kernel form is
+#      kernels/topk_mask.py::blocked_topk_stats — per-block packed words
+#      + per-block counts), so the rank scan that follows runs over
+#      N/32 words instead of N elements,
+#   3. refinement: popcount-cumsum over the words + binary rank search
+#      extracts the <= k + _MARGIN candidate positions; sorting just the
+#      candidate bits (tiny vs N) yields the EXACT k-th magnitude tau,
+#   4. exact-k ties: candidates equal to tau keep only the first
+#      ``k - count(bits > tau)`` by index — deterministic under any tie
+#      multiplicity (lowest flat index wins, the same tie order
+#      ``lax.top_k`` uses).
+#
+# If the sampled bracket misses (adversarial or near-constant data, e.g.
+# an all-zero delta), a ``lax.cond`` falls back to ``lax.top_k`` — exact
+# either way, the bracket only decides speed.  Indices are returned
+# ASCENDING: that is the canonical payload order (block-ordered output of
+# the stats kernel; also the faster scatter order for error feedback and
+# decompression).
+# ---------------------------------------------------------------------------
+
+_SAMPLE = 1 << 16            # strided threshold sample size
+_MARGIN = 1 << 15            # candidate headroom above k (>= 10 sigma)
+_MIN_FAST_N = 16 * _SAMPLE   # below this the global sort wins (the sample
+                             # sort alone would rival sorting the input)
+
+
+def _magnitude_bits(flat: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(jnp.abs(flat), jnp.uint32)
+
+
+def _rank_positions(words: jnp.ndarray, cum: jnp.ndarray,
+                    ranks: jnp.ndarray) -> jnp.ndarray:
+    """Positions of the rank-th set bits (1-based ranks) of a packed mask:
+    binary rank search over the word cumsum, then a 5-step popcount
+    bisection inside the word."""
+    nw = words.shape[0]
+    widx = jnp.minimum(jnp.searchsorted(cum, ranks, side="left"), nw - 1)
+    base = jnp.where(widx > 0, cum[jnp.maximum(widx - 1, 0)], 0)
+    r_in = ranks - base
+    word = words[widx]
+    pos = jnp.zeros_like(r_in)
+    for shift in (16, 8, 4, 2, 1):
+        trial = pos + shift
+        below = jax.lax.population_count(
+            word & ((jnp.uint32(1) << trial.astype(jnp.uint32))
+                    - jnp.uint32(1))).astype(jnp.int32)
+        pos = jnp.where(below < r_in, trial, pos)
+    return widx * 32 + pos
+
+
+def select_topk(flat: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Indices (int32, ascending) of the exact k largest-|flat| entries.
+
+    Deterministic under magnitude ties: the lowest flat indices win —
+    exactly ``lax.top_k``'s tie rule, so the selected SET is identical to
+    the sort-based selection it replaced."""
+    flat = flat.reshape(-1)
+    n = flat.shape[0]
+    k = int(k)
+    if k + _MARGIN >= n or n < _MIN_FAST_N or n % 32:
+        # small problems: the global sort is already cheap (and handles
+        # every edge case: k == n, unpadded lengths, ...).  f32 top_k, not
+        # bits: XLA CPU's integer top_k path is ~10x slower than float.
+        return jnp.sort(jax.lax.top_k(jnp.abs(flat), k)[1]).astype(jnp.int32)
+    bits = _magnitude_bits(flat)
+
+    nw = n // 32
+    cap = k + _MARGIN
+    pow2 = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+
+    # 1. sampled threshold bracket
+    stride = n // _SAMPLE
+    sample = jnp.sort(bits[::stride][:_SAMPLE])
+    frac = k / n
+    sigma = int((_SAMPLE * frac * (1.0 - frac)) ** 0.5) + 1
+    off = min(_SAMPLE - 1, (_SAMPLE * k) // n + 6 * sigma + 64)
+    lo = sample[_SAMPLE - 1 - off]
+    c_lo = jnp.sum((bits >= lo).astype(jnp.int32))
+    bracket_ok = (c_lo >= k) & (c_lo <= cap)
+
+    ranks = jnp.arange(1, cap + 1, dtype=jnp.int32)
+
+    def fast(_):
+        # 2. blocked stats pass: packed candidate mask + word counts
+        #    (jnp form of kernels/topk_mask.py::blocked_topk_stats)
+        words = jnp.sum(jnp.where((bits >= lo).reshape(nw, 32),
+                                  pow2[None, :], jnp.uint32(0)),
+                        axis=1, dtype=jnp.uint32)
+        cum = jnp.cumsum(jax.lax.population_count(words).astype(jnp.int32))
+        # 3. candidate extraction + exact tau from the candidate sort
+        ext = _rank_positions(words, cum, ranks)         # [cap] ascending
+        valid = ranks <= c_lo
+        xbits = jnp.where(valid, bits[ext], jnp.uint32(0xFFFFFFFF))
+        srt = jnp.sort(xbits)             # invalid tail sorts to the top
+        tau = srt[c_lo - k]               # exact k-th magnitude bits
+        c_le = jnp.searchsorted(srt, tau, side="right")
+        need = k - (c_lo - c_le)          # ties of tau that survive
+        # 4. exact-k keep mask over the candidates (lowest index wins)
+        gt = valid & (xbits > tau)
+        tie = valid & (xbits == tau)
+        tie_rank = jnp.cumsum(tie.astype(jnp.int32)) - tie
+        keep = gt | (tie & (tie_rank < need))
+        c2 = jnp.cumsum(keep.astype(jnp.int32))
+        at = jnp.searchsorted(c2, jnp.arange(1, k + 1, dtype=jnp.int32),
+                              side="left")
+        return ext[at].astype(jnp.int32)
+
+    def slow(_):
+        return jnp.sort(jax.lax.top_k(jnp.abs(flat), k)[1]).astype(jnp.int32)
+
+    return jax.lax.cond(bracket_ok, fast, slow, None)
+
+
 def topk_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Boolean mask of the k largest-|x| entries (flat)."""
-    flat = jnp.abs(x.reshape(-1))
-    thresh = jax.lax.top_k(flat, k)[0][-1]
-    return (jnp.abs(x) >= thresh)
+    """Boolean mask of the k largest-|x| entries — EXACTLY k set bits.
+
+    (The old ``|x| >= thresh`` form kept more than k entries on magnitude
+    ties, so sparse frame sizes wobbled with the data; ties now resolve
+    deterministically to the lowest flat indices, like ``lax.top_k``.)"""
+    idx = select_topk(x.reshape(-1), k)
+    return (jnp.zeros((x.size,), bool).at[idx].set(True)).reshape(x.shape)
 
 
 def quantize_int8(x: jnp.ndarray, block: int = 256
@@ -104,14 +235,16 @@ def compress_flat(delta_buf: jnp.ndarray, *, density: float = 0.05,
         flat = flat + residual.reshape(-1).astype(jnp.float32)
     n = int(logical_n) if logical_n is not None else flat.size
     k = max(1, min(n, int(n * density)))
-    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = select_topk(flat, k)          # exact top-k set, ascending indices
     sel = flat[idx]
     q, scales = quantize_int8(sel, block)
     deq = dequantize_int8(q, scales, k, block)
-    transmitted = jnp.zeros_like(flat).at[idx].set(deq)
-    new_residual = flat - transmitted
+    # error feedback: subtract what was transmitted, in place at the kept
+    # indices (bit-exact vs the dense ``flat - scatter(deq)`` form: the
+    # indices are unique, and IEEE a - b == a + (-b))
+    new_residual = flat.at[idx].add(-deq)
     payload = CompressedDelta(values=q, scales=scales,
-                              indices=idx.astype(jnp.int32),
+                              indices=idx,
                               shape=(flat.size,), density=density,
                               block=block)
     return payload, new_residual

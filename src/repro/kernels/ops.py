@@ -16,6 +16,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba_scan as _ms
 from repro.kernels import quantize as _qz
 from repro.kernels import rwkv6_scan as _rw
+from repro.kernels import sparse_pack as _sp
 from repro.kernels import topk_mask as _tm
 from repro.kernels import vc_asgd_update as _vc
 
@@ -93,3 +94,31 @@ def dequantize_int8(q, scales, n, out_dtype=jnp.float32):
 
 def threshold_sparsify(x, tau):
     return _tm.threshold_sparsify(x, tau, interpret=_interpret())
+
+
+def blocked_topk_stats(x, lo):
+    """ONE memory-bound pass: per-block packed candidate words + counts."""
+    return _tm.blocked_topk_stats(x, lo, interpret=_interpret())
+
+
+def threshold_sparsify_exact(x, tau, tie_start, tie_budget):
+    """Exact-k kept/residual emit (deterministic under ties at tau)."""
+    return _tm.threshold_sparsify_exact(x, tau, tie_start, tie_budget,
+                                        interpret=_interpret())
+
+
+def blocked_topk_sparsify(x, k):
+    """Exact global top-k (kept, residual): stats launch + tiny refinement
+    + exact-k emit launch; dense fallback when the bracket misses."""
+    return _tm.blocked_topk_sparsify(x, k, interpret=_interpret())
+
+
+def fused_quantize_pack(sel, idx, block=256):
+    """Quantize + pack the sparse wire-frame body in ONE launch."""
+    return _sp.quantize_pack(sel, idx, block=block, interpret=_interpret())
+
+
+def fused_pack_body(q, scales, idx):
+    """Pack an existing payload into the wire body — bitcast-only, so the
+    bytes equal the payload arrays' own bytes exactly."""
+    return _sp.pack_body(q, scales, idx, interpret=_interpret())

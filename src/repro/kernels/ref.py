@@ -124,3 +124,59 @@ def dequantize_int8(q, scales, n, block: int = 256):
 def threshold_sparsify(x, tau):
     keep = jnp.where(jnp.abs(x) >= tau, x, jnp.zeros_like(x))
     return keep, x - keep
+
+
+def blocked_topk_stats(x, lo, block: int = 8 * 1024):
+    """Per-block packed candidate words + counts (kernels/topk_mask.py).
+    lo is a uint32 magnitude-bits bracket, > 0."""
+    n = x.size
+    nb = -(-n // block)
+    xf = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, nb * block - n))
+    bits = jax.lax.bitcast_convert_type(jnp.abs(xf), jnp.uint32)
+    keep = (bits >= jnp.uint32(lo)).reshape(nb, block // 32, 32)
+    pow2 = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    words = jnp.sum(jnp.where(keep, pow2[None, None, :], jnp.uint32(0)),
+                    axis=2, dtype=jnp.uint32)
+    return words, keep.reshape(nb, -1).sum(axis=1).astype(jnp.int32)
+
+
+def threshold_sparsify_exact(x, tau, tie_start, tie_budget,
+                             block: int = 8 * 1024):
+    """Exact-k sparsify: |x| > tau always kept; |x| == tau kept while the
+    global tie rank (block prefix + within-block rank) < tie_budget."""
+    n = x.size
+    nb = -(-n // block)
+    xf = jnp.pad(x.reshape(-1).astype(jnp.float32),
+                 (0, nb * block - n)).reshape(nb, block)
+    mag = jnp.abs(xf)
+    tau = jnp.float32(tau)
+    gt = mag > tau
+    tie = mag == tau
+    tie_i = tie.astype(jnp.int32)
+    rank = (jnp.asarray(tie_start, jnp.int32)[:, None]
+            + jnp.cumsum(tie_i, axis=1) - tie_i)
+    keep_m = gt | (tie & (rank < jnp.int32(tie_budget)))
+    kept = jnp.where(keep_m, xf, 0.0)
+    unpad = lambda t: t.reshape(-1)[:n].reshape(x.shape)
+    return unpad(kept), unpad(xf - kept)
+
+
+def pack_body(q, scales, idx):
+    """Sparse wire-frame body bytes: values(int8) || scales(f32) ||
+    indices(int32), the layout transfer/wire.py pins (little-endian)."""
+    qb = jax.lax.bitcast_convert_type(q.astype(jnp.int8), jnp.uint8)
+    sb = jax.lax.bitcast_convert_type(scales.astype(jnp.float32),
+                                      jnp.uint8).reshape(-1)
+    ib = jax.lax.bitcast_convert_type(idx.astype(jnp.int32),
+                                      jnp.uint8).reshape(-1)
+    return jnp.concatenate([qb, sb, ib])
+
+
+def quantize_pack(sel, idx, block: int = 256):
+    """Fused quantize+pack oracle (kernels/sparse_pack.py): returns
+    (body uint8, q int8 padded to ng*block, scales f32 [ng])."""
+    k = sel.size
+    ng = -(-k // block)
+    q, scales = quantize_int8(sel, block)
+    qpad = jnp.pad(q, (0, ng * block - k))
+    return pack_body(q, scales, idx), qpad, scales

@@ -1,0 +1,111 @@
+"""Fused quantize+pack: sparse wire-frame body in ONE launch.
+
+The encode leg of the compressed upload path used to materialize three
+intermediate host arrays (int8 values, f32 scales, int32 indices) and
+concatenate their bytes in Python.  This kernel writes the wire-frame
+body layout directly:
+
+    values(int8)[k] || scales(f32)[ceil(k/block)] || indices(int32)[k]
+
+as ONE uint8 buffer, quantizing on the way (per-block symmetric int8, the
+same math as kernels/quantize.py), so transfer/wire.py::encode_sparse
+does a single device->host transfer and computes crc32 over the packed
+buffer.  The int8 q and f32 scales also come back as device arrays — the
+compress path needs them for the error-feedback dequantize, so one launch
+serves both legs.
+
+Byte layout relies on bitcast_convert_type's trailing-byte-dim semantics,
+which is the host's endianness (little-endian everywhere we run) — the
+same bytes numpy ``.tobytes()`` produces, which is what the frame format
+pins (transfer/wire.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.vc_asgd_update import _note_launch
+
+QBLOCK = 256
+
+
+def _pack_kernel(sel_ref, idx_ref, body_ref, q_ref, s_ref, *, k, block):
+    ng = sel_ref.shape[0]
+    sel = sel_ref[...].astype(jnp.float32)                 # [ng, block]
+    scale = jnp.maximum(jnp.max(jnp.abs(sel), axis=1, keepdims=True) / 127.0,
+                        1e-12)
+    q = jnp.clip(jnp.round(sel / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q
+    s_ref[...] = scale[:, 0]
+    qb = jax.lax.bitcast_convert_type(q.reshape(-1)[:k], jnp.uint8)
+    sb = jax.lax.bitcast_convert_type(scale[:, 0], jnp.uint8).reshape(-1)
+    ib = jax.lax.bitcast_convert_type(idx_ref[...], jnp.uint8).reshape(-1)
+    body_ref[0:k] = qb
+    body_ref[k:k + 4 * ng] = sb
+    body_ref[k + 4 * ng:k + 4 * ng + 4 * k] = ib
+
+
+def _pack_only_kernel(q_ref, s_ref, idx_ref, body_ref, *, k, ng):
+    qb = jax.lax.bitcast_convert_type(q_ref[...], jnp.uint8)
+    sb = jax.lax.bitcast_convert_type(s_ref[...], jnp.uint8).reshape(-1)
+    ib = jax.lax.bitcast_convert_type(idx_ref[...], jnp.uint8).reshape(-1)
+    body_ref[0:k] = qb
+    body_ref[k:k + 4 * ng] = sb
+    body_ref[k + 4 * ng:k + 4 * ng + 4 * k] = ib
+
+
+def pack_body(q: jnp.ndarray, scales: jnp.ndarray, idx: jnp.ndarray, *,
+              interpret: bool = True):
+    """Pack an EXISTING payload (q int8 [k], scales f32 [ng], idx int32
+    [k]) into the wire body in one launch.  Pure bitcast+copy — zero
+    arithmetic, so the bytes are exactly the payload arrays' bytes (the
+    encode leg must ship compress_flat's own scales bit-for-bit; any
+    re-quantize can drift a ULP across compilation contexts)."""
+    k = int(q.size)
+    ng = int(scales.size)
+    nbytes = k + 4 * ng + 4 * k
+    _note_launch()
+    (body,) = pl.pallas_call(
+        functools.partial(_pack_only_kernel, k=k, ng=ng),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_shape=[jax.ShapeDtypeStruct((nbytes,), jnp.uint8)],
+        interpret=interpret,
+    )(q.astype(jnp.int8), scales.astype(jnp.float32), idx.astype(jnp.int32))
+    return body
+
+
+def quantize_pack(sel: jnp.ndarray, idx: jnp.ndarray, *, block: int = QBLOCK,
+                  interpret: bool = True):
+    """Quantize the selected values and pack the full sparse frame body in
+    one launch.  Returns (body uint8 [k + 4*ng + 4*k], q int8 [ng*block]
+    padded, scales f32 [ng]) — slice q to [:k] for payload use."""
+    k = int(sel.size)
+    ng = -(-k // block)
+    pad = ng * block - k
+    sf = sel.reshape(-1).astype(jnp.float32)
+    if pad:
+        sf = jnp.pad(sf, (0, pad))
+    sf = sf.reshape(ng, block)
+    nbytes = k + 4 * ng + 4 * k
+    _note_launch()
+    body, q, scales = pl.pallas_call(
+        functools.partial(_pack_kernel, k=k, block=block),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                   pl.BlockSpec(memory_space=pl.ANY),
+                   pl.BlockSpec(memory_space=pl.ANY)],
+        out_shape=[jax.ShapeDtypeStruct((nbytes,), jnp.uint8),
+                   jax.ShapeDtypeStruct((ng, block), jnp.int8),
+                   jax.ShapeDtypeStruct((ng,), jnp.float32)],
+        interpret=interpret,
+    )(sf, idx.astype(jnp.int32))
+    return body, q.reshape(-1), scales

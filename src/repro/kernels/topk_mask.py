@@ -1,17 +1,42 @@
-"""Fused threshold-sparsify + error-feedback kernel.
+"""Blocked top-k: magnitude statistics + threshold-sparsify kernels.
 
-Top-k selection itself is a global op (jnp.lax.top_k over the flat delta);
-given the resulting magnitude threshold tau this kernel does the two
-memory-bound passes in one: the transmitted (masked) values and the
-error-feedback residual (what stays behind for the next round).
+The blocked top-k pipeline (core/compression.py::select_topk documents the
+algorithm) splits global magnitude top-k into three stages:
+
+  1. ``blocked_topk_stats`` — ONE memory-bound pass over the flat delta:
+     each grid block packs its ``|x| >= lo`` candidate mask into uint32
+     words (bit i of word w == element w*32+i survives the bracket) and
+     emits its candidate count.  The packed words are the per-block
+     magnitude statistics everything downstream runs on — N/32 words
+     instead of N floats.
+  2. a tiny host-side refinement (jnp over <= k + margin candidates) that
+     extracts candidate positions from the packed words and picks the
+     EXACT global threshold tau plus the tie budget,
+  3. ``threshold_sparsify_exact`` — the kept/residual emit pass, exact-k
+     under ties: a block keeps ``|x| > tau`` always and ``|x| == tau``
+     only while the global tie rank (per-block tie prefix ``tie_start``
+     plus the within-block rank) stays below ``tie_budget``.
+
+``threshold_sparsify`` (the original ``|x| >= tau`` form) stays as the
+thresh-only pass; it keeps MORE than k entries when magnitudes tie at tau,
+which is why the exact-k variant exists.
+
+``blocked_topk_sparsify`` chains the three stages end to end (two kernel
+launches + the tiny refinement) and falls back to a dense ``lax.top_k``
+mask when the sampled bracket misses — exact either way.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.vc_asgd_update import _note_launch
+
 BLOCK = 8 * 1024
+WORDS = BLOCK // 32        # packed uint32 candidate words per block
 
 
 def _mask_kernel(scal_ref, x_ref, keep_ref, res_ref):
@@ -24,7 +49,8 @@ def _mask_kernel(scal_ref, x_ref, keep_ref, res_ref):
 
 def threshold_sparsify(x: jnp.ndarray, tau, *, interpret: bool = True):
     """Returns (kept, residual): kept has |x| >= tau entries, residual the
-    rest; kept + residual == x exactly."""
+    rest; kept + residual == x exactly.  NOT exact-k under ties at tau —
+    use threshold_sparsify_exact for deterministic-k."""
     n = x.size
     nb = -(-n // BLOCK)
     pad = nb * BLOCK - n
@@ -33,6 +59,7 @@ def threshold_sparsify(x: jnp.ndarray, tau, *, interpret: bool = True):
         xf = jnp.pad(xf, (0, pad))
     xf = xf.reshape(nb, BLOCK)
     scal = jnp.asarray([tau], jnp.float32)
+    _note_launch()
     kept, res = pl.pallas_call(
         _mask_kernel,
         grid=(nb,),
@@ -46,3 +73,170 @@ def threshold_sparsify(x: jnp.ndarray, tau, *, interpret: bool = True):
     )(scal, xf)
     unpad = lambda t: t.reshape(-1)[:n].reshape(x.shape)
     return unpad(kept), unpad(res)
+
+
+def _stats_kernel(scal_ref, x_ref, words_ref, cnt_ref):
+    lo = scal_ref[0]
+    x = x_ref[...].astype(jnp.float32)                       # [1, BLOCK]
+    bits = jax.lax.bitcast_convert_type(jnp.abs(x), jnp.uint32)
+    keep = bits >= lo
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (1, WORDS, 32), 2)
+    packed = jnp.sum(jnp.where(keep.reshape(1, WORDS, 32),
+                               jnp.uint32(1) << lane, jnp.uint32(0)),
+                     axis=2, dtype=jnp.uint32)
+    words_ref[...] = packed
+    cnt_ref[...] = jnp.sum(keep.astype(jnp.int32), axis=1)
+
+
+def blocked_topk_stats(x: jnp.ndarray, lo, *, interpret: bool = True):
+    """ONE pass of per-block magnitude statistics for blocked top-k.
+
+    ``lo`` is a uint32 magnitude-bits bracket (bitcast of a non-negative
+    f32 — monotone, so bit compares == magnitude compares); it must be
+    > 0 so zero tail padding never counts as a candidate.  Returns
+    (words [nb, BLOCK//32] uint32 packed candidate masks,
+     counts [nb] int32 per-block candidate counts)."""
+    n = x.size
+    nb = -(-n // BLOCK)
+    pad = nb * BLOCK - n
+    xf = x.reshape(-1)
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    xf = xf.reshape(nb, BLOCK)
+    scal = jnp.asarray([lo], jnp.uint32)
+    _note_launch()
+    words, counts = pl.pallas_call(
+        _stats_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec((1, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, WORDS), lambda i: (i, 0)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nb, WORDS), jnp.uint32),
+                   jax.ShapeDtypeStruct((nb,), jnp.int32)],
+        interpret=interpret,
+    )(scal, xf)
+    return words, counts
+
+
+def _exact_kernel(tau_ref, bud_ref, ts_ref, x_ref, keep_ref, res_ref):
+    tau = tau_ref[0]
+    budget = bud_ref[0]
+    start = ts_ref[0]
+    x = x_ref[...].astype(jnp.float32)
+    mag = jnp.abs(x)
+    gt = mag > tau
+    tie = mag == tau
+    tie_i = tie.astype(jnp.int32)
+    rank = start + jnp.cumsum(tie_i, axis=1) - tie_i   # global tie rank
+    keep_m = gt | (tie & (rank < budget))
+    kept = jnp.where(keep_m, x, 0.0)
+    keep_ref[...] = kept.astype(keep_ref.dtype)
+    res_ref[...] = (x - kept).astype(res_ref.dtype)
+
+
+def threshold_sparsify_exact(x: jnp.ndarray, tau, tie_start, tie_budget, *,
+                             interpret: bool = True):
+    """Exact-k kept/residual emit: keeps |x| > tau unconditionally and
+    |x| == tau only while the global tie rank stays below ``tie_budget``
+    (``tie_start[b]`` = ties in blocks before b; lowest flat index wins,
+    lax.top_k's tie rule).  kept + residual == x exactly."""
+    n = x.size
+    nb = -(-n // BLOCK)
+    pad = nb * BLOCK - n
+    xf = x.reshape(-1)
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    xf = xf.reshape(nb, BLOCK)
+    tau_s = jnp.asarray([tau], jnp.float32)
+    bud_s = jnp.asarray([tie_budget], jnp.int32)
+    ts = jnp.asarray(tie_start, jnp.int32).reshape(nb)
+    _note_launch()
+    kept, res = pl.pallas_call(
+        _exact_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec((1,), lambda i: (i,)),
+                  pl.BlockSpec((1, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((1, BLOCK), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, BLOCK), x.dtype),
+                   jax.ShapeDtypeStruct((nb, BLOCK), x.dtype)],
+        interpret=interpret,
+    )(tau_s, bud_s, ts, xf)
+    unpad = lambda t: t.reshape(-1)[:n].reshape(x.shape)
+    return unpad(kept), unpad(res)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cap", "nb"))
+def _refine(x, words, counts, k: int, cap: int, nb: int):
+    """Tiny refinement: candidate positions from the packed words, exact
+    tau + tie budget + per-block tie prefix, then the exact emit pass.
+    All O(cap) work besides the emit launch."""
+    bits = jax.lax.bitcast_convert_type(jnp.abs(x.reshape(-1)), jnp.uint32)
+    flat_words = words.reshape(-1)
+    nw = flat_words.shape[0]
+    cum = jnp.cumsum(jax.lax.population_count(flat_words).astype(jnp.int32))
+    c_lo = cum[-1]
+    ranks = jnp.arange(1, cap + 1, dtype=jnp.int32)
+    widx = jnp.minimum(jnp.searchsorted(cum, ranks, side="left"), nw - 1)
+    base = jnp.where(widx > 0, cum[jnp.maximum(widx - 1, 0)], 0)
+    r_in = ranks - base
+    word = flat_words[widx]
+    pos = jnp.zeros_like(r_in)
+    for shift in (16, 8, 4, 2, 1):
+        trial = pos + shift
+        below = jax.lax.population_count(
+            word & ((jnp.uint32(1) << trial.astype(jnp.uint32))
+                    - jnp.uint32(1))).astype(jnp.int32)
+        pos = jnp.where(below < r_in, trial, pos)
+    ext = widx * 32 + pos                                 # [cap] ascending
+    valid = ranks <= c_lo
+    xbits = jnp.where(valid, bits[ext], jnp.uint32(0xFFFFFFFF))
+    srt = jnp.sort(xbits)
+    tau_bits = srt[c_lo - k]
+    c_le = jnp.searchsorted(srt, tau_bits, side="right")
+    budget = k - (c_lo - c_le)
+    tau = jax.lax.bitcast_convert_type(tau_bits, jnp.float32)
+    # per-block tie prefix from the candidate set (ties of tau are always
+    # candidates: tau >= lo)
+    tie = valid & (xbits == tau_bits)
+    blk = ext // BLOCK
+    per_blk = jnp.zeros((nb,), jnp.int32).at[blk].add(tie.astype(jnp.int32),
+                                                      mode="drop")
+    tie_start = jnp.cumsum(per_blk) - per_blk
+    return tau, budget, tie_start
+
+
+def blocked_topk_sparsify(x: jnp.ndarray, k: int, *, interpret: bool = True):
+    """Exact global top-k (kept, residual) via the blocked pipeline:
+    stats launch -> tiny refinement -> exact-k emit launch.  Falls back
+    to a dense lax.top_k mask when the sampled bracket misses."""
+    from repro.core import compression as C
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    k = int(k)
+    if k + C._MARGIN >= n or n < C._MIN_FAST_N:
+        idx = C.select_topk(flat, k)
+        kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        return (kept.reshape(x.shape), (flat - kept).reshape(x.shape))
+    bits = jax.lax.bitcast_convert_type(jnp.abs(flat), jnp.uint32)
+    stride = n // C._SAMPLE
+    sample = jnp.sort(bits[::stride][:C._SAMPLE])
+    frac = k / n
+    sigma = int((C._SAMPLE * frac * (1.0 - frac)) ** 0.5) + 1
+    off = min(C._SAMPLE - 1, (C._SAMPLE * k) // n + 6 * sigma + 64)
+    lo = sample[C._SAMPLE - 1 - off]
+    words, counts = blocked_topk_stats(flat, lo, interpret=interpret)
+    c_lo = int(jnp.sum(counts))
+    cap = k + C._MARGIN
+    if not (k <= c_lo <= cap and int(lo) > 0):
+        idx = C.select_topk(flat, k)                      # exact fallback
+        kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        return (kept.reshape(x.shape), (flat - kept).reshape(x.shape))
+    nb = words.shape[0]
+    tau, budget, tie_start = _refine(flat, words, counts, k, cap, nb)
+    kept, res = threshold_sparsify_exact(flat, tau, tie_start, budget,
+                                         interpret=interpret)
+    return kept.reshape(x.shape), res.reshape(x.shape)

@@ -32,6 +32,7 @@ import argparse
 import contextlib
 import tempfile
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 
@@ -120,28 +121,48 @@ def main(argv=None):
               + (f" tier={len(aggs)} aggregators, broker pids "
                  f"{[a.transport.broker_pid for a in aggs]}" if aggs
                  else ""))
+        # handout-encode prefetch: one worker thread pipelines the NEXT
+        # lease's issue (handout encode + broker round-trip) under the
+        # CURRENT client's training compute.  Safe because every handout
+        # in a round snapshots the same server state (the fold happens
+        # only at end-of-round assimilation) and issue(cid+1) touches no
+        # state that submit(cid) reads — uid sequence, seeds, frames and
+        # bytes are identical to the serial order, so the kill-and-resume
+        # gate sees the same rounds.  The pipeline deliberately STOPS at
+        # the round boundary: round R+1's first handout depends on round
+        # R's assimilated params and cannot be encoded speculatively.
+        pool = stack.enter_context(ThreadPoolExecutor(max_workers=1))
         for rnd in range(start, start + args.rounds):
             t0 = time.monotonic()
             for agg in aggs:
                 agg.open_window(round=rnd, now=time.monotonic())
-            leases = []
-            for cid in range(args.clients):
+
+            def _issue(cid: int, u: int):
                 # issue: the runtime's "store head" is the live state;
                 # the handout crosses the broker as per-shard frames.
                 # In tier mode the client leases from ITS aggregator,
                 # whose window state is the decoded hub handout.
                 srv = aggs[cid % len(aggs)] if aggs else coord
-                lease = srv.issue(cid=cid, uid=uid, round=rnd, shard=cid,
+                lease = srv.issue(cid=cid, uid=u, round=rnd, shard=cid,
                                   read_version=srv.state.version,
                                   base=srv.state.params,
                                   now=time.monotonic())
-                uid += 1
+                return srv, lease
+
+            leases = []
+            nxt = pool.submit(_issue, 0, uid)
+            for cid in range(args.clients):
+                srv, lease = nxt.result()
+                if cid + 1 < args.clients:
+                    # encode the next handout while THIS client trains
+                    nxt = pool.submit(_issue, cid + 1, uid + cid + 1)
                 # client-side REAL training from the DECODED handout
                 trained = task.client_train(
                     as_tree(lease.base), data.x_train, data.y_train,
                     steps=4, seed=args.seed * 1000003 + lease.uid)
                 srv.submit(lease, F.flatten_like(trained, lease.base.spec))
                 leases.append((srv, lease))
+            uid += args.clients
             # one straggler per round is "preempted" mid-upload: its lease
             # is dropped, its bytes wasted — assimilation shrugs it off
             if args.clients > 1 and rnd % 2 == 1:

@@ -304,6 +304,17 @@ def analyze_hlo_text(txt: str) -> HLOCost:
                 for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)",
                                      op.rest):
                     stack.append((m.group(1), m0))
+                # conditionals (lax.cond): every branch is charged at the
+                # caller's multiplier — only one runs, so this is a
+                # conservative upper bound on bytes/FLOPs, which is the
+                # right direction for a perf-regression gate denominator
+                mb = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+                if mb:
+                    for b in mb.group(1).split(","):
+                        stack.append((b.strip().lstrip("%"), m0))
+                for m in re.finditer(
+                        r"(?:true|false)_computation=%?([\w\.\-]+)", op.rest):
+                    stack.append((m.group(1), m0))
 
     # ---- accumulate ----------------------------------------------------
     for name, comp in comps.items():
@@ -440,3 +451,78 @@ def roofline_terms(per_device_flops: float, per_device_hbm: float,
         collective_s=per_device_coll / ICI_BW,
         flops=per_device_flops, hbm_bytes=per_device_hbm,
         coll_bytes=per_device_coll)
+
+
+# ---------------------------------------------------------------------------
+# per-kernel roofline profiles (the compression hot-path CI gate)
+#
+# For one jittable kernel entry point: compile, parse the optimized HLO for
+# essential bytes/FLOPs, time it, and relate the HLO traffic to a
+# hand-derived ANALYTIC minimum (the bytes the algorithm must move: e.g. one
+# streaming read of the input for a selection pass).  Two derived numbers
+# feed the gate (benchmarks/roofline_report.py):
+#
+#   traffic_fraction = analytic_bytes / hlo_bytes — deterministic on a
+#     pinned jaxlib: a kernel change that moves extra bytes (a fused pass
+#     breaking apart, a duplicated buffer) lowers the fraction and trips
+#     the ratchet regardless of machine noise,
+#   achieved_bw      = hlo_bytes / measured_s — the measured leg; gated
+#     only by a loose floor so wall-clock noise cannot flake CI, but an
+#     order-of-magnitude slowdown still fails.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class KernelProfile:
+    name: str
+    analytic_bytes: float        # hand-derived minimum traffic (bytes)
+    hlo_bytes: float             # essential HBM bytes from the compiled HLO
+    hlo_flops: float             # dot FLOPs from the compiled HLO
+    measured_s: float            # wall-clock per call (median of iters)
+    @property
+    def traffic_fraction(self) -> float:
+        return self.analytic_bytes / max(self.hlo_bytes, 1.0)
+
+    @property
+    def achieved_bw(self) -> float:
+        return self.hlo_bytes / max(self.measured_s, 1e-12)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"analytic_bytes": self.analytic_bytes,
+                "hlo_bytes": self.hlo_bytes,
+                "hlo_flops": self.hlo_flops,
+                "measured_s": self.measured_s,
+                "traffic_fraction": self.traffic_fraction,
+                "achieved_gbps": self.achieved_bw / 1e9}
+
+
+def kernel_hlo_cost(fn, *args) -> HLOCost:
+    """Essential-traffic analysis of one jitted kernel's optimized HLO."""
+    import jax
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze_hlo_text(txt)
+
+
+def profile_kernel(name: str, fn, args, analytic_bytes: float,
+                   iters: int = 5) -> KernelProfile:
+    """Compile + analyze + time one kernel entry point."""
+    import time
+
+    import jax
+    jf = jax.jit(fn)
+    cost = analyze_hlo_text(jf.lower(*args).compile().as_text())
+    # strict bytes (fusion operand/result IO included): for a single kernel
+    # every fusion boundary IS a memory round-trip, which is exactly what
+    # the traffic gate must see — the `essential` filter is for whole-model
+    # projections where elementwise chains fold into neighbouring matmuls.
+    hlo_bytes = cost.hbm_strict
+    jax.block_until_ready(jf(*args))          # warmup (compile + first run)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jf(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return KernelProfile(name=name, analytic_bytes=float(analytic_bytes),
+                         hlo_bytes=hlo_bytes, hlo_flops=cost.dot_flops,
+                         measured_s=times[len(times) // 2])

@@ -207,21 +207,39 @@ def encode_shard(seg, *, shard: int, n_shards: int, round: int = 0) -> bytes:
     return _frame(header, raw)
 
 
+# fused encode leg: the body (values || scales || indices bytes) is packed
+# into ONE device buffer (kernels/ref.py::pack_body — bitcast+concat, zero
+# arithmetic, so the bytes are exactly the payload arrays' bytes; the
+# Pallas single-launch form is kernels/sparse_pack.py) and crosses the
+# device->host boundary in ONE transfer, vs the three array transfers +
+# Python concat the old encoder paid per frame.  jit caches by (k, ng)
+# shape, so steady-state rounds reuse the compiled pack.
+_pack_body_dev = None
+
+
+def _packed_sparse_body(p: CompressedDelta) -> bytes:
+    global _pack_body_dev
+    if _pack_body_dev is None:
+        from repro.kernels import ref as _kref
+        _pack_body_dev = jax.jit(_kref.pack_body)
+    return _host(_pack_body_dev(p.values, p.scales, p.indices)).tobytes()
+
+
 def encode_sparse(p: CompressedDelta, *, round: int = 0,
                   residual_norm: float = 0.0) -> bytes:
-    """Encode a compress_flat payload (global top-k + int8)."""
-    vals = _host(p.values).astype(np.int8)
-    scls = _host(p.scales).astype(np.float32)
-    idxs = _host(p.indices).astype(np.int32)
+    """Encode a compress_flat payload (global top-k + int8).  The body is
+    device-packed and crosses to the host as one buffer; frame bytes are
+    identical to the three-section ``tobytes`` concat they replace."""
+    k = int(p.values.size)
+    ng = int(p.scales.size)
     n = 1
     for s in p.shape:
         n *= int(s)
-    v_raw, s_raw, i_raw = vals.tobytes(), scls.tobytes(), idxs.tobytes()
-    body = v_raw + s_raw + i_raw
+    body = _packed_sparse_body(p)
     header = _HDR.pack(MAGIC, _EMIT_VERSION, KIND_SPARSE, 0,
-                       n, vals.size, int(p.block), float(p.density),
+                       n, k, int(p.block), float(p.density),
                        int(round), float(residual_norm),
-                       len(v_raw), len(s_raw), len(i_raw))
+                       k, 4 * ng, 4 * k)
     return _frame(header, body)
 
 

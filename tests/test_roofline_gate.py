@@ -1,0 +1,195 @@
+"""HLO roofline parser + per-kernel gate unit tests.
+
+Parser tests run over PINNED HLO text snippets (no compiler in the
+loop), covering the call-graph multiplier pass: while-loop trip counts,
+fusion IO, and lax.cond conditionals (every branch charged at the
+caller's multiplier — a conservative upper bound).  Gate tests drive
+``check_kernel_rooflines`` against synthetic profiles: the shipped
+profile passes its own baseline, an injected doubled-bytes regression
+fails, and so do a missing kernel and an order-of-magnitude slowdown.
+"""
+import json
+
+import pytest
+
+from repro.runtime.hlo_analysis import (KernelProfile, analyze_hlo_text,
+                                        profile_kernel)
+
+# ---------------------------------------------------------------------------
+# pinned HLO snippets
+# ---------------------------------------------------------------------------
+
+_WHILE_HLO = """\
+ENTRY %main.1 (p0: f32[256]) -> f32[256] {
+  %p0 = f32[256] parameter(0)
+  ROOT %while.1 = f32[256] while(%p0), condition=%cond_c, body=%body_c, backend_config={"known_trip_count":{"n":"5"}}
+}
+
+%body_c (p: f32[256]) -> f32[256] {
+  %p = f32[256] parameter(0)
+  ROOT %sort.2 = f32[256] sort(%p), dimensions={0}
+}
+
+%cond_c (p: f32[256]) -> pred[] {
+  %p = f32[256] parameter(0)
+  %c9 = s32[] constant(9)
+  ROOT %lt.1 = pred[] compare(%c9, %c9), direction=LT
+}
+"""
+
+_COND_HLO = """\
+ENTRY %main.2 (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  %b0 = s32[] parameter(1)
+  ROOT %conditional.3 = f32[1024] conditional(%b0, %p0, %p0), branch_computations={%branch_a, %branch_b}
+}
+
+%branch_a (pa: f32[1024]) -> f32[1024] {
+  %pa = f32[1024] parameter(0)
+  ROOT %sort.4 = f32[1024] sort(%pa), dimensions={0}
+}
+
+%branch_b (pb: f32[1024]) -> f32[1024] {
+  %pb = f32[1024] parameter(0)
+  ROOT %sort.5 = f32[1024] sort(%pb), dimensions={0}
+}
+"""
+
+_TF_COND_HLO = """\
+ENTRY %main.3 (p0: f32[512]) -> f32[512] {
+  %p0 = f32[512] parameter(0)
+  %pr = pred[] parameter(1)
+  ROOT %conditional.6 = f32[512] conditional(%pr, %p0, %p0), true_computation=%tbr, false_computation=%fbr
+}
+
+%tbr (pt: f32[512]) -> f32[512] {
+  %pt = f32[512] parameter(0)
+  ROOT %sort.7 = f32[512] sort(%pt), dimensions={0}
+}
+
+%fbr (pf: f32[512]) -> f32[512] {
+  %pf = f32[512] parameter(0)
+  ROOT %sort.8 = f32[512] sort(%pf), dimensions={0}
+}
+"""
+
+
+def test_while_trip_count_multiplies_body_bytes():
+    cost = analyze_hlo_text(_WHILE_HLO)
+    assert cost.while_trips == {"body_c": 5}
+    # one sort per trip: (result 1024B + operand 1024B) x 5
+    assert cost.hbm_strict == 5 * 2048
+    assert cost.hbm_bytes == 5 * 2048
+
+
+def test_while_trip_from_condition_constant():
+    # strip the known_trip_count annotation: the parser falls back to the
+    # largest integer constant in the condition computation (9)
+    txt = _WHILE_HLO.replace(
+        ', backend_config={"known_trip_count":{"n":"5"}}', "")
+    cost = analyze_hlo_text(txt)
+    assert cost.while_trips == {"body_c": 9}
+    assert cost.hbm_strict == 9 * 2048
+
+
+def test_conditional_charges_every_branch():
+    cost = analyze_hlo_text(_COND_HLO)
+    # both 4096B sorts counted at the caller's x1 multiplier — only one
+    # branch ever runs, so the denominator is a conservative upper bound
+    assert cost.hbm_strict == 2 * (4096 + 4096)
+
+
+def test_true_false_conditional_charges_both_sides():
+    cost = analyze_hlo_text(_TF_COND_HLO)
+    assert cost.hbm_strict == 2 * (2048 + 2048)
+
+
+def test_profile_kernel_measures_real_traffic():
+    import jax.numpy as jnp
+    x = jnp.arange(8192, dtype=jnp.float32)
+    prof = profile_kernel("inc", lambda v: v + 1.0, (x,),
+                          analytic_bytes=2 * 4 * 8192, iters=2)
+    assert prof.hlo_bytes > 0
+    assert prof.measured_s > 0
+    assert 0 < prof.traffic_fraction <= 4.0
+
+
+# ---------------------------------------------------------------------------
+# the gate itself
+# ---------------------------------------------------------------------------
+
+
+def _profiles():
+    return {
+        "a": KernelProfile("a", analytic_bytes=1e6, hlo_bytes=4e6,
+                           hlo_flops=0.0, measured_s=1e-3),
+        "b": KernelProfile("b", analytic_bytes=2e6, hlo_bytes=2e6,
+                           hlo_flops=0.0, measured_s=2e-3),
+    }
+
+
+def _baseline(tmp_path, profiles):
+    p = tmp_path / "BASELINE_roofline.json"
+    p.write_text(json.dumps({n: pr.as_dict()
+                             for n, pr in profiles.items()}))
+    return p
+
+
+def test_gate_passes_on_identical_profiles(tmp_path):
+    from benchmarks.roofline_report import check_kernel_rooflines
+    base = _baseline(tmp_path, _profiles())
+    assert check_kernel_rooflines(_profiles(), baseline_path=base) == 0
+
+
+def test_gate_fails_on_injected_doubled_bytes(tmp_path):
+    from benchmarks.roofline_report import check_kernel_rooflines
+    base = _baseline(tmp_path, _profiles())
+    worse = _profiles()
+    worse["a"] = KernelProfile("a", analytic_bytes=1e6, hlo_bytes=8e6,
+                               hlo_flops=0.0, measured_s=1e-3)
+    assert check_kernel_rooflines(worse, baseline_path=base) == 1
+
+
+def test_gate_fails_on_missing_kernel(tmp_path):
+    from benchmarks.roofline_report import check_kernel_rooflines
+    base = _baseline(tmp_path, _profiles())
+    only_a = {"a": _profiles()["a"]}
+    assert check_kernel_rooflines(only_a, baseline_path=base) == 1
+
+
+def test_gate_fails_on_order_of_magnitude_slowdown(tmp_path):
+    from benchmarks.roofline_report import check_kernel_rooflines
+    base = _baseline(tmp_path, _profiles())
+    slow = _profiles()
+    slow["b"] = KernelProfile("b", analytic_bytes=2e6, hlo_bytes=2e6,
+                              hlo_flops=0.0, measured_s=2e-2)
+    assert check_kernel_rooflines(slow, baseline_path=base) == 1
+
+
+def test_gate_tolerates_fraction_jitter(tmp_path):
+    from benchmarks.roofline_report import check_kernel_rooflines
+    base = _baseline(tmp_path, _profiles())
+    jitter = _profiles()
+    # 10% more HLO bytes: inside the 25% relative ratchet slack
+    jitter["a"] = KernelProfile("a", analytic_bytes=1e6, hlo_bytes=4.4e6,
+                                hlo_flops=0.0, measured_s=1e-3)
+    assert check_kernel_rooflines(jitter, baseline_path=base) == 0
+
+
+def test_gate_reports_missing_baseline(tmp_path):
+    from benchmarks.roofline_report import check_kernel_rooflines
+    assert check_kernel_rooflines(
+        _profiles(), baseline_path=tmp_path / "nope.json") == 2
+
+
+def test_shipped_baseline_has_every_registered_kernel():
+    """The committed baseline and the registry must stay in sync — a
+    kernel added without re-pinning (or pinned without a builder) would
+    make --check fail in CI."""
+    from benchmarks.roofline_report import (KERNEL_ROOFLINES,
+                                            ROOFLINE_BASELINE)
+    pinned = json.loads(ROOFLINE_BASELINE.read_text())
+    assert set(pinned) == set(KERNEL_ROOFLINES)
+    for name, pin in pinned.items():
+        assert pin["traffic_fraction"] > 0
+        assert pin["achieved_gbps"] > 0

@@ -11,8 +11,11 @@
 # A vc_serve kill-and-resume pass then proves the resume path stays
 # monotone (rounds/uids continue from the checkpoint, never rewind), and
 # `python -m benchmarks.run --check` fails if any suite's fused pallas
-# launch counts regress versus results/BASELINE_launches.json (ratchet
-# intentionally with --update-baseline).
+# launch counts regress versus results/BASELINE_launches.json, if the
+# fleet events/sec floor is missed, or if any compression kernel trips
+# the per-kernel roofline ratchet versus results/BASELINE_roofline.json
+# (HLO traffic fraction + measured-bandwidth floor; docs/ROOFLINE.md).
+# Ratchet intentionally with --update-baseline.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
