@@ -85,6 +85,23 @@ def check_launches(benches) -> int:
         else:
             print(f"check fleet.smoke_events_per_sec: {eps:.0f} >= "
                   f"{floor:.0f} OK")
+    # handout dedup floor (content-addressed cache must keep serving
+    # many more bytes than it encodes on the smoke subscriber scenario)
+    from benchmarks.handout_bench import (DEDUP_FLOOR_FRACTION,
+                                          smoke_unique_to_served)
+    base_dedup = baseline.get("handout", {}).get("smoke_unique_to_served")
+    if base_dedup is None:
+        failures.append("handout.smoke_unique_to_served: no baseline entry")
+    else:
+        dedup = smoke_unique_to_served()
+        floor = base_dedup * DEDUP_FLOOR_FRACTION
+        if dedup < floor:
+            failures.append(f"handout.smoke_unique_to_served: {dedup:.1f}x "
+                            f"< floor {floor:.1f}x (baseline "
+                            f"{base_dedup:.1f}x)")
+        else:
+            print(f"check handout.smoke_unique_to_served: {dedup:.1f}x >= "
+                  f"{floor:.1f}x OK")
     # per-kernel roofline gate (results/BASELINE_roofline.json)
     from benchmarks.roofline_report import check_kernel_rooflines
     rc = check_kernel_rooflines()
@@ -100,6 +117,7 @@ def check_launches(benches) -> int:
 
 def update_baseline(benches) -> None:
     from benchmarks.fleet_bench import smoke_events_per_sec
+    from benchmarks.handout_bench import smoke_unique_to_served
     from benchmarks.roofline_report import (ROOFLINE_BASELINE,
                                             write_roofline_baseline)
     out = {}
@@ -108,6 +126,8 @@ def update_baseline(benches) -> None:
         _out_path(name).write_text(json.dumps(res, indent=1, default=str))
         out[name] = res.get("_launches", {})
     out["fleet"] = {"smoke_events_per_sec": round(smoke_events_per_sec(), 1)}
+    out["handout"] = {
+        "smoke_unique_to_served": round(smoke_unique_to_served(), 1)}
     BASELINE.write_text(json.dumps(out, indent=1))
     print(f"wrote {BASELINE}: {json.dumps(out)}")
     write_roofline_baseline()
@@ -121,7 +141,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: fig2,fig3,fig4,fig6,consistency,cost,"
                          "kernels,flat,flat_adam,sharded_flat,fleet,"
-                         "compression,frontier")
+                         "compression,frontier,handout")
     ap.add_argument("--check", action="store_true",
                     help="fail if any BENCH_*.json launch count regresses "
                          "vs results/BASELINE_launches.json")
@@ -135,6 +155,7 @@ def main(argv=None) -> None:
     from benchmarks import paper_figs as F
     from benchmarks.fleet_bench import bench_fleet
     from benchmarks.frontier_bench import bench_frontier
+    from benchmarks.handout_bench import bench_handout
     from benchmarks.kernel_bench import (bench_compression, bench_flat_adam,
                                          bench_flat_assimilate,
                                          bench_kernels, bench_sharded_flat)
@@ -153,6 +174,7 @@ def main(argv=None) -> None:
         "compression": bench_compression,
         "fleet": lambda: bench_fleet(quick),
         "frontier": lambda: bench_frontier(quick),
+        "handout": lambda: bench_handout(quick),
     }
 
     if args.check:

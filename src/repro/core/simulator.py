@@ -38,7 +38,8 @@ from repro.core.preemption import (ClientModel, LatencyModel, PreemptionModel,
                                    make_fleet)
 from repro.core.scheduler import Scheduler
 from repro.core.work_generator import WorkGenerator, split_dataset
-from repro.protocol import Aggregator, Coordinator, ServerScheme, as_flat, as_tree
+from repro.protocol import (Aggregator, Coordinator, HandoutService,
+                            ServerScheme, as_flat, as_tree)
 from repro.transfer import wire
 from repro.transfer.transport import LoopbackTransport, Transport, TransportStats
 
@@ -100,6 +101,32 @@ class SimConfig:
     # infrastructure (not preemptible); losing one is covered by
     # Aggregator.fail() property tests, not the preemption process.
     aggregators: int = 0
+    # ---- content-addressed handout serving ---------------------------------
+    # download-leg frame dtype: "float32" (pinned default) or "bfloat16"
+    # (half-width dense frames, f32 masters, bf16-exact reconstruction)
+    handout_dtype: str = "float32"
+    # read-only subscribers (protocol/handout.py): N model pullers served
+    # from the coordinator's content-addressed frame cache.  0 = off
+    # (bit-identical to the pre-serving engine — no extra events, and a
+    # version bump is content-driven so the serving path never changes
+    # which frames training clients are sent)
+    subscribers: int = 0
+    # arrival process: "flash" (the whole crowd re-pulls within
+    # sub_jitter_s of each sub_interval_s cadence tick — release-day),
+    # "uniform" / "lognormal" (independent re-pull intervals with mean
+    # sub_interval_s; lognormal is the heavy-tailed lagged distribution)
+    sub_lag: str = "flash"
+    sub_interval_s: float = 600.0
+    sub_jitter_s: float = 30.0
+    # read-serving frontends: serial processors (like parameter servers)
+    # whose per-pull service time is a fixed overhead plus encode time
+    # for the bytes THIS pull was first to request (cache misses) — the
+    # flash-crowd p99 shows exactly the encode-once vs encode-per-client
+    # difference.  Transfer then rides the subscriber downlink.
+    sub_frontends: int = 4
+    sub_serve_overhead_s: float = 0.001
+    sub_encode_gbps: float = 1.0
+    sub_bandwidth_gbps: float = 0.3
 
 
 @dataclass
@@ -149,6 +176,20 @@ class SimResult:
     agg_flushes: int = 0              # merged frames shipped upstream
     wire_agg_frames: int = 0          # KIND_AGG frames the hub assimilated
     edge_wire: Optional[TransportStats] = None
+    # ---- content-addressed handout serving ---------------------------------
+    # Cache stats cover the hub coordinator's WHOLE download leg (client
+    # handouts + subscriber pulls): unique bytes encoded vs bytes served
+    # is the dedup ratio the flash-crowd scenarios measure.  sub_* fill
+    # only when cfg.subscribers > 0.
+    handout_unique_bytes_encoded: int = 0
+    handout_bytes_served: int = 0
+    handout_dedup_ratio: float = 0.0
+    subscribers: int = 0
+    sub_pulls: int = 0
+    sub_frames_served: int = 0
+    sub_bytes_served: int = 0
+    sub_latency_p50_s: float = 0.0
+    sub_latency_p99_s: float = 0.0
 
     def acc_at_time(self, t: float) -> float:
         """Accuracy of the LATEST epoch completed at or before ``t`` (0.0
@@ -173,6 +214,7 @@ _UPLOAD = 3                 # client finished local training; starts upload
 _ARRIVE = 4                 # result lands at the web server
 _AGG_ARRIVE = 5             # merged edge frame lands at the hub (tier mode)
 _WINDOW_OPEN = 6            # aggregator handout downloaded; window usable
+_SUB_PULL = 7               # read-only subscriber pulls the model
 
 
 def _pick_server(ps_busy) -> int:
@@ -232,7 +274,8 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
     # the Coordinator owns the protocol: scheme state, leases, residual
     # ledger, wire encode/decode, transport.  This loop owns only time.
     coord = Coordinator(scheme, params0, transport=transport,
-                        timeout_s=cfg.timeout_s)
+                        timeout_s=cfg.timeout_s,
+                        handout_dtype=cfg.handout_dtype)
     # parameter servers: independent serial processors sharing the store;
     # each result lands on the earliest-free one (_pick_server)
     ps_busy = [0.0] * cfg.n_param_servers
@@ -253,7 +296,8 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
     if n_agg:
         aggs = [Aggregator(scheme, coord, agg_id=a,
                            transport=LoopbackTransport(),
-                           timeout_s=cfg.timeout_s)
+                           timeout_s=cfg.timeout_s,
+                           handout_dtype=cfg.handout_dtype)
                 for a in range(n_agg)]
         agg_lat = LatencyModel()
         agg_rngs = [np.random.default_rng((cfg.seed, 0xA66, a))
@@ -419,6 +463,41 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
     for c in fleet:
         push(0.001 * c.cid, _BOOT, c.cid)
 
+    # ---- read-only subscribers (cfg.subscribers > 0) -----------------------
+    # Served from the hub coordinator's content-addressed frame cache via
+    # HandoutService: the version-vector ledger picks the chunks, the
+    # cache guarantees one encode per (round, chunk, write-version) no
+    # matter how many subscribers pull.  A dedicated rng stream keeps the
+    # trainer trace bit-identical with subscribers on.
+    n_sub = cfg.subscribers
+    service: Optional[HandoutService] = None
+    sub_lat: List[float] = []
+    if n_sub:
+        service = HandoutService(coord)
+        sub_rng = np.random.default_rng((cfg.seed, 0x5EB5))
+        sub_busy = [0.0] * max(cfg.sub_frontends, 1)
+        sub_encode_bps = cfg.sub_encode_gbps * 1e9 / 8.0
+        sub_bw_bps = cfg.sub_bandwidth_gbps * 1e9 / 8.0
+
+        def next_pull(now: float) -> float:
+            if cfg.sub_lag == "flash":
+                # the whole crowd lands in the jitter window after the
+                # next cadence tick
+                k = math.floor(now / cfg.sub_interval_s) + 1
+                return (k * cfg.sub_interval_s
+                        + cfg.sub_jitter_s * float(sub_rng.random()))
+            if cfg.sub_lag == "lognormal":
+                # heavy-tailed lag, mean sub_interval_s (mu = ln m - s^2/2)
+                return now + float(sub_rng.lognormal(
+                    math.log(cfg.sub_interval_s) - 0.5, 1.0))
+            return now + cfg.sub_interval_s * (0.5 + float(sub_rng.random()))
+
+        for s in range(n_sub):
+            t0 = (cfg.sub_jitter_s * float(sub_rng.random())
+                  if cfg.sub_lag == "flash"
+                  else cfg.sub_interval_s * float(sub_rng.random()))
+            push(t0, _SUB_PULL, s)
+
     if n_agg:
         # first windows open instantly at t=0 (the edge starts warm — W0
         # is already resident, like the store replicas), so boot pulls
@@ -496,6 +575,24 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
             for a in range(n_agg):
                 if aggs[a].expire(t_now):
                     maybe_flush(a, t_now)
+
+        if kind == _SUB_PULL:
+            # read-only subscriber: pull whatever chunks moved since its
+            # last pull, all served from the content-addressed cache.
+            # Latency = wait for a free frontend + service (overhead +
+            # encode time for the bytes THIS pull was first to want) +
+            # transfer on the subscriber downlink.  A flash crowd behind
+            # one content change pays ONE encode; everyone else queues
+            # behind millisecond-class cache serves.
+            snap, _ = store.read_at(t_now)
+            st_p = service.pull(cid, snap, round=gen.epoch)
+            fe = _pick_server(sub_busy)
+            t_done = (max(t_now, sub_busy[fe]) + cfg.sub_serve_overhead_s
+                      + st_p.encoded_bytes / sub_encode_bps)
+            sub_busy[fe] = t_done
+            sub_lat.append(t_done + st_p.bytes / sub_bw_bps - t_now)
+            push(next_pull(t_now), _SUB_PULL, cid)
+            continue
 
         if kind <= _DISPATCH:           # boot / respawn / dispatch
             # dispatch runs AT the event time, never ahead of it: the
@@ -776,7 +873,18 @@ def run_simulation(task, data, scheme: ServerScheme, cfg: SimConfig,
         aggregators=n_agg,
         agg_flushes=sum(a.flushes for a in aggs),
         wire_agg_frames=coord.frames[wire.KIND_AGG],
-        edge_wire=edge_stats)
+        edge_wire=edge_stats,
+        handout_unique_bytes_encoded=int(coord.handout_cache.encoded_bytes),
+        handout_bytes_served=int(coord.handout_cache.served_bytes),
+        handout_dedup_ratio=float(coord.handout_cache.dedup_ratio),
+        subscribers=n_sub,
+        sub_pulls=service.pulls if service else 0,
+        sub_frames_served=service.frames_served if service else 0,
+        sub_bytes_served=service.bytes_served if service else 0,
+        sub_latency_p50_s=(float(np.percentile(sub_lat, 50))
+                           if sub_lat else 0.0),
+        sub_latency_p99_s=(float(np.percentile(sub_lat, 99))
+                           if sub_lat else 0.0))
 
 
 @dataclass

@@ -40,7 +40,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core import flat as F
 from repro.core.baselines import CompressedVCASGD, VCASGD
 from repro.core.tasks import MLPTask, make_classification_data
-from repro.protocol import Aggregator, Coordinator, as_tree
+from repro.protocol import Aggregator, Coordinator, HandoutService, as_tree
 from repro.transfer import wire
 from repro.transfer.transport import ProcessTransport
 
@@ -71,6 +71,15 @@ def main(argv=None):
                          "aggregator, each aggregator submits ONE merged "
                          "v3 frame upstream per round over its own "
                          "process transport")
+    ap.add_argument("--subscribers", type=int, default=0,
+                    help="after each round, N read-only subscribers pull "
+                         "the model through the content-addressed handout "
+                         "cache — every served frame crosses the broker "
+                         "(protocol/handout.py::HandoutService)")
+    ap.add_argument("--handout-dtype", default="float32",
+                    choices=["float32", "f32", "bfloat16", "bf16"],
+                    help="download-leg frame dtype: bf16 halves handout "
+                         "bytes (f32 masters, bf16-exact reconstruction)")
     ap.add_argument("--timeout-s", type=float, default=600.0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--smoke", action="store_true",
@@ -95,7 +104,8 @@ def main(argv=None):
     with contextlib.ExitStack() as stack:
         transport = stack.enter_context(ProcessTransport())
         coord = Coordinator(scheme, params0, transport=transport,
-                            timeout_s=args.timeout_s)
+                            timeout_s=args.timeout_s,
+                            handout_dtype=args.handout_dtype)
         resumed = coord.restore_checkpoint(mgr)
         # resume offsets the round counter and uid sequence: checkpoint
         # step k holds rounds 0..k-1, so a restarted server continues at
@@ -114,7 +124,12 @@ def main(argv=None):
         for a in range(args.tier):
             at = stack.enter_context(ProcessTransport())
             aggs.append(Aggregator(scheme, coord, agg_id=a, transport=at,
-                                   timeout_s=args.timeout_s))
+                                   timeout_s=args.timeout_s,
+                                   handout_dtype=args.handout_dtype))
+        # read-only subscribers: served from the hub's frame cache, every
+        # frame crossing the SAME broker process the lease traffic uses
+        service = (HandoutService(coord, transport=transport)
+                   if args.subscribers > 0 else None)
         print(f"[vc-serve] scheme={scheme.name} clients={args.clients} "
               f"shards={args.shards} broker pid={transport.broker_pid} "
               f"(frames cross a real process boundary)"
@@ -201,6 +216,25 @@ def main(argv=None):
                   f"residual mass {coord.residual_mass():.2f} "
                   + (f"upstream agg frames {up_frames} " if aggs else "")
                   + f"[{time.monotonic() - t0:.2f}s]")
+            # the read path: every subscriber pulls the round's model
+            # through the content-addressed cache — cached frames cross
+            # the REAL broker, but the encode happens at most once per
+            # (round, chunk, content)
+            if service is not None:
+                lat = []
+                for sub in range(args.subscribers):
+                    ts = time.monotonic()
+                    service.pull(sub, coord.state.params, round=rnd)
+                    lat.append(time.monotonic() - ts)
+                lat.sort()
+                p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
+                c = coord.handout_cache
+                print(f"[vc-serve] serve: round {rnd} "
+                      f"{args.subscribers} subscribers "
+                      f"{service.bytes_served / 1e6:.2f}MB served "
+                      f"({c.encoded_bytes / 1e6:.2f}MB unique encoded, "
+                      f"dedup {c.dedup_ratio:.1f}x) "
+                      f"p99 {p99 * 1e3:.2f}ms")
         s = coord.wire_stats
         _check(s.frames_sent == s.frames_recv + s.frames_dropped,
                f"hub frame conservation: {s.frames_sent} sent != "

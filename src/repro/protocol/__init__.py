@@ -9,6 +9,7 @@ drive the same Coordinator — see docs/PROTOCOL.md.
 """
 from repro.protocol.aggregator import Aggregator
 from repro.protocol.coordinator import Coordinator
+from repro.protocol.handout import HandoutService, PullStats
 from repro.protocol.scheme import ServerScheme
 from repro.protocol.types import (LEASE_ASSIMILATED, LEASE_DROPPED,
                                   LEASE_EXPIRED, LEASE_IN_FLIGHT,
@@ -16,8 +17,8 @@ from repro.protocol.types import (LEASE_ASSIMILATED, LEASE_DROPPED,
                                   SchemeState, as_flat, as_tree, scheme_state)
 
 __all__ = [
-    "Aggregator", "Coordinator", "ServerScheme", "Lease", "LeaseError",
-    "ResultMeta",
+    "Aggregator", "Coordinator", "ServerScheme", "HandoutService",
+    "PullStats", "Lease", "LeaseError", "ResultMeta",
     "SchemeState", "as_flat", "as_tree", "scheme_state",
     "LEASE_ISSUED", "LEASE_IN_FLIGHT", "LEASE_ASSIMILATED",
     "LEASE_DROPPED", "LEASE_EXPIRED",

@@ -50,7 +50,8 @@ class Aggregator(Coordinator):
 
     def __init__(self, scheme: ServerScheme, hub: Coordinator, *,
                  agg_id: int, transport: Optional[Transport] = None,
-                 timeout_s: float = math.inf):
+                 timeout_s: float = math.inf,
+                 handout_dtype: str = "float32"):
         if scheme.requires_all_clients:
             raise ValueError(
                 f"scheme {scheme.name!r} requires every client each round "
@@ -58,9 +59,11 @@ class Aggregator(Coordinator):
                 f"merges cannot represent it")
         # the downward face is a full Coordinator over the EDGE transport;
         # the construction-time state is a placeholder — every window
-        # reseeds it from the upstream lease's decoded base
+        # reseeds it from the upstream lease's decoded base.  The edge
+        # inherits the whole download leg: content-addressed frame cache
+        # and the (optional) bf16 handout dtype included.
         super().__init__(scheme, hub.state.params, transport=transport,
-                         timeout_s=timeout_s)
+                         timeout_s=timeout_s, handout_dtype=handout_dtype)
         self.hub = hub
         self.agg_id = agg_id
         self.up_lease: Optional[Lease] = None

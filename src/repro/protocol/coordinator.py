@@ -48,7 +48,16 @@ from repro.protocol.types import (LEASE_ASSIMILATED, LEASE_DROPPED,
                                   LEASE_ISSUED, Lease, LeaseError, ResultMeta,
                                   SchemeState, as_flat)
 from repro.transfer import wire
+from repro.transfer.handout_cache import HandoutCache
 from repro.transfer.transport import LoopbackTransport, Transport
+
+# download-leg frame dtypes (satellite of the content-addressed handout
+# PR): f32 masters always; "bfloat16" ships half-width dense frames with
+# the wire's exact bf16 round-trip (the client reconstructs exactly the
+# bf16 image of the master — the same guarantee style as the existing
+# f32/bf16 dense round-trip tests)
+_HANDOUT_DTYPES = {"float32": "float32", "f32": "float32",
+                   "bfloat16": "bfloat16", "bf16": "bfloat16"}
 
 
 class Coordinator:
@@ -56,11 +65,17 @@ class Coordinator:
 
     def __init__(self, scheme: ServerScheme, params0, *,
                  transport: Optional[Transport] = None,
-                 timeout_s: float = math.inf):
+                 timeout_s: float = math.inf,
+                 handout_dtype: str = "float32"):
         self.scheme = scheme
         self.state: SchemeState = scheme.init_state(as_flat(params0))
         self.transport: Transport = transport or LoopbackTransport()
         self.timeout_s = timeout_s
+        try:
+            self.handout_dtype = _HANDOUT_DTYPES[handout_dtype]
+        except KeyError:
+            raise ValueError(f"handout_dtype {handout_dtype!r} not in "
+                             f"{sorted(_HANDOUT_DTYPES)}") from None
         self.leases: Dict[tuple, Lease] = {}        # (cid, uid) -> live lease
         # lease-deadline heap: (deadline, dl_seq, key), validated lazily
         # against the lease's current _dl_seq (renew pushes a fresh entry),
@@ -87,7 +102,13 @@ class Coordinator:
         self._bus_versions: Optional[np.ndarray] = None
         self._bus_cache: Optional[np.ndarray] = None
         self._bus_src = None
+        self._chunk_len = 0
         self._client_vec: Dict[int, np.ndarray] = {}
+        # content-addressed frame cache (transfer/handout_cache.py): each
+        # chunk's frame is encoded at most once per (round, write-version)
+        # and the SAME immutable bytes are served to every requester —
+        # clients here, read-only subscribers via protocol/handout.py
+        self.handout_cache = HandoutCache()
         self.handout_frames = 0
         self.handout_bytes = 0
         # UPLOAD-leg wire frame kinds, measured at delivery.  This dict is
@@ -165,14 +186,24 @@ class Coordinator:
         Caveat (documented, not exercised by any current scenario): a
         replica scheme whose ``handout`` returns per-client buffers over
         a sharded bus would thrash the cache and bump versions on every
-        alternation — extra frames, never wrong bytes."""
+        alternation — extra frames, never wrong bytes.
+
+        Every frame comes out of ``self.handout_cache`` — encoded at
+        most once per (round, chunk, write-version), byte-identical to
+        a fresh per-client encode because the encode closure is
+        deterministic in exactly the cache key's content."""
         spec = fp.spec
-        buf = np.asarray(fp.buf)
-        sharded = (isinstance(spec, F.ShardedTreeSpec) and spec.n_shards > 1)
-        if not sharded:
-            frame = wire.encode_dense(buf, round=lease.round)
+        n = self._refresh_bus(fp)
+        bf16 = self.handout_dtype == "bfloat16"
+        if n == 1:
+            # plain bus: one full-model dense frame, ALWAYS sent (no
+            # delta rule at chunk count 1 — pinned behaviour), but the
+            # encode itself is served from the cache
+            frame, _ = self._chunk_frame(0, lease.round)
             msg = wire.decode(self.transport.recv(self.transport.send(frame)))
             held = np.asarray(msg.payload)
+            if bf16:
+                held = held.astype(np.float32)  # widening is exact
             lease.handout_frames += 1
             lease.handout_bytes += len(frame)
             self.handout_frames += 1
@@ -181,15 +212,57 @@ class Coordinator:
             # hands out numpy — no device transfer on the hot path
             return F.FlatParams(held if isinstance(fp.buf, np.ndarray)
                                 else jnp.asarray(held), spec)
-        n, length = spec.n_shards, spec.shard_len
-        if self._bus_versions is None or len(self._bus_versions) != n:
+        vec = self._client_vec.get(lease.cid)
+        if vec is None:
+            changed = range(n)                  # fresh client: full download
+        else:
+            changed = np.flatnonzero(self._bus_versions != vec).tolist()
+        # unchanged shards were received (and bf16-rounded) from earlier
+        # handouts of byte-identical content, so the bf16 image of the
+        # cache IS the client's held copy for them
+        held = (self._bus_cache.astype(jnp.bfloat16).astype(np.float32)
+                if bf16 else self._bus_cache.copy())
+        for i in changed:
+            lo, hi = spec.shard_bounds(i)
+            frame, _ = self._chunk_frame(i, lease.round)
+            msg = wire.decode(self.transport.recv(self.transport.send(frame)))
+            payload = np.asarray(msg.payload)
+            held[lo:hi] = payload.astype(np.float32) if bf16 else payload
+            lease.handout_frames += 1
+            lease.handout_bytes += len(frame)
+        self.handout_frames += lease.handout_frames
+        self.handout_bytes += lease.handout_bytes
+        self._client_vec[lease.cid] = self._bus_versions
+        return F.FlatParams(held if isinstance(fp.buf, np.ndarray)
+                            else jnp.asarray(held), spec)
+
+    def _refresh_bus(self, fp: F.FlatParams) -> int:
+        """Sync the write-version ledger to the handout buffer's current
+        content and return the chunk count.  Over a ShardedTreeSpec bus
+        (n_shards > 1) chunks are the bus shards; a plain bus is ONE
+        chunk (versioned the same way, so read-only subscribers get the
+        delta rule even at chunk count 1 — client handouts there still
+        always ship the full frame, the pinned behaviour).  Shared by
+        the lease path above and protocol/handout.py's subscriber
+        pulls: whoever touches the bus first pays the compare, and the
+        version bump is content-driven, so WHEN it runs never changes
+        which frames anyone is sent."""
+        spec = fp.spec
+        buf = np.asarray(fp.buf)
+        sharded = (isinstance(spec, F.ShardedTreeSpec) and spec.n_shards > 1)
+        n = spec.n_shards if sharded else 1
+        length = spec.shard_len if sharded else buf.shape[0]
+        if (self._bus_versions is None or len(self._bus_versions) != n
+                or self._chunk_len != length):
             self._bus_versions = np.ones(n, np.uint32)
             self._bus_cache = buf.copy()
             self._bus_src = fp.buf
+            self._chunk_len = length
             self._client_vec.clear()            # stale vectors: wrong shape
+            self.handout_cache.reset()          # chunk meaning changed
         elif fp.buf is not self._bus_src:
             # contiguous reshape (padded == n * shard_len) -> one
-            # vectorized per-shard comparison for the whole bus
+            # vectorized per-chunk comparison for the whole bus
             cache2d = self._bus_cache.reshape(n, length)
             buf2d = buf.reshape(n, length)
             moved = np.any(buf2d != cache2d, axis=1)
@@ -198,25 +271,28 @@ class Coordinator:
                 self._bus_versions[moved] += 1
                 cache2d[moved] = buf2d[moved]
             self._bus_src = fp.buf
-        vec = self._client_vec.get(lease.cid)
-        if vec is None:
-            changed = range(n)                  # fresh client: full download
-        else:
-            changed = np.flatnonzero(self._bus_versions != vec).tolist()
-        held = self._bus_cache.copy()
-        for i in changed:
-            lo, hi = spec.shard_bounds(i)
-            frame = wire.encode_shard(buf[lo:hi], shard=i, n_shards=n,
-                                      round=lease.round)
-            msg = wire.decode(self.transport.recv(self.transport.send(frame)))
-            held[lo:hi] = np.asarray(msg.payload)
-            lease.handout_frames += 1
-            lease.handout_bytes += len(frame)
-        self.handout_frames += lease.handout_frames
-        self.handout_bytes += lease.handout_bytes
-        self._client_vec[lease.cid] = self._bus_versions
-        return F.FlatParams(held if isinstance(fp.buf, np.ndarray)
-                            else jnp.asarray(held), spec)
+        return n
+
+    def _chunk_frame(self, i: int, round: int):
+        """One chunk's wire frame out of the content-addressed cache —
+        ``(frame, fresh)``, encoded iff (round, chunk, write-version)
+        was never served before.  Must be called after ``_refresh_bus``
+        (the cache slice and version are the ledger's current truth)."""
+        n = len(self._bus_versions)
+        lo, hi = i * self._chunk_len, (i + 1) * self._chunk_len
+        version = int(self._bus_versions[i])
+
+        def encode() -> bytes:
+            seg = self._bus_cache[lo:hi]
+            if self.handout_dtype == "bfloat16":
+                seg = seg.astype(jnp.bfloat16)
+            if n == 1:
+                return wire.encode_dense(seg, round=round)
+            return wire.encode_shard(seg, shard=i, n_shards=n, round=round)
+
+        return self.handout_cache.get(round=round, chunk=i, version=version,
+                                      data=self._bus_cache[lo:hi],
+                                      encode=encode)
 
     def renew(self, lease: Lease, deadline: float) -> Lease:
         """Extend a live lease's deadline (client asked for more time)."""
@@ -460,6 +536,10 @@ class Coordinator:
         # every client re-downloads in full: forget their version vectors
         # (bus versions stay monotone across the restore)
         self._client_vec.clear()
+        # cached frames embed their round in the header; a resumed server
+        # may re-issue rounds, so the frame cache and its watermark start
+        # clean (correctness never depended on them — pure memoization)
+        self.handout_cache.reset()
         return step
 
     # -- introspection -------------------------------------------------------

@@ -36,14 +36,20 @@ class Scenario:
     # builds the fleet off cfg (None = the simulator's default path)
     fleet_fn: Optional[Callable] = None
     vc_beta: float = 0.95                # VC-ASGD averaging weight
+    # ProbeTask constructor kwargs (e.g. a wider bus for the handout-
+    # serving scenarios, so updates spread across several chunks)
+    task_kwargs: Optional[dict] = None
 
-    def config(self) -> SimConfig:
-        return SimConfig(fleet_fn=self.fleet_fn, **self.cfg_kwargs)
+    def config(self, **overrides) -> SimConfig:
+        """Build the SimConfig; ``overrides`` lets a benchmark re-run
+        the SAME scenario with one knob turned (e.g. handout_dtype)."""
+        return SimConfig(fleet_fn=self.fleet_fn,
+                         **{**self.cfg_kwargs, **overrides})
 
-    def run(self) -> SimResult:
+    def run(self, **overrides) -> SimResult:
         from repro.core.baselines import VCASGD
-        cfg = self.config()
-        task = ProbeTask()
+        cfg = self.config(**overrides)
+        task = ProbeTask(**(self.task_kwargs or {}))
         data = make_probe_data(cfg.n_shards, seed=cfg.seed)
         return run_simulation(task, data, VCASGD(self.vc_beta), cfg)
 
@@ -161,6 +167,65 @@ _reg(Scenario(
          restart_delay_s=120.0, subtask_compute_s=300.0,
          server_proc_s=0.005, seed=7, eval_stride=64)))
 
+# ---- content-addressed handout serving (read-heavy scenarios) --------------
+# A modest trainer fleet keeps the bus moving; the measurement is the
+# SERVING leg: N read-only subscribers pulling through the coordinator's
+# frame cache (protocol/handout.py).  The probe bus is widened to 64k
+# params (8 chunks of one BLOCK each) so updates spread across several
+# chunks instead of always landing in chunk 0.  Headline numbers:
+# bytes-served / unique-bytes-encoded (dedup) and p99 pull latency.
+
+_SERVE_TASK = dict(dim=65536)
+_SERVE_BASE = dict(n_param_servers=2, n_clients=200, tasks_per_client=1,
+                   n_shards=400, max_epochs=2, local_steps=1,
+                   timeout_s=1800.0, preemptible=True,
+                   mean_lifetime_s=5400.0, restart_delay_s=120.0,
+                   subtask_compute_s=120.0, server_proc_s=0.05, seed=7,
+                   bus_shards=8)
+
+_reg(Scenario(
+    "handout_smoke",
+    "tiny serving scenario for the CI gate and the --check dedup floor: "
+    "400 flash-crowd subscribers over a 50-trainer fleet (seconds)",
+    dict(_SERVE_BASE, n_clients=50, n_shards=100, max_epochs=1,
+         subscribers=400, sub_lag="flash", sub_interval_s=120.0,
+         sub_jitter_s=20.0),
+    task_kwargs=_SERVE_TASK))
+
+_reg(Scenario(
+    "handout_flash_10k",
+    "10k subscribers re-pulling in 30s flash crowds every 240s while 200 "
+    "trainers move the bus: one encode per changed chunk serves the "
+    "whole crowd (the >=50x dedup acceptance scenario)",
+    dict(_SERVE_BASE, subscribers=10000, sub_lag="flash",
+         sub_interval_s=240.0, sub_jitter_s=30.0),
+    task_kwargs=_SERVE_TASK))
+
+_reg(Scenario(
+    "handout_lagged_10k",
+    "10k subscribers at heavy-tailed (lognormal) re-pull lag, mean 300s: "
+    "staggered reads, varied staleness per pull",
+    dict(_SERVE_BASE, subscribers=10000, sub_lag="lognormal",
+         sub_interval_s=300.0),
+    task_kwargs=_SERVE_TASK))
+
+_reg(Scenario(
+    "handout_flash_100k",
+    "100k flash-crowd subscribers, one epoch (bench --full scale)",
+    dict(_SERVE_BASE, max_epochs=1, subscribers=100000, sub_lag="flash",
+         sub_interval_s=240.0, sub_jitter_s=60.0, sub_frontends=16),
+    task_kwargs=_SERVE_TASK))
+
+_reg(Scenario(
+    "handout_flash_1m",
+    "1M flash-crowd subscribers, one epoch: the cache stays bounded at "
+    "n_chunks x keep_rounds frames while serving ~8M frames (--full)",
+    dict(_SERVE_BASE, n_clients=100, n_shards=200, max_epochs=1,
+         subscribers=1000000, sub_lag="flash", sub_interval_s=300.0,
+         sub_jitter_s=120.0, sub_frontends=64),
+    task_kwargs=_SERVE_TASK))
+
+
 _reg(Scenario(
     "az_reclaim",
     "correlated AZ mass reclaims over a SHARDED bus: the thundering herd "
@@ -247,6 +312,15 @@ def main(argv=None) -> int:
             "agg_flushes": res.agg_flushes,
             "upstream_agg_frames": res.wire_agg_frames,
             "edge_bytes_sent": int(res.edge_wire.bytes_sent),
+        })
+    if res.subscribers:
+        summary.update({
+            "subscribers": res.subscribers,
+            "sub_pulls": res.sub_pulls,
+            "sub_bytes_served": res.sub_bytes_served,
+            "unique_bytes_encoded": res.handout_unique_bytes_encoded,
+            "handout_dedup_ratio": round(res.handout_dedup_ratio, 1),
+            "sub_latency_p99_s": round(res.sub_latency_p99_s, 4),
         })
     if args.json:
         print(json.dumps(summary, indent=1))

@@ -1,0 +1,413 @@
+"""Content-addressed handout cache + read-only serving layer.
+
+The contract under test (transfer/handout_cache.py, protocol/handout.py):
+
+* **Byte-identity** — the cached frame for (round, chunk, content) is
+  byte-for-byte what a fresh per-client encode would produce, under
+  arbitrary interleavings of mutation / handout / drop / checkpoint
+  restore (including the full re-download after a restore).
+* **Bounded memory** — at most ``n_chunks * keep_rounds`` frames
+  resident no matter how many rounds/readers pass; the retention
+  watermark evicts, rewound requests bypass the cache.
+* **Dedup accounting** — a second identical handout costs ZERO new
+  encodes; served-vs-encoded bytes drive the dedup ratio the benchmark
+  gates on.
+* **bf16 download frames** — f32 masters, bf16-exact reconstruction,
+  half the bytes.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import flat as F
+from repro.core.baselines import VCASGD
+from repro.protocol import Coordinator, HandoutService
+from repro.transfer import wire
+from repro.transfer.handout_cache import HandoutCache, chunk_hash
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+
+
+def _params(seed=0, shape=(40, 16), n_shards=8):
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(seed), shape)}
+    return (F.flatten(tree) if n_shards <= 1
+            else F.flatten_sharded(tree, n_shards))
+
+
+def _oracle_frames(coord, rnd):
+    """Fresh per-client encode of every chunk straight from the wire
+    module — what the pre-cache coordinator did per client."""
+    buf = np.asarray(coord.state.params.buf)
+    spec = coord.state.params.spec
+    bf16 = coord.handout_dtype == "bfloat16"
+    n = spec.n_shards if isinstance(spec, F.ShardedTreeSpec) else 1
+    out = []
+    for i in range(n):
+        if n == 1:
+            seg = buf
+        else:
+            lo, hi = spec.shard_bounds(i)
+            seg = buf[lo:hi]
+        if bf16:
+            seg = seg.astype(jnp.bfloat16)
+        out.append(wire.encode_dense(seg, round=rnd) if n == 1
+                   else wire.encode_shard(seg, shard=i, n_shards=n,
+                                          round=rnd))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HandoutCache unit contract
+# ---------------------------------------------------------------------------
+
+def test_cache_second_identical_request_is_free():
+    cache = HandoutCache()
+    data = np.arange(8, dtype=np.float32)
+    calls = []
+
+    def enc():
+        calls.append(1)
+        return b"frame-bytes"
+
+    f1, fresh1 = cache.get(round=0, chunk=0, version=1, data=data, encode=enc)
+    f2, fresh2 = cache.get(round=0, chunk=0, version=1, data=data, encode=enc)
+    assert (fresh1, fresh2) == (True, False)
+    assert f1 == f2 == b"frame-bytes" and len(calls) == 1
+    assert cache.encodes == 1 and cache.hits == 1
+    assert cache.served_frames == 2
+    assert cache.served_bytes == 2 * len(b"frame-bytes")
+    assert cache.dedup_ratio == 2.0
+
+
+def test_cache_content_change_is_a_new_key_and_supersedes():
+    cache = HandoutCache()
+    a = np.zeros(4, dtype=np.float32)
+    b = np.ones(4, dtype=np.float32)
+    cache.get(round=0, chunk=0, version=1, data=a, encode=lambda: b"A")
+    f, fresh = cache.get(round=0, chunk=0, version=2, data=b,
+                         encode=lambda: b"B")
+    assert fresh and f == b"B"
+    # within-round supersede: old content can never be served again
+    assert cache.frames_held == 1 and cache.evicted == 1
+    # and the hash really keys on content, not version
+    assert chunk_hash(a) != chunk_hash(b)
+
+
+def test_cache_watermark_eviction_and_rewind_bypass():
+    cache = HandoutCache(keep_rounds=2)
+    data = np.zeros(4, dtype=np.float32)
+    for rnd in range(6):
+        cache.get(round=rnd, chunk=0, version=1, data=data,
+                  encode=lambda: b"x%d" % rnd)
+    assert cache.watermark == 5 - 2 + 1 == 4
+    assert cache.frames_held <= 2
+    held_before = cache.frames_held
+    # a rewound requester (restore took rounds backwards) is served a
+    # fresh encode and the cache stays clean — never stored, never wrong
+    f, fresh = cache.get(round=0, chunk=0, version=1, data=data,
+                         encode=lambda: b"rewound")
+    assert fresh and f == b"rewound"
+    assert cache.frames_held == held_before
+
+
+def test_cache_keep_rounds_validation():
+    with pytest.raises(ValueError):
+        HandoutCache(keep_rounds=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_cache_random_schedule_always_serves_oracle_bytes(seed):
+    """Random (round, chunk, mutate?) schedules with nondecreasing
+    rounds: the cache's answer is ALWAYS the oracle encode of the
+    current content, and residency never exceeds n_chunks*keep_rounds."""
+    rng = np.random.default_rng(seed)
+    n_chunks = int(rng.integers(1, 5))
+    cache = HandoutCache(keep_rounds=int(rng.integers(1, 4)))
+    content = [np.zeros(6, dtype=np.float32) for _ in range(n_chunks)]
+    version = [1] * n_chunks
+    rnd = 0
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.2:
+            rnd += int(rng.integers(0, 3))
+        chunk = int(rng.integers(0, n_chunks))
+        if op < 0.35:
+            content[chunk] = content[chunk] + 1.0
+            version[chunk] += 1
+        oracle = wire.encode_shard(content[chunk], shard=chunk,
+                                   n_shards=n_chunks, round=rnd)
+        frame, _ = cache.get(round=rnd, chunk=chunk,
+                             version=version[chunk], data=content[chunk],
+                             encode=lambda c=chunk, r=rnd:
+                             wire.encode_shard(content[c], shard=c,
+                                               n_shards=n_chunks, round=r))
+        assert frame == oracle
+        assert cache.frames_held <= n_chunks * cache.keep_rounds
+
+
+# ---------------------------------------------------------------------------
+# Coordinator routes every handout through the cache
+# ---------------------------------------------------------------------------
+
+def test_second_client_same_round_costs_zero_encodes():
+    fp = _params()
+    n = fp.spec.n_shards
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=1e9)
+    l1 = coord.issue(cid=0, uid=1, round=0, base=fp)
+    assert coord.handout_cache.encodes == n
+    l2 = coord.issue(cid=1, uid=2, round=0, base=fp)
+    assert coord.handout_cache.encodes == n          # all hits
+    assert coord.handout_cache.hits == n
+    assert l1.handout_bytes == l2.handout_bytes
+    np.testing.assert_array_equal(np.asarray(l1.base.buf),
+                                  np.asarray(l2.base.buf))
+    coord.drop(l1), coord.drop(l2)
+
+
+def test_handout_frames_byte_identical_under_random_schedule():
+    """Random mutate/handout/drop/restore interleavings: every chunk
+    frame the coordinator would ship equals the oracle per-client
+    encode, and every handed-out base equals the server params exactly
+    (including the full re-download after a checkpoint restore)."""
+    from repro.checkpoint import CheckpointManager
+
+    for seed in (1, 7, 42):
+        rng = np.random.default_rng(seed)
+        fp = _params(seed)
+        n = fp.spec.n_shards
+        coord = Coordinator(VCASGD(0.9), fp, timeout_s=1e9)
+        mgr = CheckpointManager(tempfile.mkdtemp(prefix="handout_t_"),
+                                async_save=False)
+        uid, rnd, saved = 0, 0, False
+        for _ in range(50):
+            op = rng.random()
+            if op < 0.45:                            # handout
+                uid += 1
+                lease = coord.issue(cid=uid % 4, uid=uid, round=rnd,
+                                    base=coord.state.params)
+                np.testing.assert_array_equal(
+                    np.asarray(lease.base.buf),
+                    np.asarray(coord.state.params.buf))
+                for i, oracle in enumerate(_oracle_frames(coord, rnd)):
+                    frame, _ = coord._chunk_frame(i, rnd)
+                    assert frame == oracle
+                if rng.random() < 0.5:               # mutate: fold it in
+                    coord.submit(lease, lease.base.buf + 0.25)
+                    coord.assimilate(lease, coord.deliver(lease),
+                                     server_version=coord.state.version)
+                else:                                # wasted work
+                    coord.drop(lease)
+            elif op < 0.6:
+                rnd += 1
+            elif op < 0.75 or not saved:             # checkpoint
+                coord.save_checkpoint(mgr, step=rnd + 1)
+                saved = True
+            else:                                    # restore: rounds rewind
+                coord.restore_checkpoint(mgr)
+                rnd = 0
+                uid += 1                             # full re-download
+                lease = coord.issue(cid=uid % 4, uid=uid, round=rnd,
+                                    base=coord.state.params)
+                assert lease.handout_frames == n
+                np.testing.assert_array_equal(
+                    np.asarray(lease.base.buf),
+                    np.asarray(coord.state.params.buf))
+                coord.drop(lease)
+        assert coord.handout_cache.hits > 0          # the cache did work
+
+
+def test_cache_bounded_across_rounds():
+    fp = _params()
+    n = fp.spec.n_shards
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=1e9)
+    cache = coord.handout_cache
+    for rnd in range(12):
+        for cid in range(3):
+            uid = rnd * 3 + cid + 1
+            lease = coord.issue(cid=cid, uid=uid, round=rnd,
+                                base=coord.state.params)
+            if cid == 0:
+                coord.submit(lease, lease.base.buf + 0.1)
+                coord.assimilate(lease, coord.deliver(lease),
+                                 server_version=coord.state.version)
+            else:
+                coord.drop(lease)
+        assert cache.frames_held <= n * cache.keep_rounds
+    assert cache.watermark == 12 - cache.keep_rounds
+    assert cache.evicted > 0
+
+
+# ---------------------------------------------------------------------------
+# bf16 download frames: f32 masters, bf16-exact reconstruction, half bytes
+# ---------------------------------------------------------------------------
+
+def test_bf16_handout_reconstruction_is_bf16_exact():
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=1e9,
+                        handout_dtype="bf16")
+    assert coord.handout_dtype == "bfloat16"         # alias normalized
+    lease = coord.issue(cid=0, uid=1, round=0, base=fp)
+    want = np.asarray(fp.buf).astype(jnp.bfloat16).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(lease.base.buf), want)
+    # fold a result so some (not all) chunks change, then re-download:
+    # unchanged chunks come from the held copy, changed ones from bf16
+    # frames — BOTH must equal the bf16 image of the f32 master
+    coord.submit(lease, lease.base.buf + 0.125)
+    coord.assimilate(lease, coord.deliver(lease),
+                     server_version=coord.state.version)
+    l2 = coord.issue(cid=0, uid=2, round=1, base=coord.state.params)
+    want2 = (np.asarray(coord.state.params.buf)
+             .astype(jnp.bfloat16).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(l2.base.buf), want2)
+    coord.drop(l2)
+
+
+def test_bf16_halves_handout_bytes():
+    fp = _params()
+    sl, n = fp.spec.shard_len, fp.spec.n_shards
+    f32 = Coordinator(VCASGD(0.9), fp, timeout_s=1e9)
+    b16 = Coordinator(VCASGD(0.9), fp, timeout_s=1e9,
+                      handout_dtype="bfloat16")
+    a = f32.issue(cid=0, uid=1, round=0, base=fp)
+    b = b16.issue(cid=0, uid=1, round=0, base=fp)
+    assert a.handout_bytes == n * wire.shard_frame_bytes(sl)
+    assert b.handout_bytes == n * wire.shard_frame_bytes(sl, "bfloat16")
+    assert b.handout_bytes < 0.55 * a.handout_bytes
+    f32.drop(a), b16.drop(b)
+
+
+def test_bad_handout_dtype_rejected():
+    fp = _params()
+    with pytest.raises(ValueError):
+        Coordinator(VCASGD(0.9), fp, handout_dtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# HandoutService: the read-only subscriber layer
+# ---------------------------------------------------------------------------
+
+def test_service_fresh_then_caught_up_then_delta():
+    fp = _params()
+    n = fp.spec.n_shards
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=1e9)
+    svc = HandoutService(coord)
+    s1 = svc.pull(0, coord.state.params, round=0)
+    assert s1.fresh and s1.frames == n               # full first download
+    s2 = svc.pull(0, coord.state.params, round=0)
+    assert s2.frames == 0 and s2.bytes == 0          # caught up: free
+    # fold one result -> only the touched chunks re-ship
+    lease = coord.issue(cid=0, uid=1, round=0, base=coord.state.params)
+    nudged = np.asarray(lease.base.buf).copy()
+    lo, hi = fp.spec.shard_bounds(2)
+    nudged[lo:hi] += 1.0
+    coord.submit(lease, nudged)
+    coord.assimilate(lease, coord.deliver(lease),
+                     server_version=coord.state.version)
+    s3 = svc.pull(0, coord.state.params, round=1)
+    assert 1 <= s3.frames < n
+    # a brand-new subscriber rides entirely on cached frames when a
+    # same-round reader already paid the encodes
+    before = coord.handout_cache.encodes
+    s4 = svc.pull(1, coord.state.params, round=1)
+    assert s4.frames == n
+    # chunks served to sub 0 at round 1 are cached; the rest encode once
+    assert coord.handout_cache.encodes == before + (n - s3.frames)
+    assert svc.subscribers == 2
+    svc.drop_subscriber(0)
+    assert svc.subscribers == 1
+    s5 = svc.pull(0, coord.state.params, round=1)    # dropped: full again
+    assert s5.fresh and s5.frames == n
+
+
+def test_service_dense_single_chunk_delta():
+    fp = _params(n_shards=1)
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=1e9)
+    svc = HandoutService(coord)
+    s1 = svc.pull(0, coord.state.params, round=0)
+    assert s1.frames == 1
+    # the dense bus is ONE chunk in the ledger: an unchanged model is a
+    # zero-frame pull even without sharding (clients still always get
+    # the full dense frame — that behavior is pinned elsewhere)
+    s2 = svc.pull(0, coord.state.params, round=0)
+    assert s2.frames == 0
+
+
+def test_service_version_vectors_share_storage():
+    """1M subscribers must not mean 1M vector copies: caught-up
+    subscribers hold REFERENCES to the coordinator's copy-on-write
+    version vector."""
+    fp = _params()
+    coord = Coordinator(VCASGD(0.9), fp, timeout_s=1e9)
+    svc = HandoutService(coord)
+    for s in range(64):
+        svc.pull(s, coord.state.params, round=0)
+    ids = {id(v) for v in svc._sub_vec.values()}
+    assert len(ids) == 1
+
+
+# ---------------------------------------------------------------------------
+# simulator integration
+# ---------------------------------------------------------------------------
+
+def _smoke_run(**overrides):
+    from repro.scenarios.registry import get
+
+    return get("handout_smoke").run(**overrides)
+
+
+@pytest.mark.slow
+def test_subscribers_leave_trainer_trace_invariant():
+    """Read-only subscribers may not move a single float of training:
+    same config with subscribers on vs off produces the identical
+    trainer fingerprint (only event/serving counters differ)."""
+    off = _smoke_run(subscribers=0)
+    on = _smoke_run(subscribers=50)
+    for field in ("final_accuracy", "wall_time_s", "epochs_done",
+                  "results_assimilated", "preemptions", "reassignments",
+                  "handout_frames", "handout_bytes"):
+        assert getattr(on, field) == getattr(off, field), field
+    assert on.sub_pulls > 0 and off.sub_pulls == 0
+
+
+@pytest.mark.slow
+def test_subscriber_scenario_dedups_and_reports_latency():
+    from repro.scenarios.registry import get
+
+    sc = get("handout_smoke")
+    cfg = sc.config()
+    res = sc.run()
+    assert res.subscribers == cfg.subscribers
+    assert res.sub_pulls > cfg.subscribers           # pulls recur
+    assert res.handout_dedup_ratio > 10.0
+    assert res.handout_bytes_served > res.handout_unique_bytes_encoded
+    assert 0.0 < res.sub_latency_p50_s <= res.sub_latency_p99_s
+
+
+@pytest.mark.slow
+def test_bf16_halves_served_bytes_in_sim():
+    f32 = _smoke_run(max_epochs=1)
+    b16 = _smoke_run(max_epochs=1, handout_dtype="bfloat16")
+    assert b16.sub_bytes_served < 0.55 * f32.sub_bytes_served
+    assert b16.handout_bytes < 0.55 * f32.handout_bytes
+
+
+def test_pinned_cases_do_not_serialize_serving_fields():
+    """The pinned regression stays byte-identical BY CONSTRUCTION: the
+    fixture serializes a fixed field list that the serving counters are
+    not part of (and subscribers default to 0)."""
+    pinned = json.loads(
+        (Path(__file__).resolve().parents[1] / "results" /
+         "PINNED_sim_regression.json").read_text())
+    case = next(iter(pinned["cases"].values()))
+    assert "sub_pulls" not in case
+    assert "handout_dedup_ratio" not in case

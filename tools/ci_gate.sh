@@ -56,6 +56,18 @@ grep -q "upstream agg frames" "$tier_dir/tier.log"
 grep -q "results assimilated" "$tier_dir/tier.log"
 echo "[ci-gate] vc_serve aggregation-tier smoke completed"
 
+# handout-serve smoke: read-only subscribers pulling cached frames
+# through the REAL broker after every round — the serve line proves the
+# content-addressed cache deduplicates (encode once, serve many) and
+# the run's frame-conservation invariants still hold with readers on
+serve_dir=$(mktemp -d)
+trap 'rm -rf "$resume_dir" "$tier_dir" "$serve_dir"' EXIT
+python -m repro.launch.vc_serve --smoke --subscribers 16 \
+    --ckpt-dir "$serve_dir" > "$serve_dir/serve.log"
+grep -q "serve: round 1 16 subscribers" "$serve_dir/serve.log"
+grep -q "dedup" "$serve_dir/serve.log"
+echo "[ci-gate] vc_serve handout-serve smoke completed"
+
 # fleet smoke: a 200-client preemptible scenario end to end through the
 # scenario registry (probe task, real wire frames) — proves the fleet
 # path stays runnable; throughput is gated separately by --check below

@@ -7,10 +7,13 @@ claims are evidence-backed instead of guessed::
     PYTHONPATH=src python tools/profile_sim.py --scenario fleet_smoke
     PYTHONPATH=src python tools/profile_sim.py --scenario fleet_1k -n 30 \
         --sort tottime
+    PYTHONPATH=src python tools/profile_sim.py --scenario handout_flash_10k
 
 Any scenario from repro.scenarios.registry works; the probe task keeps
 client compute out of the way, so what you see IS the event loop +
-protocol + wire stack.
+protocol + wire stack.  The ``handout_*`` subscriber scenarios profile
+the read path: cache hits in transfer/handout_cache.py should dominate
+over fresh encodes (that is the whole point of the cache).
 """
 from __future__ import annotations
 
