@@ -15,7 +15,11 @@ event-loop throughput drops below the baselined events/sec floor
 (baseline * FLOOR_FRACTION, so CI noise doesn't flake the gate), and the
 per-kernel ROOFLINE gate (results/BASELINE_roofline.json): compiled-HLO
 traffic per compression kernel vs its hand-derived analytic minimum, plus
-a loose measured-bandwidth floor (see docs/ROOFLINE.md).
+a loose measured-bandwidth floor (see docs/ROOFLINE.md).  Before any of
+that it runs the STATIC tier — ``tools/vclint.py --json`` against
+results/BASELINE_vclint.json (exit 2 if no baseline is pinned; see
+docs/LINT.md) — so protocol/wire/kernel invariant violations fail the
+gate without running a single benchmark.
 """
 from __future__ import annotations
 
@@ -43,6 +47,31 @@ LAUNCH_SUITES = ("flat", "flat_adam", "sharded_flat", "compression")
 
 def _out_path(name: str) -> Path:
     return RESULTS / f"{CANONICAL.get(name, 'BENCH_' + name)}.json"
+
+
+def check_vclint() -> int:
+    """Static tier of the gate: run ``tools/vclint.py --json`` and defer
+    to its ratchet exit code (0 clean, 1 new violations vs
+    results/BASELINE_vclint.json, 2 no baseline pinned — re-pin with
+    ``tools/vclint.py --update-baseline``, which --update-baseline here
+    also does)."""
+    import subprocess
+    root = RESULTS.parent
+    proc = subprocess.run(
+        [sys.executable, str(root / "tools" / "vclint.py"), "--json"],
+        capture_output=True, text=True, cwd=root)
+    try:
+        doc = json.loads(proc.stdout)
+        print(f"check vclint: {doc['total']} violations in "
+              f"{doc['files_checked']} files "
+              f"({len(doc['rules_run'])} rules)")
+    except (json.JSONDecodeError, KeyError):
+        print(proc.stdout, file=sys.stderr)
+    if proc.returncode:
+        err = proc.stderr.strip()
+        print(f"STATIC REGRESSION {err or 'vclint gate failed'}",
+              file=sys.stderr)
+    return proc.returncode
 
 
 def check_launches(benches) -> int:
@@ -111,7 +140,7 @@ def check_launches(benches) -> int:
         for f in failures:
             print(f"PERF REGRESSION {f}", file=sys.stderr)
         return 1
-    print("launch-count + events/sec + roofline check passed")
+    print("launch-count + events/sec + dedup + roofline check passed")
     return 0
 
 
@@ -132,6 +161,10 @@ def update_baseline(benches) -> None:
     print(f"wrote {BASELINE}: {json.dumps(out)}")
     write_roofline_baseline()
     print(f"wrote {ROOFLINE_BASELINE}")
+    import subprocess
+    subprocess.run(
+        [sys.executable, str(RESULTS.parent / "tools" / "vclint.py"),
+         "--update-baseline"], check=True, cwd=RESULTS.parent)
 
 
 def main(argv=None) -> None:
@@ -143,11 +176,11 @@ def main(argv=None) -> None:
                          "kernels,flat,flat_adam,sharded_flat,fleet,"
                          "compression,frontier,handout")
     ap.add_argument("--check", action="store_true",
-                    help="fail if any BENCH_*.json launch count regresses "
-                         "vs results/BASELINE_launches.json")
+                    help="fail if vclint or any BENCH_*.json launch count "
+                         "regresses vs the committed baselines")
     ap.add_argument("--update-baseline", action="store_true",
-                    help="rewrite results/BASELINE_launches.json from a "
-                         "fresh run of the launch-bearing suites")
+                    help="rewrite results/BASELINE_launches.json (and the "
+                         "vclint baseline) from a fresh run")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -178,7 +211,7 @@ def main(argv=None) -> None:
     }
 
     if args.check:
-        raise SystemExit(check_launches(benches))
+        raise SystemExit(check_vclint() or check_launches(benches))
     if args.update_baseline:
         update_baseline(benches)
         return

@@ -1,0 +1,8 @@
+"""vclint — repo-native static analysis for the VC training stack.
+
+Entry points: :func:`repro.analysis.framework.lint_paths` (library),
+``python -m tools.vclint`` (CLI), ``tests/test_vclint.py`` (tier-1
+ratchet).  See docs/LINT.md for the rule catalog.
+"""
+from repro.analysis.framework import (Report, Rule, Violation,  # noqa: F401
+                                      all_rules, lint_paths)

@@ -1,0 +1,85 @@
+"""Baseline ratchet for vclint.
+
+``results/BASELINE_vclint.json`` pins the per-rule violation counts the
+repo is allowed to carry.  The ratchet is monotone: a run whose count
+for any rule EXCEEDS the baseline fails (exit 1); a run that comes in
+under it passes but reports the slack so the baseline can be re-pinned
+with ``--update-baseline`` (counts may only shrink — the tool refuses
+to write a baseline that grows a rule's count without ``--force``
+semantics, which deliberately do not exist: fix the code instead).
+A missing baseline is exit 2, so CI distinguishes "regressed" from
+"never pinned".
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.framework import Report
+
+BASELINE_SCHEMA_VERSION = 1
+DEFAULT_BASELINE = Path("results") / "BASELINE_vclint.json"
+
+EXIT_CLEAN = 0
+EXIT_VIOLATIONS = 1
+EXIT_NO_BASELINE = 2
+
+
+def load_baseline(path: Path) -> Optional[Dict]:
+    path = Path(path)
+    if not path.is_file():
+        return None
+    data = json.loads(path.read_text())
+    data.setdefault("by_rule", {})
+    return data
+
+
+def write_baseline(path: Path, report: Report) -> Dict:
+    path = Path(path)
+    prev = load_baseline(path)
+    if prev is not None:
+        grew = {r: (prev["by_rule"].get(r, 0), n)
+                for r, n in report.by_rule.items()
+                if n > prev["by_rule"].get(r, 0)}
+        if grew:
+            detail = ", ".join(f"{r}: {a}->{b}"
+                               for r, (a, b) in sorted(grew.items()))
+            raise SystemExit(
+                f"vclint: refusing to re-pin a LARGER baseline "
+                f"({detail}); fix the violations instead")
+    data = {
+        "schema_version": BASELINE_SCHEMA_VERSION,
+        "total": report.total,
+        "by_rule": report.by_rule,
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    return data
+
+
+def check_ratchet(report: Report,
+                  baseline: Optional[Dict]) -> Tuple[int, List[str]]:
+    """(exit_code, messages) for a report against a loaded baseline."""
+    if baseline is None:
+        return EXIT_NO_BASELINE, [
+            "vclint: no baseline (results/BASELINE_vclint.json); run "
+            "with --update-baseline to pin one"]
+    msgs: List[str] = []
+    code = EXIT_CLEAN
+    pinned = baseline.get("by_rule", {})
+    for rule, count in sorted(report.by_rule.items()):
+        allowed = pinned.get(rule, 0)
+        if count > allowed:
+            code = EXIT_VIOLATIONS
+            msgs.append(f"vclint: {rule}: {count} > baseline {allowed} "
+                        f"(new violations; fix them — the ratchet only "
+                        f"shrinks)")
+    for rule, allowed in sorted(pinned.items()):
+        count = report.by_rule.get(rule, 0)
+        if count < allowed:
+            msgs.append(f"vclint: {rule}: {count} < baseline {allowed} "
+                        f"(improved; re-pin with --update-baseline)")
+    if code == EXIT_CLEAN and not msgs:
+        msgs.append("vclint: clean against baseline")
+    return code, msgs

@@ -1,0 +1,294 @@
+"""vclint core: rule registry, per-file AST dispatch, suppressions.
+
+Nine PRs of protocol/wire/kernel invariants (docs/PROTOCOL.md,
+docs/ROOFLINE.md, CHANGES.md) were enforced only *dynamically* — by
+pinned regressions and property tests that fire after a bug is already
+written.  This package promotes them to a static tier that runs at parse
+time, before a single test: each :class:`Rule` encodes one repo-native
+invariant as an AST check, the runner dispatches every linted file
+through every applicable rule exactly once, and the committed baseline
+(results/BASELINE_vclint.json, see ``baseline.py``) ratchets the
+violation count monotonically toward zero.
+
+Suppressions: ``# vclint: disable=rule-a,rule-b`` as a trailing comment
+suppresses those rules on that line; as a standalone comment line it
+suppresses them on the comment line AND the next source line.  Every
+suppression must actually suppress something — a disable comment that
+matched no violation is itself reported as ``unused-suppression`` (so
+stale waivers can't rot in place).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Type
+
+_SUPPRESS_RE = re.compile(r"#\s*vclint:\s*disable=([A-Za-z0-9_,\s-]+)")
+
+# rules the framework itself emits (not in the registry)
+META_RULES = ("parse-error", "unused-suppression")
+
+
+@dataclass(frozen=True, order=True)
+class Violation:
+    """One finding: ``path`` is repo-root-relative (posix)."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class FileContext:
+    """Everything a rule may inspect about one file, parsed once."""
+
+    def __init__(self, path: Path, relpath: str, source: str,
+                 repo_root: Path):
+        self.path = path
+        self.relpath = relpath                  # posix, repo-root-relative
+        self.repo_root = repo_root
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree: Optional[ast.AST] = None
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(source, filename=relpath)
+        except SyntaxError as e:                # reported as parse-error
+            self.parse_error = e
+
+    # -- path helpers rules key off --------------------------------------
+    def endswith(self, *suffixes: str) -> bool:
+        """True iff relpath ends with one of ``suffixes`` at a path-part
+        boundary (``core/simulator.py`` matches ``src/repro/core/...``
+        but never ``hardcore/simulator.py``)."""
+        for s in suffixes:
+            if self.relpath == s or self.relpath.endswith("/" + s):
+                return True
+        return False
+
+    def under(self, *dirs: str) -> bool:
+        """True iff some path component sequence matches ``dirs`` (e.g.
+        ``under('protocol')`` for any file in a protocol/ directory)."""
+        parts = self.relpath.split("/")
+        for d in dirs:
+            want = d.split("/")
+            n = len(want)
+            if any(parts[i:i + n] == want
+                   for i in range(len(parts) - n)):
+                return True
+        return False
+
+    def violation(self, rule: str, node, message: str) -> Violation:
+        line = getattr(node, "lineno", node if isinstance(node, int) else 0)
+        return Violation(path=self.relpath, line=int(line), rule=rule,
+                        message=message)
+
+
+class Rule:
+    """One invariant.  Subclasses set ``name``/``doc``, override
+    ``wants`` to scope themselves to the files the invariant lives in,
+    and yield :class:`Violation` from ``check``."""
+
+    name: str = ""
+    doc: str = ""
+
+    def wants(self, ctx: FileContext) -> bool:
+        return True
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator: instantiate and register a rule by its name."""
+    rule = cls()
+    if not rule.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    if rule.name in _REGISTRY:
+        raise ValueError(f"duplicate rule name {rule.name!r}")
+    _REGISTRY[rule.name] = rule
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    """The registry (rule modules are imported for their side effect)."""
+    from repro.analysis import rules as _rules  # noqa: F401  (registers)
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+class _Suppressions:
+    """Per-file map of line -> suppressed rule names, with usage
+    tracking for unused-suppression detection."""
+
+    def __init__(self, ctx: FileContext):
+        self.by_line: Dict[int, Set[str]] = {}
+        # comment line -> (rules, lines it covers) for usage reporting
+        self.sites: List[tuple] = []
+        for i, text in self._comments(ctx.source):
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            line = ctx.lines[i - 1] if i <= len(ctx.lines) else text
+            covered = [i]
+            if line.strip().startswith("#"):
+                covered.append(i + 1)       # standalone: covers next line
+            for ln in covered:
+                self.by_line.setdefault(ln, set()).update(rules)
+            self.sites.append((i, rules, covered, set()))
+
+    @staticmethod
+    def _comments(source: str) -> List[tuple]:
+        """(lineno, text) of REAL comment tokens only — a disable
+        example quoted inside a docstring is not a suppression."""
+        out: List[tuple] = []
+        try:
+            for tok in tokenize.generate_tokens(
+                    io.StringIO(source).readline):
+                if tok.type == tokenize.COMMENT:
+                    out.append((tok.start[0], tok.string))
+        except (tokenize.TokenizeError, IndentationError, SyntaxError):
+            pass                            # parse-error path reports it
+        return out
+
+    def filter(self, violations: List[Violation]) -> List[Violation]:
+        kept = []
+        for v in violations:
+            sup = self.by_line.get(v.line, ())
+            if v.rule in sup:
+                for (_, rules, covered, used) in self.sites:
+                    if v.line in covered and v.rule in rules:
+                        used.add(v.rule)
+                continue
+            kept.append(v)
+        return kept
+
+    def unused(self, ctx: FileContext) -> List[Violation]:
+        out = []
+        for (line, rules, _, used) in self.sites:
+            for r in sorted(rules - used):
+                out.append(ctx.violation(
+                    "unused-suppression", line,
+                    f"suppression for {r!r} matched no violation "
+                    f"(remove it, or the rule name is wrong)"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Report:
+    violations: List[Violation]
+    files_checked: int
+    rules_run: List[str]
+
+    @property
+    def by_rule(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for v in self.violations:
+            counts[v.rule] = counts.get(v.rule, 0) + 1
+        return dict(sorted(counts.items()))
+
+    @property
+    def total(self) -> int:
+        return len(self.violations)
+
+
+def iter_py_files(paths: Sequence[Path]) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    # dedupe, stable order
+    seen: Set[Path] = set()
+    out = []
+    for f in files:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            out.append(f)
+    return out
+
+
+def lint_paths(paths: Sequence[Path], *, repo_root: Path,
+               rules: Optional[Dict[str, Rule]] = None) -> Report:
+    """Lint every .py under ``paths``.  ``repo_root`` anchors the
+    relative paths in violations and lets cross-file rules (e.g.
+    kernel-triangle) find tests/ and sibling modules."""
+    repo_root = Path(repo_root).resolve()
+    active = rules if rules is not None else all_rules()
+    violations: List[Violation] = []
+    files = iter_py_files(paths)
+    for f in files:
+        fr = f.resolve()
+        try:
+            rel = fr.relative_to(repo_root).as_posix()
+        except ValueError:
+            rel = fr.as_posix()
+        try:
+            source = f.read_text()
+        except (OSError, UnicodeDecodeError) as e:
+            violations.append(Violation(rel, 0, "parse-error",
+                                        f"unreadable: {e}"))
+            continue
+        ctx = FileContext(f, rel, source, repo_root)
+        if ctx.parse_error is not None:
+            violations.append(ctx.violation(
+                "parse-error", ctx.parse_error.lineno or 0,
+                f"syntax error: {ctx.parse_error.msg}"))
+            continue
+        raw: List[Violation] = []
+        for rule in active.values():
+            if rule.wants(ctx):
+                raw.extend(rule.check(ctx))
+        sup = _Suppressions(ctx)
+        violations.extend(sup.filter(raw))
+        violations.extend(sup.unused(ctx))
+    violations.sort()
+    return Report(violations=violations, files_checked=len(files),
+                  rules_run=sorted(active))
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers shared by rules
+# ---------------------------------------------------------------------------
+
+def dotted(node: ast.AST) -> str:
+    """``a.b.c`` for Name/Attribute chains, '' for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def call_name(call: ast.Call) -> str:
+    return dotted(call.func)
+
+
+def walk_calls(node: ast.AST) -> Iterable[ast.Call]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            yield n

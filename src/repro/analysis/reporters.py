@@ -1,0 +1,60 @@
+"""Text and JSON reporters for vclint reports.
+
+The JSON shape is consumed by ``benchmarks/run.py --check`` and by the
+baseline ratchet, so it is part of the tool's contract (pinned by
+tests/test_vclint.py::test_json_reporter_schema):
+
+    {
+      "tool": "vclint",
+      "schema_version": 1,
+      "files_checked": <int>,
+      "rules_run": [<rule>, ...],
+      "total": <int>,
+      "by_rule": {<rule>: <count>, ...},
+      "violations": [{"path", "line", "rule", "message"}, ...]
+    }
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+from repro.analysis.framework import Report
+
+JSON_SCHEMA_VERSION = 1
+
+
+def text_report(report: Report, *, verbose: bool = True) -> str:
+    lines = []
+    if verbose:
+        for v in report.violations:
+            lines.append(v.format())
+    if report.violations:
+        by = ", ".join(f"{k}={n}" for k, n in report.by_rule.items())
+        lines.append(f"vclint: {report.total} violation"
+                     f"{'s' if report.total != 1 else ''} "
+                     f"({by}) in {report.files_checked} files")
+    else:
+        lines.append(f"vclint: clean ({report.files_checked} files, "
+                     f"{len(report.rules_run)} rules)")
+    return "\n".join(lines)
+
+
+def json_report(report: Report) -> Dict:
+    return {
+        "tool": "vclint",
+        "schema_version": JSON_SCHEMA_VERSION,
+        "files_checked": report.files_checked,
+        "rules_run": list(report.rules_run),
+        "total": report.total,
+        "by_rule": report.by_rule,
+        "violations": [
+            {"path": v.path, "line": v.line, "rule": v.rule,
+             "message": v.message}
+            for v in report.violations
+        ],
+    }
+
+
+def render_json(report: Report) -> str:
+    return json.dumps(json_report(report), indent=2, sort_keys=True) + "\n"

@@ -1,0 +1,3 @@
+"""Importing this package registers every built-in vclint rule."""
+from repro.analysis.rules import (kernels, layering, lease,  # noqa: F401
+                                  purity, wire)

@@ -1,0 +1,222 @@
+"""import-direction, hotpath-jax, and rng-stream.
+
+**import-direction** — the PR-4 seam: ``protocol/`` is the
+transport-agnostic lease/handout layer and must stay importable without
+pulling in the simulator or the baseline schemes (``core.simulator``,
+``core.baselines``); ``transfer/`` is the wire layer underneath both
+and must not import ``protocol`` at all.  One inverted import and
+vc_serve's cold-start drags the whole simulator in.
+
+**hotpath-jax** — the fleet hot path (``run_simulation``'s event loop
+and its nested per-event handlers; the ``*_flat`` scenario methods)
+processes millions of events; a single ``jax.*`` call per event is a
+dispatch + potential trace per event, the exact regression the
+events-per-sec gate exists to catch.  JAX setup BEFORE the loop is
+fine; numpy inside it is fine.
+
+**rng-stream** — reproducibility of the pinned sim cases requires every
+draw to come from a named ``np.random.default_rng``/``Generator``
+stream (or an explicit ``jax.random`` key).  Module-level
+``np.random.<sampler>`` and stdlib ``random.*`` calls share hidden
+global state across scenarios and break replay.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set, Tuple
+
+from repro.analysis.framework import (FileContext, Rule, Violation,
+                                      call_name, dotted, register)
+
+
+# ---------------------------------------------------------------------------
+# import-direction
+# ---------------------------------------------------------------------------
+
+def _imported_modules(tree: ast.AST) -> List[Tuple[ast.stmt, str]]:
+    """(node, dotted-module) for every import, with ImportFrom names
+    appended so ``from repro.core import simulator`` yields
+    ``repro.core.simulator``."""
+    out: List[Tuple[ast.stmt, str]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out.append((node, alias.name))
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            out.append((node, base))
+            for alias in node.names:
+                out.append((node, f"{base}.{alias.name}" if base
+                            else alias.name))
+    return out
+
+
+@register
+class ImportDirectionRule(Rule):
+    name = "import-direction"
+    doc = ("protocol/ must not import core.simulator or core.baselines; "
+           "transfer/ must not import protocol")
+
+    def wants(self, ctx: FileContext) -> bool:
+        return ctx.under("protocol") or ctx.under("transfer")
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        mods = _imported_modules(ctx.tree)
+        if ctx.under("protocol"):
+            for node, mod in mods:
+                for banned in ("core.simulator", "core.baselines"):
+                    if mod == banned or mod.endswith("." + banned) \
+                            or (mod + ".").find(banned + ".") >= 0:
+                        out.append(ctx.violation(
+                            "import-direction", node,
+                            f"protocol/ imports `{mod}` — the lease "
+                            f"layer must stay importable without the "
+                            f"simulator/baselines (PR-4 seam)"))
+                        break
+        if ctx.under("transfer"):
+            for node, mod in mods:
+                parts = mod.split(".")
+                if "protocol" in parts:
+                    out.append(ctx.violation(
+                        "import-direction", node,
+                        f"transfer/ imports `{mod}` — the wire layer "
+                        f"sits below protocol/ and must not depend on "
+                        f"it"))
+        # dedupe (ImportFrom emits base + expanded names)
+        seen: Set[tuple] = set()
+        uniq = []
+        for v in out:
+            k = (v.path, v.line, v.rule)
+            if k not in seen:
+                seen.add(k)
+                uniq.append(v)
+        return uniq
+
+
+# ---------------------------------------------------------------------------
+# hotpath-jax
+# ---------------------------------------------------------------------------
+
+def _jax_refs(node: ast.AST) -> Iterable[ast.AST]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and n.id in ("jax", "jnp"):
+            yield n
+        elif isinstance(n, ast.Attribute):
+            root = dotted(n).split(".", 1)[0]
+            if root in ("jax", "jnp"):
+                yield n
+
+
+@register
+class HotpathJaxRule(Rule):
+    name = "hotpath-jax"
+    doc = ("no per-event jax.*/jnp.* in core/simulator.py's event loop "
+           "or nested handlers, nor in scenarios/ *_flat methods")
+
+    def wants(self, ctx: FileContext) -> bool:
+        return ctx.endswith("core/simulator.py") or ctx.under("scenarios")
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        if ctx.endswith("core/simulator.py"):
+            self._check_simulator(ctx, out)
+        if ctx.under("scenarios"):
+            self._check_flat_methods(ctx, out)
+        return out
+
+    @staticmethod
+    def _check_simulator(ctx: FileContext, out: List[Violation]) -> None:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, ast.FunctionDef) \
+                    or fn.name != "run_simulation":
+                continue
+            hot: List[ast.AST] = []
+            for stmt in ast.walk(fn):
+                if isinstance(stmt, ast.While):
+                    hot.append(stmt)              # the event loop itself
+                elif isinstance(stmt, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)) \
+                        and stmt is not fn:
+                    hot.append(stmt)              # per-event handlers
+            seen: Set[int] = set()
+            for region in hot:
+                for ref in _jax_refs(region):
+                    line = getattr(ref, "lineno", 0)
+                    if line in seen:
+                        continue
+                    seen.add(line)
+                    out.append(ctx.violation(
+                        "hotpath-jax", ref,
+                        f"`{dotted(ref) or 'jax'}` inside "
+                        f"run_simulation's event loop / handler — one "
+                        f"dispatch per event; hoist it out of the loop "
+                        f"(numpy is fine here)"))
+
+    @staticmethod
+    def _check_flat_methods(ctx: FileContext, out: List[Violation]) -> None:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not fn.name.endswith("_flat"):
+                continue
+            seen: Set[int] = set()
+            for ref in _jax_refs(fn):
+                line = getattr(ref, "lineno", 0)
+                if line in seen:
+                    continue
+                seen.add(line)
+                out.append(ctx.violation(
+                    "hotpath-jax", ref,
+                    f"`{dotted(ref) or 'jax'}` in flat-path "
+                    f"`{fn.name}` — flat scenario methods run per "
+                    f"client-event and must stay numpy-only"))
+
+
+# ---------------------------------------------------------------------------
+# rng-stream
+# ---------------------------------------------------------------------------
+
+_NP_RANDOM_OK = frozenset({"default_rng", "Generator", "SeedSequence",
+                           "PCG64", "Philox", "BitGenerator"})
+
+
+@register
+class RngStreamRule(Rule):
+    name = "rng-stream"
+    doc = ("simulator/scenarios must draw from named np.random "
+           "Generator streams (or explicit jax.random keys), never "
+           "module-level random state")
+
+    def wants(self, ctx: FileContext) -> bool:
+        return (ctx.endswith("core/simulator.py") or ctx.under("scenarios")) \
+            and ("random" in ctx.source)
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for call in ast.walk(ctx.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            name = call_name(call)
+            parts = name.split(".")
+            if len(parts) >= 3 and parts[-3] == "np" \
+                    and parts[-2] == "random" \
+                    and parts[-1] not in _NP_RANDOM_OK:
+                out.append(ctx.violation(
+                    "rng-stream", call,
+                    f"`{name}()` draws from numpy's hidden global "
+                    f"stream — use a named `np.random.default_rng(seed)` "
+                    f"generator so pinned sim cases replay"))
+            elif len(parts) == 2 and parts[0] == "random":
+                out.append(ctx.violation(
+                    "rng-stream", call,
+                    f"stdlib `{name}()` uses module-level state — use a "
+                    f"named np.random Generator stream"))
+            elif name == "np.random.seed" or (
+                    len(parts) >= 2 and parts[-2] == "random"
+                    and parts[-1] == "seed" and parts[0] != "jax"):
+                out.append(ctx.violation(
+                    "rng-stream", call,
+                    f"`{name}()` reseeds global state — construct a "
+                    f"fresh named Generator instead"))
+        return out

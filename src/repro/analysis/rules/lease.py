@@ -1,0 +1,299 @@
+"""lease-lifecycle: every lease a function *manages* must reach a
+terminal transition on every exception path.
+
+The protocol's exactly-once guarantee (docs/PROTOCOL.md, pinned by
+tests/test_protocol.py) says a lease is live from registration until
+exactly one terminal transition (``assimilate`` / ``drop`` / ``expire``
+/ ``fail`` / ``_terminate`` / ``_release``) consumes it.  The dynamic
+tests catch double consumption; what they can NOT catch is the lease
+that never terminates because an exception skipped the transition — an
+orphan that holds its reconstruction base forever (under the default
+``timeout_s=inf`` nothing ever expires it).
+
+Scope — functions that MANAGE lifecycle, not ones that merely consume
+the API:
+
+* a direct ``Lease(...)`` construction, or
+* a ``.issue(...)`` / ``.open_window(...)`` result stored straight into
+  ``self`` state (attribute/subscript) — i.e. the function owns a
+  registry.
+
+A plain caller (``lease = coord.issue(...)`` then hand the lease to an
+event payload) is exempt: the coordinator registered the lease at issue
+and its deadline sweep owns recovery.
+
+Checks, in source order from the acquisition:
+
+* **registered-then-risky** — once the lease is registered (stored into
+  self state), any call that can raise must sit inside a ``try`` whose
+  ``except``/``finally`` applies a terminal transition to the lease.
+  Otherwise the exception leaves a live registered lease nothing will
+  ever consume.
+* **dead lease** — a constructed ``Lease(...)`` that is never
+  registered, returned, escaped, or terminated at all.
+
+Escape hatches the analysis recognizes (tracking stops, no violation):
+returning/yielding the lease (caller takes ownership) and passing the
+lease OBJECT to a non-``self`` callable (ownership unknown —
+conservative; reading ``lease.field`` does not escape it).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.framework import (FileContext, Rule, Violation,
+                                      call_name, dotted, register)
+
+TERMINAL_METHODS = frozenset({
+    "assimilate", "drop", "expire", "fail", "_terminate", "_release",
+    "drop_client",
+})
+
+# builtins that cannot meaningfully raise mid-protocol — not "risky"
+_SAFE_CALLS = frozenset({
+    "len", "isinstance", "getattr", "hasattr", "id", "repr", "str",
+    "int", "float", "bool", "tuple", "list", "dict", "set", "range",
+})
+
+_COMPOUND = (ast.If, ast.For, ast.While, ast.With, ast.Try)
+
+
+def _is_acquisition(value: ast.AST) -> bool:
+    if not isinstance(value, ast.Call):
+        return False
+    last = call_name(value).rsplit(".", 1)[-1]
+    return last in ("Lease", "issue", "open_window")
+
+
+def _bare_names(node: ast.AST) -> Set[str]:
+    """Names an expression passes BY OBJECT: ``lease`` in ``f(lease)``
+    or ``(unit, lease)``, but NOT in ``lease.deadline`` (a field read
+    dereferences the object without passing it)."""
+    if isinstance(node, ast.Name):
+        return {node.id}
+    if isinstance(node, ast.Attribute):
+        v = node.value
+        return set() if isinstance(v, (ast.Name, ast.Attribute)) \
+            else _bare_names(v)
+    out: Set[str] = set()
+    for child in ast.iter_child_nodes(node):
+        out |= _bare_names(child)
+    return out
+
+
+def _own_statements(func) -> Iterable[ast.stmt]:
+    """Statements of ``func`` excluding nested function/class bodies."""
+    def rec(stmts):
+        for s in stmts:
+            yield s
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                yield from rec(getattr(s, field, []) or [])
+            for h in getattr(s, "handlers", []) or []:
+                yield from rec(h.body)
+    yield from rec(func.body)
+
+
+class _FuncScan:
+    """Linear source-order scan of one function for one lease binding."""
+
+    def __init__(self, ctx: FileContext, func, var: Optional[str],
+                 registered: bool, site: ast.AST):
+        self.ctx = ctx
+        self.func = func
+        self.var = var                    # local name, None if attr-bound
+        self.registered = registered
+        self.site = site                  # acquisition node (for lineno)
+        self.done = False
+        self.saw_terminal = False
+        self.violations: List[Violation] = []
+
+    def _terminal_on_var(self, node: ast.AST) -> bool:
+        """A call that consumes the lease: ``x.drop(var)``,
+        ``var._release(...)``, ``self._terminate(var, ...)`` ..."""
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            name = call_name(call)
+            if name.rsplit(".", 1)[-1] not in TERMINAL_METHODS:
+                continue
+            if self.var is None:
+                return True               # attr-bound: any terminal counts
+            if name.split(".", 1)[0] == self.var:
+                return True               # var._release(...)
+            if any(self.var in _bare_names(a) for a in call.args):
+                return True               # coord.drop(var)
+        return False
+
+    def _try_protects(self, stack: List[ast.Try]) -> bool:
+        """Does any enclosing try have a handler/finally that reaches a
+        terminal transition for this lease?"""
+        for t in stack:
+            if any(self._terminal_on_var(h) for h in t.handlers):
+                return True
+            if t.finalbody and any(self._terminal_on_var(s)
+                                   for s in t.finalbody):
+                return True
+        return False
+
+    def _risky_call(self, stmt: ast.stmt) -> Optional[ast.Call]:
+        """First call in the statement that can raise (excluding safe
+        builtins and terminal calls)."""
+        for call in ast.walk(stmt):
+            if not isinstance(call, ast.Call):
+                continue
+            name = call_name(call)
+            if name in _SAFE_CALLS:
+                continue
+            if name.rsplit(".", 1)[-1] in TERMINAL_METHODS:
+                continue
+            return call
+        return None
+
+    def _is_registration(self, stmt: ast.stmt) -> bool:
+        """``self.<...> = var`` or ``self.x[...] = var`` — the lease
+        enters an owned registry."""
+        if self.var is None or not isinstance(stmt, ast.Assign):
+            return False
+        if not (isinstance(stmt.value, ast.Name)
+                and stmt.value.id == self.var):
+            return False
+        for t in stmt.targets:
+            if isinstance(t, ast.Attribute):
+                return True
+            if isinstance(t, ast.Subscript) and dotted(t.value):
+                return True
+        return False
+
+    def _escapes(self, stmt: ast.stmt) -> bool:
+        """The lease object leaves this function's custody: returned,
+        yielded, or passed to a non-self callable."""
+        if self.var is None:
+            return False
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Return) and n.value is not None \
+                    and self.var in _bare_names(n.value):
+                return True
+            if isinstance(n, (ast.Yield, ast.YieldFrom)) \
+                    and n.value is not None \
+                    and self.var in _bare_names(n.value):
+                return True
+            if isinstance(n, ast.Call):
+                name = call_name(n)
+                if name.split(".", 1)[0] in ("self", self.var):
+                    continue              # helper on the same object
+                if name.rsplit(".", 1)[-1] in TERMINAL_METHODS:
+                    continue
+                args = list(n.args) + [kw.value for kw in n.keywords]
+                if any(self.var in _bare_names(a) for a in args):
+                    return True
+        return False
+
+    def run(self, after: ast.stmt) -> List[Violation]:
+        """Scan statements strictly after the acquisition ``after``."""
+        started = False
+
+        def walk(stmts: List[ast.stmt], trys: List[ast.Try]):
+            nonlocal started
+            for stmt in stmts:
+                if self.done:
+                    return
+                if not started:
+                    if stmt is after:
+                        started = True
+                    elif isinstance(stmt, _COMPOUND):
+                        walk(self._children(stmt), trys
+                             + ([stmt] if isinstance(stmt, ast.Try) else []))
+                    continue
+                # -- after the acquisition --
+                if self._terminal_on_var(stmt):
+                    self.saw_terminal = True
+                    self.done = True
+                    return
+                if self._is_registration(stmt):
+                    self.registered = True
+                    continue
+                if self._escapes(stmt):
+                    self.done = True
+                    return
+                if self.registered:
+                    risky = self._risky_call(stmt)
+                    if risky is not None and not self._try_protects(trys):
+                        self.violations.append(self.ctx.violation(
+                            "lease-lifecycle", risky,
+                            f"`{call_name(risky) or 'call'}(...)` can raise "
+                            f"after the lease is registered, with no except/"
+                            f"finally applying a terminal transition on the "
+                            f"exception path"))
+                        self.done = True
+                        return
+                if isinstance(stmt, _COMPOUND):
+                    walk(self._children(stmt), trys
+                         + ([stmt] if isinstance(stmt, ast.Try) else []))
+
+        walk(self.func.body, [])
+        if (not self.done and not self.saw_terminal and not self.registered
+                and self.var is not None):
+            self.violations.append(self.ctx.violation(
+                "lease-lifecycle", self.site,
+                f"lease `{self.var}` is constructed but never registered, "
+                f"returned, or terminated — it can never reach a terminal "
+                f"transition"))
+        return self.violations
+
+    @staticmethod
+    def _children(stmt: ast.stmt) -> List[ast.stmt]:
+        out: List[ast.stmt] = []
+        for field in ("body", "orelse", "finalbody"):
+            out.extend(getattr(stmt, field, []) or [])
+        for h in getattr(stmt, "handlers", []) or []:
+            out.extend(h.body)
+        return out
+
+
+@register
+class LeaseLifecycleRule(Rule):
+    name = "lease-lifecycle"
+    doc = ("functions that construct a Lease or register issued leases "
+           "must reach a terminal transition on every exception path")
+
+    def wants(self, ctx: FileContext) -> bool:
+        return ("Lease(" in ctx.source or ".issue(" in ctx.source
+                or ".open_window(" in ctx.source)
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for func in ast.walk(ctx.tree):
+            if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for stmt, var, registered, site in self._acquisitions(func):
+                scan = _FuncScan(ctx, func, var, registered, site)
+                out.extend(scan.run(stmt))
+        return out
+
+    @staticmethod
+    def _acquisitions(func) -> List[Tuple[ast.stmt, Optional[str],
+                                          bool, ast.AST]]:
+        """(stmt, local var or None, registered-at-binding, call node)
+        for every lease acquisition the function manages — nested
+        function bodies excluded (they get their own pass)."""
+        out = []
+        for stmt in _own_statements(func):
+            if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+                continue
+            if not _is_acquisition(stmt.value):
+                continue
+            tgt = stmt.targets[0]
+            last = call_name(stmt.value).rsplit(".", 1)[-1]
+            if isinstance(tgt, ast.Name):
+                # a plain `.issue()` caller does not manage the registry;
+                # Lease() constructors always do
+                if last == "Lease":
+                    out.append((stmt, tgt.id, False, stmt.value))
+            elif isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                # stored straight into self state: managed & registered
+                out.append((stmt, None, True, stmt.value))
+        return out

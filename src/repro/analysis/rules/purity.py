@@ -1,0 +1,230 @@
+"""jit-purity and scheme-purity.
+
+**jit-purity** — bodies reachable from a trace context (``@jax.jit``,
+``functools.partial(jax.jit, ...)``, a kernel handed to
+``pl.pallas_call`` or ``shard_map``) execute under tracing: host syncs
+(``.item()``, ``np.asarray``, ``float()`` of a traced value) force a
+device round-trip per call, Python ``random``/``time`` freeze a single
+trace-time value into the compiled program, and ``global``/``nonlocal``
+writes leak trace-time state.  All were bugs the roofline work had to
+chase dynamically; here they fail at parse time.
+
+**scheme-purity** — ``ServerScheme`` methods are pure transition
+functions over their ``SchemeState``: the coordinator owns the lease
+registry and transport, checkpoints scheme state as a pytree, and
+replays transitions on resume.  A scheme method that mutates ``self``
+(hidden state the checkpoint never sees), writes through a
+coordinator/transport/lease parameter, or performs I/O breaks resume
+and the hierarchical-aggregation replays.  Configuration belongs in
+``__init__``; mutable state belongs in the ``SchemeState``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set
+
+from repro.analysis.framework import (FileContext, Rule, Violation,
+                                      call_name, dotted, register)
+
+_TRACE_TAILS = ("jit", "pallas_call", "shard_map")
+
+_HOST_SYNC_CALLS = frozenset({
+    "np.asarray", "np.array", "onp.asarray", "numpy.asarray",
+    "np.frombuffer", "jax.device_get",
+})
+_TIME_CALLS = frozenset({
+    "time.time", "time.perf_counter", "time.monotonic", "time.sleep",
+    "time.process_time",
+})
+
+
+def _decorator_traced(dec: ast.AST) -> bool:
+    d = dotted(dec)
+    if d.rsplit(".", 1)[-1] in _TRACE_TAILS:
+        return True
+    if isinstance(dec, ast.Call):
+        name = call_name(dec)
+        if name.rsplit(".", 1)[-1] in _TRACE_TAILS:
+            return True
+        if name.rsplit(".", 1)[-1] == "partial":
+            return any(dotted(a).rsplit(".", 1)[-1] in _TRACE_TAILS
+                       for a in dec.args)
+    return False
+
+
+def _kernel_arg_names(tree: ast.AST) -> Set[str]:
+    """Names passed as the traced callable to pallas_call/shard_map —
+    directly or wrapped in functools.partial(fn, ...)."""
+    names: Set[str] = set()
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        if call_name(call).rsplit(".", 1)[-1] not in ("pallas_call",
+                                                      "shard_map"):
+            continue
+        if not call.args:
+            continue
+        arg = call.args[0]
+        if isinstance(arg, ast.Name):
+            names.add(arg.id)
+        elif (isinstance(arg, ast.Call)
+              and call_name(arg).rsplit(".", 1)[-1] == "partial"
+              and arg.args and isinstance(arg.args[0], ast.Name)):
+            names.add(arg.args[0].id)
+    return names
+
+
+@register
+class JitPurityRule(Rule):
+    name = "jit-purity"
+    doc = ("no host syncs, Python random/time, or mutable-global capture "
+           "inside jit/pallas_call/shard_map-traced bodies")
+
+    def wants(self, ctx: FileContext) -> bool:
+        return ("jit" in ctx.source or "pallas_call" in ctx.source
+                or "shard_map" in ctx.source)
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        kernel_names = _kernel_arg_names(ctx.tree)
+        out: List[Violation] = []
+        for func in ast.walk(ctx.tree):
+            if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            traced = (func.name in kernel_names
+                      or any(_decorator_traced(d)
+                             for d in func.decorator_list))
+            if traced:
+                self._scan(ctx, func, out)
+        return out
+
+    def _scan(self, ctx: FileContext, func, out: List[Violation]) -> None:
+        for node in ast.walk(func):
+            if isinstance(node, ast.Global):
+                out.append(ctx.violation(
+                    "jit-purity", node,
+                    f"`global {', '.join(node.names)}` inside traced "
+                    f"`{func.name}` captures mutable module state at "
+                    f"trace time"))
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item":
+                out.append(ctx.violation(
+                    "jit-purity", node,
+                    f"`.item()` inside traced `{func.name}` is a host "
+                    f"sync per call"))
+            elif name in _HOST_SYNC_CALLS:
+                out.append(ctx.violation(
+                    "jit-purity", node,
+                    f"`{name}(...)` inside traced `{func.name}` "
+                    f"materializes on host — use jnp inside traces"))
+            elif name in _TIME_CALLS:
+                out.append(ctx.violation(
+                    "jit-purity", node,
+                    f"`{name}()` inside traced `{func.name}` freezes a "
+                    f"trace-time clock value into the compiled program"))
+            elif name.split(".", 1)[0] == "random":
+                out.append(ctx.violation(
+                    "jit-purity", node,
+                    f"stdlib `{name}()` inside traced `{func.name}` "
+                    f"freezes a trace-time sample — thread a jax.random "
+                    f"key instead"))
+            elif (name in ("float", "int", "bool") and len(node.args) == 1
+                  and isinstance(node.args[0], (ast.Name, ast.Call))):
+                out.append(ctx.violation(
+                    "jit-purity", node,
+                    f"`{name}(...)` of a non-literal inside traced "
+                    f"`{func.name}` concretizes a traced value (host "
+                    f"sync); keep it symbolic or mark the arg static"))
+
+
+# ---------------------------------------------------------------------------
+
+
+_IO_ROOTS = frozenset({"os", "socket", "subprocess", "shutil", "requests",
+                       "urllib"})
+_FOREIGN_PARAMS = frozenset({"coordinator", "coord", "transport", "hub",
+                             "server", "srv", "lease"})
+_INIT_METHODS = frozenset({"__init__", "__post_init__"})
+
+
+def _scheme_classes(tree: ast.AST) -> List[ast.ClassDef]:
+    """Classes that ARE ServerScheme or transitively inherit from it
+    within this module."""
+    classes = [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]
+    marked: Set[str] = {c.name for c in classes if c.name == "ServerScheme"}
+    marked |= {c.name for c in classes
+               if any(dotted(b).rsplit(".", 1)[-1] == "ServerScheme"
+                      for b in c.bases)}
+    changed = True
+    while changed:
+        changed = False
+        for c in classes:
+            if c.name in marked:
+                continue
+            if any(dotted(b).rsplit(".", 1)[-1] in marked
+                   for b in c.bases):
+                marked.add(c.name)
+                changed = True
+    return [c for c in classes if c.name in marked]
+
+
+@register
+class SchemePurityRule(Rule):
+    name = "scheme-purity"
+    doc = ("ServerScheme methods are pure SchemeState transitions: no "
+           "self-mutation outside __init__, no writes through "
+           "coordinator/transport/lease parameters, no I/O")
+
+    def wants(self, ctx: FileContext) -> bool:
+        return "ServerScheme" in ctx.source
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for cls in _scheme_classes(ctx.tree):
+            for meth in cls.body:
+                if not isinstance(meth, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if meth.name in _INIT_METHODS:
+                    continue
+                self._scan_method(ctx, cls, meth, out)
+        return out
+
+    def _scan_method(self, ctx, cls, meth, out) -> None:
+        params = {a.arg for a in meth.args.args}
+        foreign = params & _FOREIGN_PARAMS
+        for node in ast.walk(meth):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    root = dotted(t if not isinstance(t, ast.Subscript)
+                                  else t.value).split(".", 1)[0]
+                    if isinstance(t, (ast.Attribute, ast.Subscript)):
+                        if root == "self":
+                            out.append(ctx.violation(
+                                "scheme-purity", node,
+                                f"{cls.name}.{meth.name} mutates `self` — "
+                                f"scheme methods are stateless; mutable "
+                                f"state belongs in the SchemeState"))
+                        elif root in foreign:
+                            out.append(ctx.violation(
+                                "scheme-purity", node,
+                                f"{cls.name}.{meth.name} writes through "
+                                f"`{root}` — coordinator/transport/lease "
+                                f"state is owned by the coordinator"))
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                if name in ("open", "input"):
+                    out.append(ctx.violation(
+                        "scheme-purity", node,
+                        f"{cls.name}.{meth.name} performs I/O "
+                        f"(`{name}`) — schemes must be replayable pure "
+                        f"transitions"))
+                elif name.split(".", 1)[0] in _IO_ROOTS:
+                    out.append(ctx.violation(
+                        "scheme-purity", node,
+                        f"{cls.name}.{meth.name} calls `{name}` — "
+                        f"schemes must not touch the OS/network"))

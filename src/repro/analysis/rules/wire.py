@@ -1,0 +1,181 @@
+"""wire-schema: the on-wire layout in transfer/wire.py may only change
+together with a WIRE_VERSION bump.
+
+The wire format is consumed by readers that were handed out earlier
+(content-addressed handout cache, fleet subscribers): reinterpreting a
+header field, renumbering a ``KIND_*`` tag, or changing the header size
+at the SAME ``WIRE_VERSION`` silently corrupts every frame already in
+flight.  The v2→v3 transition (CHANGES.md) established the discipline:
+v3's ``_HDR3`` is a strict append-only extension of v2's ``_HDR`` and
+``_PEEK`` lets readers reject unknown versions before parsing anything
+else.
+
+This rule parses the module-level constants of ``transfer/wire.py``
+straight off the AST and compares them with the pinned fixture
+``analysis/wire_schema.json``:
+
+* ``WIRE_VERSION`` equal to the pin → every pinned constant (magic,
+  emit version, ``KIND_*`` values, ``_HDR``/``_HDR3``/``_CRC``/
+  ``_PEEK`` formats, derived header byte sizes) must match exactly;
+  any drift is *reinterpretation without a version bump*.
+* ``WIRE_VERSION`` different from the pin → a single violation telling
+  the author to re-pin the fixture deliberately (the bump is reviewed
+  via the fixture diff, never waved through).
+* regardless of version: ``_HDR3`` must extend ``_HDR`` append-only,
+  and no two ``KIND_*`` tags may share a value.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import struct
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Union
+
+from repro.analysis.framework import (FileContext, Rule, Violation,
+                                      call_name, register)
+
+_SCHEMA_PATH = Path(__file__).resolve().parent.parent / "wire_schema.json"
+
+
+def load_schema() -> dict:
+    return json.loads(_SCHEMA_PATH.read_text())
+
+
+def _module_constants(tree: ast.AST) -> Dict[str, tuple]:
+    """name -> (node, value) for module-level ``NAME = <literal>`` and
+    ``NAME = struct.Struct("<fmt>")`` assignments."""
+    out: Dict[str, tuple] = {}
+    for stmt in getattr(tree, "body", []):
+        if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+            continue
+        tgt = stmt.targets[0]
+        if not isinstance(tgt, ast.Name):
+            continue
+        val = stmt.value
+        if isinstance(val, ast.Constant):
+            out[tgt.id] = (stmt, val.value)
+        elif (isinstance(val, ast.Call)
+              and call_name(val).rsplit(".", 1)[-1] == "Struct"
+              and val.args and isinstance(val.args[0], ast.Constant)
+              and isinstance(val.args[0].value, str)):
+            out[tgt.id] = (stmt, ("struct", val.args[0].value))
+    return out
+
+
+@register
+class WireSchemaRule(Rule):
+    name = "wire-schema"
+    doc = ("transfer/wire.py header/kind constants must match the pinned "
+           "schema fixture unless WIRE_VERSION is bumped (and the fixture "
+           "re-pinned)")
+
+    def wants(self, ctx: FileContext) -> bool:
+        return ctx.endswith("transfer/wire.py")
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        schema = load_schema()
+        consts = _module_constants(ctx.tree)
+        out: List[Violation] = []
+
+        def node_for(name: str):
+            entry = consts.get(name)
+            return entry[0] if entry else 1
+
+        def value_of(name: str):
+            entry = consts.get(name)
+            if entry is None:
+                return None
+            v = entry[1]
+            return v[1] if isinstance(v, tuple) else v
+
+        version = value_of("WIRE_VERSION")
+        if version is None:
+            out.append(ctx.violation(
+                "wire-schema", 1,
+                "WIRE_VERSION constant missing from wire module"))
+            return out
+
+        if version != schema["wire_version"]:
+            out.append(ctx.violation(
+                "wire-schema", node_for("WIRE_VERSION"),
+                f"WIRE_VERSION changed {schema['wire_version']} -> "
+                f"{version}: re-pin analysis/wire_schema.json so the new "
+                f"layout is reviewed (see docs/LINT.md)"))
+            # at a new version the old pins no longer apply; still run
+            # the version-independent structural checks below
+        else:
+            pins: List[tuple] = [
+                ("MAGIC", schema["magic"].encode()),
+                ("_EMIT_VERSION", schema["emit_version"]),
+            ]
+            pins += list(schema["kinds"].items())
+            for name, want in pins:
+                got = value_of(name)
+                if got != want:
+                    out.append(ctx.violation(
+                        "wire-schema", node_for(name),
+                        f"{name} = {got!r} differs from pinned {want!r} "
+                        f"without a WIRE_VERSION bump"))
+            for name, want in schema["structs"].items():
+                got = value_of(name)
+                if got != want:
+                    out.append(ctx.violation(
+                        "wire-schema", node_for(name),
+                        f"{name} format {got!r} differs from pinned "
+                        f"{want!r}: header reinterpretation requires a "
+                        f"WIRE_VERSION bump"))
+            self._check_sizes(ctx, schema, value_of, node_for, out)
+
+        self._structural(ctx, consts, value_of, node_for, out)
+        return out
+
+    @staticmethod
+    def _check_sizes(ctx, schema, value_of, node_for, out):
+        """Derived header sizes (HDR + CRC) must match the pinned byte
+        counts — catches size drift even if someone renames formats."""
+        for fmt_name, size_key in (("_HDR", "header_bytes"),
+                                   ("_HDR3", "header_bytes_v3")):
+            fmt = value_of(fmt_name)
+            crc = value_of("_CRC")
+            if not isinstance(fmt, str) or not isinstance(crc, str):
+                continue
+            try:
+                got = struct.calcsize(fmt) + struct.calcsize(crc)
+            except struct.error:
+                out.append(ctx.violation(
+                    "wire-schema", node_for(fmt_name),
+                    f"{fmt_name} format {fmt!r} is not a valid struct "
+                    f"format"))
+                continue
+            if got != schema[size_key]:
+                out.append(ctx.violation(
+                    "wire-schema", node_for(fmt_name),
+                    f"{fmt_name}+_CRC is {got} bytes, pinned "
+                    f"{schema[size_key]}: header-size change requires a "
+                    f"WIRE_VERSION bump"))
+
+    @staticmethod
+    def _structural(ctx, consts, value_of, node_for, out):
+        hdr, hdr3 = value_of("_HDR"), value_of("_HDR3")
+        if isinstance(hdr, str) and isinstance(hdr3, str) \
+                and not hdr3.startswith(hdr):
+            out.append(ctx.violation(
+                "wire-schema", node_for("_HDR3"),
+                f"_HDR3 {hdr3!r} does not extend _HDR {hdr!r} "
+                f"append-only: v3 readers must be able to parse the v2 "
+                f"prefix in place"))
+        seen: Dict[int, str] = {}
+        for name in sorted(consts):
+            if not name.startswith("KIND_"):
+                continue
+            v = value_of(name)
+            if not isinstance(v, int):
+                continue
+            if v in seen:
+                out.append(ctx.violation(
+                    "wire-schema", node_for(name),
+                    f"{name} reuses wire tag {v} already taken by "
+                    f"{seen[v]}"))
+            else:
+                seen[v] = name

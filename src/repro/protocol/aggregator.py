@@ -92,9 +92,16 @@ class Aggregator(Coordinator):
         self.up_lease = self.hub.issue(
             cid=self.agg_id, uid=next(self._window_uid), round=round,
             read_version=rv, base=base, now=now, deadline=deadline)
-        # transient fold state: the aggregator owns no durable scheme
-        # state, so a lost window costs exactly one window of results
-        self.state = self.scheme.init_state(self.up_lease.base)
+        try:
+            # transient fold state: the aggregator owns no durable scheme
+            # state, so a lost window costs exactly one window of results
+            self.state = self.scheme.init_state(self.up_lease.base)
+        except BaseException:
+            # a failed seed must not wedge the aggregator holding a live
+            # upstream lease no open_window() could ever replace
+            lease, self.up_lease = self.up_lease, None
+            self.hub.drop(lease)
+            raise
         self.window_retention = 1.0
         self.window_merged = 0
         return self.up_lease

@@ -149,14 +149,22 @@ class Coordinator:
         self.leases[key] = lease
         self._seq += 1
         lease._issue_seq = lease._dl_seq = self._seq
-        # nothing with an infinite deadline can ever expire: pushing it
-        # would grow the heap unboundedly under the default timeout_s=inf
-        # (terminal transitions clean the heap only lazily, and expire()
-        # can never pop past a finite root to reach the inf entries)
-        if lease.deadline != math.inf:
-            heapq.heappush(self._lease_heap, (lease.deadline, self._seq, key))
-        self._cid_leases.setdefault(cid, {})[key] = None
-        self.scheme.on_issue(self.state, lease)
+        try:
+            # nothing with an infinite deadline can ever expire: pushing it
+            # would grow the heap unboundedly under the default timeout_s=inf
+            # (terminal transitions clean the heap only lazily, and expire()
+            # can never pop past a finite root to reach the inf entries)
+            if lease.deadline != math.inf:
+                heapq.heappush(self._lease_heap,
+                               (lease.deadline, self._seq, key))
+            self._cid_leases.setdefault(cid, {})[key] = None
+            self.scheme.on_issue(self.state, lease)
+        except BaseException:
+            # a half-issued lease must not outlive the failure as a live
+            # registry entry: under the default timeout_s=inf nothing
+            # would ever expire it, and the unit could never be reissued
+            self._terminate(lease, LEASE_DROPPED)
+            raise
         return lease
 
     def _deliver_handout(self, lease: Lease, fp: F.FlatParams

@@ -1,0 +1,515 @@
+"""vclint: the static tier.
+
+Two jobs: (1) the RATCHET — lint the real ``src/repro`` tree against the
+committed baseline so a new violation fails tier 1 before any dynamic
+test runs; (2) fixture coverage for every rule — tiny synthetic modules
+that must trip / must pass each rule, including the three acceptance
+cases (lease issued without a terminal transition on an exception path,
+wire header reinterpretation without a version bump, ``jax.*`` inside a
+simulator event handler), plus the framework itself (suppressions,
+unused-suppression detection, JSON reporter schema, baseline ratchet
+semantics).
+"""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import baseline as B
+from repro.analysis.framework import all_rules, lint_paths
+from repro.analysis.reporters import JSON_SCHEMA_VERSION, json_report
+
+pytestmark = pytest.mark.lint
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BASELINE = REPO_ROOT / "results" / "BASELINE_vclint.json"
+
+# real wire constants, reused by the wire fixtures
+WIRE_OK = """
+import struct
+MAGIC = b"VCWF"
+WIRE_VERSION = 3
+KIND_DENSE = 0
+KIND_SPARSE = 1
+KIND_SHARD = 2
+KIND_AGG = 3
+_EMIT_VERSION = 2
+_HDR = struct.Struct("<4sHBBQQIfIfQQQ")
+_HDR3 = struct.Struct("<4sHBBQQIfIfQQQf")
+_CRC = struct.Struct("<I")
+_PEEK = struct.Struct("<4sH")
+HEADER_BYTES = _HDR.size + _CRC.size
+HEADER_BYTES_V3 = _HDR3.size + _CRC.size
+"""
+
+
+def lint_files(tmp_path, files):
+    """Write {relpath: code} under tmp_path and lint the tree rooted
+    there (suffix-based path matching lets fixtures impersonate repo
+    modules like core/simulator.py)."""
+    for rel, code in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(code))
+    return lint_paths([tmp_path], repo_root=tmp_path)
+
+
+def rules_hit(report):
+    return set(report.by_rule)
+
+
+# ---------------------------------------------------------------------------
+# the ratchet over the real tree
+# ---------------------------------------------------------------------------
+
+def test_src_repro_clean_against_baseline():
+    if not BASELINE.is_file():
+        pytest.skip("no results/BASELINE_vclint.json in this checkout")
+    report = lint_paths([REPO_ROOT / "src" / "repro"], repo_root=REPO_ROOT)
+    code, msgs = B.check_ratchet(report, B.load_baseline(BASELINE))
+    assert code == B.EXIT_CLEAN, "\n".join(
+        [v.format() for v in report.violations] + msgs)
+
+
+def test_registry_has_the_eight_rules():
+    names = set(all_rules())
+    assert {"lease-lifecycle", "wire-schema", "jit-purity",
+            "kernel-triangle", "import-direction", "hotpath-jax",
+            "rng-stream", "scheme-purity"} <= names
+
+
+# ---------------------------------------------------------------------------
+# acceptance case (a): lease without terminal transition on an
+# exception path
+# ---------------------------------------------------------------------------
+
+def test_lease_registered_then_risky_fires(tmp_path):
+    report = lint_files(tmp_path, {"protocol/coordinator.py": """
+        class Coordinator:
+            def issue(self, key):
+                lease = Lease(key)
+                self.leases[key] = lease
+                self.scheme.on_issue(lease)
+                return lease
+    """})
+    assert report.by_rule.get("lease-lifecycle") == 1
+    assert "terminal transition" in report.violations[0].message
+
+
+def test_lease_protected_by_except_passes(tmp_path):
+    report = lint_files(tmp_path, {"protocol/coordinator.py": """
+        class Coordinator:
+            def issue(self, key):
+                lease = Lease(key)
+                self.leases[key] = lease
+                try:
+                    self.scheme.on_issue(lease)
+                except BaseException:
+                    self.drop(lease)
+                    raise
+                return lease
+    """})
+    assert "lease-lifecycle" not in rules_hit(report)
+
+
+def test_attr_registered_lease_risky_fires(tmp_path):
+    report = lint_files(tmp_path, {"protocol/aggregator.py": """
+        class Agg:
+            def open_window(self):
+                self.up_lease = self.hub.issue(cid=1)
+                self.state = self.scheme.init_state(self.up_lease.base)
+                return self.up_lease
+    """})
+    assert report.by_rule.get("lease-lifecycle") == 1
+
+
+def test_dead_lease_fires_and_returned_lease_passes(tmp_path):
+    report = lint_files(tmp_path, {"protocol/leak.py": """
+        def forgot():
+            lease = Lease(1)
+            count = 2
+
+        def handed_back():
+            lease = Lease(1)
+            return lease
+    """})
+    assert report.by_rule.get("lease-lifecycle") == 1
+    assert "never registered" in report.violations[0].message
+
+
+def test_plain_issue_consumer_is_exempt(tmp_path):
+    report = lint_files(tmp_path, {"core/driver.py": """
+        def dispatch(coord, unit):
+            lease = coord.issue(cid=unit.cid, uid=unit.uid)
+            push(Event(lease=lease))
+    """})
+    assert "lease-lifecycle" not in rules_hit(report)
+
+
+# ---------------------------------------------------------------------------
+# acceptance case (b): wire reinterpretation without a version bump
+# ---------------------------------------------------------------------------
+
+def test_wire_matches_pin_passes(tmp_path):
+    report = lint_files(tmp_path, {"transfer/wire.py": WIRE_OK})
+    assert "wire-schema" not in rules_hit(report)
+
+
+def test_wire_header_reinterpreted_without_bump_fires(tmp_path):
+    bad = WIRE_OK.replace('_HDR = struct.Struct("<4sHBBQQIfIfQQQ")',
+                          '_HDR = struct.Struct("<4sHBBQQIfIfQQI")')
+    report = lint_files(tmp_path, {"transfer/wire.py": bad})
+    msgs = [v.message for v in report.violations
+            if v.rule == "wire-schema"]
+    assert any("WIRE_VERSION bump" in m for m in msgs)
+
+
+def test_wire_kind_renumbered_fires(tmp_path):
+    bad = WIRE_OK.replace("KIND_AGG = 3", "KIND_AGG = 2")
+    report = lint_files(tmp_path, {"transfer/wire.py": bad})
+    msgs = [v.message for v in report.violations
+            if v.rule == "wire-schema"]
+    assert any("KIND_AGG" in m for m in msgs)
+    assert any("reuses wire tag" in m for m in msgs)
+
+
+def test_wire_version_bump_requires_repin(tmp_path):
+    bumped = WIRE_OK.replace("WIRE_VERSION = 3", "WIRE_VERSION = 4")
+    report = lint_files(tmp_path, {"transfer/wire.py": bumped})
+    msgs = [v.message for v in report.violations
+            if v.rule == "wire-schema"]
+    assert len(msgs) == 1 and "re-pin" in msgs[0]
+
+
+def test_wire_v3_header_must_extend_v2(tmp_path):
+    bad = WIRE_OK.replace('_HDR3 = struct.Struct("<4sHBBQQIfIfQQQf")',
+                          '_HDR3 = struct.Struct("<4sHBBfQQIfIfQQQ")')
+    report = lint_files(tmp_path, {"transfer/wire.py": bad})
+    msgs = [v.message for v in report.violations
+            if v.rule == "wire-schema"]
+    assert any("append-only" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# acceptance case (c): jax.* in a simulator event handler
+# ---------------------------------------------------------------------------
+
+SIM_HOT = """
+import numpy as np
+import jax.numpy as jnp
+
+def run_simulation(cfg):
+    rng = np.random.default_rng(cfg.seed)
+
+    def dispatch(ev):
+        return jnp.asarray(ev.payload)
+
+    while pending:
+        dispatch(pop())
+"""
+
+
+def test_jax_in_event_handler_fires(tmp_path):
+    report = lint_files(tmp_path, {"core/simulator.py": SIM_HOT})
+    assert report.by_rule.get("hotpath-jax", 0) >= 1
+    assert any("event loop" in v.message for v in report.violations)
+
+
+def test_jax_before_loop_passes(tmp_path):
+    report = lint_files(tmp_path, {"core/simulator.py": """
+        import jax
+        import numpy as np
+
+        def run_simulation(cfg):
+            key = jax.random.PRNGKey(cfg.seed)
+            step = make_step(key)
+            while pending:
+                step(pop())
+    """})
+    assert "hotpath-jax" not in rules_hit(report)
+
+
+def test_jnp_in_scenario_flat_path_fires(tmp_path):
+    report = lint_files(tmp_path, {"scenarios/probe.py": """
+        import jax.numpy as jnp
+
+        class Probe:
+            def client_train_flat(self, buf):
+                return jnp.square(buf)
+    """})
+    assert report.by_rule.get("hotpath-jax") == 1
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+# ---------------------------------------------------------------------------
+
+def test_item_inside_jit_fires(tmp_path):
+    report = lint_files(tmp_path, {"kernels/bad.py": """
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x.sum().item()
+    """})
+    assert report.by_rule.get("jit-purity") == 1
+
+
+def test_global_capture_in_pallas_kernel_fires(tmp_path):
+    report = lint_files(tmp_path, {"kernels/bad2.py": """
+        import random
+        _hits = 0
+
+        def _kern(x_ref, o_ref):
+            global _hits
+            _hits += 1
+            o_ref[...] = x_ref[...] * random.random()
+
+        def entry(x):
+            return pl.pallas_call(_kern, out_shape=x)(x)
+    """})
+    msgs = [v.message for v in report.violations
+            if v.rule == "jit-purity"]
+    assert any("global" in m for m in msgs)
+    assert any("random" in m for m in msgs)
+
+
+def test_host_helpers_outside_trace_pass(tmp_path):
+    report = lint_files(tmp_path, {"kernels/good.py": """
+        import numpy as np
+
+        def launch_count():
+            return np.asarray(_counts).sum().item()
+    """})
+    assert "jit-purity" not in rules_hit(report)
+
+
+# ---------------------------------------------------------------------------
+# import-direction
+# ---------------------------------------------------------------------------
+
+def test_protocol_importing_simulator_fires(tmp_path):
+    report = lint_files(tmp_path, {"protocol/bad.py": """
+        from repro.core import simulator
+    """})
+    assert report.by_rule.get("import-direction") == 1
+
+
+def test_transfer_importing_protocol_fires(tmp_path):
+    report = lint_files(tmp_path, {"transfer/bad.py": """
+        from repro.protocol.types import Lease
+    """})
+    assert report.by_rule.get("import-direction", 0) >= 1
+
+
+def test_allowed_imports_pass(tmp_path):
+    report = lint_files(tmp_path, {
+        "protocol/ok.py": "from repro.core import flat\n",
+        "transfer/ok.py": "import numpy as np\n",
+    })
+    assert "import-direction" not in rules_hit(report)
+
+
+# ---------------------------------------------------------------------------
+# rng-stream
+# ---------------------------------------------------------------------------
+
+def test_module_level_np_random_fires(tmp_path):
+    report = lint_files(tmp_path, {"scenarios/bad.py": """
+        import numpy as np
+
+        def jitter(n):
+            return np.random.rand(n)
+    """})
+    assert report.by_rule.get("rng-stream") == 1
+
+
+def test_named_generator_passes(tmp_path):
+    report = lint_files(tmp_path, {"scenarios/good.py": """
+        import numpy as np
+
+        def jitter(rng, n):
+            return np.random.default_rng(7).random(n) + rng.random(n)
+    """})
+    assert "rng-stream" not in rules_hit(report)
+
+
+# ---------------------------------------------------------------------------
+# scheme-purity
+# ---------------------------------------------------------------------------
+
+def test_scheme_self_mutation_fires(tmp_path):
+    report = lint_files(tmp_path, {"core/bad_scheme.py": """
+        class Sticky(ServerScheme):
+            def assimilate(self, state, payload, meta):
+                self.last_cid = meta.cid
+                return state
+    """})
+    assert report.by_rule.get("scheme-purity") == 1
+
+
+def test_scheme_io_and_subclass_chain_fires(tmp_path):
+    report = lint_files(tmp_path, {"core/bad_scheme2.py": """
+        class Base(ServerScheme):
+            pass
+
+        class Leaf(Base):
+            def on_epoch(self, state, epoch):
+                open("/tmp/x", "w")
+    """})
+    assert report.by_rule.get("scheme-purity") == 1
+
+
+def test_state_mutation_in_scheme_passes(tmp_path):
+    report = lint_files(tmp_path, {"core/good_scheme.py": """
+        class VCASGD(ServerScheme):
+            def __init__(self, alpha):
+                self.alpha = alpha
+
+            def assimilate(self, state, payload, meta):
+                state.params = lerp(state.params, payload, self.alpha)
+                state.version += 1
+                return state
+    """})
+    assert "scheme-purity" not in rules_hit(report)
+
+
+# ---------------------------------------------------------------------------
+# kernel-triangle
+# ---------------------------------------------------------------------------
+
+def test_unmapped_pallas_entry_fires(tmp_path):
+    report = lint_files(tmp_path, {"kernels/newkern.py": """
+        def mystery(x):
+            return pl.pallas_call(_kern, out_shape=x)(x)
+    """})
+    msgs = [v.message for v in report.violations
+            if v.rule == "kernel-triangle"]
+    assert any("no TRIANGLE entry" in m for m in msgs)
+
+
+def test_mapped_kernel_missing_ref_fires(tmp_path):
+    report = lint_files(tmp_path, {"kernels/flash_attention.py": """
+        def flash_attention(q, k, v):
+            return pl.pallas_call(_kern, out_shape=q)(q, k, v)
+    """})
+    msgs = [v.message for v in report.violations
+            if v.rule == "kernel-triangle"]
+    assert any("ref.py is missing" in m for m in msgs)
+
+
+def test_real_kernels_triangle_closes():
+    report = lint_paths([REPO_ROOT / "src" / "repro" / "kernels"],
+                        repo_root=REPO_ROOT)
+    assert "kernel-triangle" not in rules_hit(report)
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_trailing_suppression_silences(tmp_path):
+    report = lint_files(tmp_path, {"scenarios/sup.py": """
+        import numpy as np
+
+        def jitter(n):
+            return np.random.rand(n)  # vclint: disable=rng-stream
+    """})
+    assert report.total == 0
+
+
+def test_standalone_suppression_covers_next_line(tmp_path):
+    report = lint_files(tmp_path, {"scenarios/sup2.py": """
+        import numpy as np
+
+        def jitter(n):
+            # vclint: disable=rng-stream
+            return np.random.rand(n)
+    """})
+    assert report.total == 0
+
+
+def test_unused_suppression_is_reported(tmp_path):
+    report = lint_files(tmp_path, {"scenarios/sup3.py": """
+        def clean(n):
+            return n + 1  # vclint: disable=rng-stream
+    """})
+    assert report.by_rule.get("unused-suppression") == 1
+
+
+def test_docstring_disable_example_is_not_a_suppression(tmp_path):
+    report = lint_files(tmp_path, {"scenarios/doc.py": '''
+        """Docs quoting `# vclint: disable=rng-stream` are not waivers."""
+    '''})
+    assert report.total == 0
+
+
+# ---------------------------------------------------------------------------
+# reporters + baseline ratchet
+# ---------------------------------------------------------------------------
+
+def test_json_reporter_schema(tmp_path):
+    report = lint_files(tmp_path, {"scenarios/bad.py": """
+        import numpy as np
+
+        def jitter(n):
+            return np.random.rand(n)
+    """})
+    doc = json_report(report)
+    assert doc["tool"] == "vclint"
+    assert doc["schema_version"] == JSON_SCHEMA_VERSION
+    assert doc["total"] == 1
+    assert doc["by_rule"] == {"rng-stream": 1}
+    assert set(doc["violations"][0]) == {"path", "line", "rule", "message"}
+    json.dumps(doc)  # must be serializable
+
+
+def test_ratchet_new_violation_fails(tmp_path):
+    dirty = lint_files(tmp_path, {"scenarios/bad.py": """
+        import numpy as np
+
+        def jitter(n):
+            return np.random.rand(n)
+    """})
+    base = tmp_path / "BASELINE.json"
+    B.write_baseline(base, dirty)
+
+    worse = lint_files(tmp_path / "w", {"scenarios/bad.py": """
+        import numpy as np
+
+        def jitter(n):
+            return np.random.rand(n) + np.random.randn(n)
+    """})
+    code, msgs = B.check_ratchet(worse, B.load_baseline(base))
+    assert code == B.EXIT_VIOLATIONS
+    assert any("ratchet" in m for m in msgs)
+
+
+def test_ratchet_shrink_passes_and_repins(tmp_path):
+    dirty = lint_files(tmp_path, {"scenarios/bad.py": """
+        import numpy as np
+
+        def jitter(n):
+            return np.random.rand(n)
+    """})
+    base = tmp_path / "BASELINE.json"
+    B.write_baseline(base, dirty)
+
+    clean = lint_files(tmp_path / "c", {"scenarios/good.py": """
+        def jitter(rng, n):
+            return rng.random(n)
+    """})
+    code, msgs = B.check_ratchet(clean, B.load_baseline(base))
+    assert code == B.EXIT_CLEAN
+    assert any("re-pin" in m for m in msgs)
+    B.write_baseline(base, clean)                 # shrink re-pins fine
+    assert B.load_baseline(base)["total"] == 0
+    with pytest.raises(SystemExit):               # growing again refuses
+        B.write_baseline(base, dirty)
+
+
+def test_missing_baseline_is_exit_2(tmp_path):
+    report = lint_files(tmp_path, {"scenarios/empty.py": "x = 1\n"})
+    code, msgs = B.check_ratchet(report, None)
+    assert code == B.EXIT_NO_BASELINE

@@ -5,9 +5,14 @@
 #   tools/ci_gate.sh --full       # full tier-1 suite (slow tests included)
 #                                 # + launch-count gate
 #
+# The static tier runs FIRST: tools/vclint.py checks the repo-native
+# protocol/wire/kernel invariants (docs/LINT.md) against the committed
+# baseline results/BASELINE_vclint.json — a lint regression fails the
+# gate before any test executes.
 # The fast gate (tools/fast_gate.sh) runs everything not marked `slow` —
-# including the examples' --smoke runs (tests/test_examples.py) and the
-# pinned simulation bit-identity regression (tests/test_protocol.py).
+# including the examples' --smoke runs (tests/test_examples.py), the
+# pinned simulation bit-identity regression (tests/test_protocol.py)
+# and the vclint ratchet again as a tier-1 test (tests/test_vclint.py).
 # A vc_serve kill-and-resume pass then proves the resume path stays
 # monotone (rounds/uids continue from the checkpoint, never rewind), and
 # `python -m benchmarks.run --check` fails if any suite's fused pallas
@@ -19,6 +24,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# static tier: parse-time invariant checks, ratcheted against the
+# committed baseline (exit 2 = baseline never pinned)
+python -m tools.vclint
+echo "[ci-gate] vclint static tier clean"
 
 if [[ "${1:-}" == "--full" ]]; then
     shift

@@ -4,6 +4,11 @@
 # test (markers registered in pytest.ini).  PYTHONPATH is preset so it
 # runs from any checkout without installation.
 #
+# The selection includes the static lint tier (tests/test_vclint.py,
+# marker `lint`): tools/vclint.py's rules run over src/repro and the
+# ratchet against results/BASELINE_vclint.json must hold.  Run the lint
+# tier alone with `tools/fast_gate.sh -m lint`; see docs/LINT.md.
+#
 #   tools/fast_gate.sh            # -m "not slow"
 #   tools/fast_gate.sh -k wire    # extra pytest args pass through
 #

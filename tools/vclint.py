@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""vclint CLI — run the repo-native static analysis pass.
+
+Usage::
+
+    PYTHONPATH=src python -m tools.vclint [paths...]     # default: src/repro
+    python tools/vclint.py --json                        # machine output
+    python tools/vclint.py --no-baseline                 # raw violations
+    python tools/vclint.py --update-baseline             # re-pin (shrink only)
+
+Exit codes: 0 clean against baseline, 1 new violations (ratchet), 2 no
+baseline pinned.  See docs/LINT.md for the rule catalog and suppression
+syntax (``# vclint: disable=rule-name``).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import baseline as B                     # noqa: E402
+from repro.analysis.framework import lint_paths              # noqa: E402
+from repro.analysis.reporters import render_json, text_report  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="vclint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the JSON report (consumed by "
+                         "benchmarks/run.py --check)")
+    ap.add_argument("--baseline", type=Path,
+                    default=REPO_ROOT / B.DEFAULT_BASELINE,
+                    help="baseline file (default: "
+                         "results/BASELINE_vclint.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="skip the ratchet; exit 1 iff any violation")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="re-pin the baseline from this run (counts may "
+                         "only shrink)")
+    args = ap.parse_args(argv)
+
+    paths = [Path(p) for p in (args.paths or [REPO_ROOT / "src" / "repro"])]
+    report = lint_paths(paths, repo_root=REPO_ROOT)
+
+    if args.json:
+        sys.stdout.write(render_json(report))
+    else:
+        print(text_report(report))
+
+    if args.update_baseline:
+        B.write_baseline(args.baseline, report)
+        print(f"vclint: baseline pinned at {args.baseline} "
+              f"(total={report.total})")
+        return B.EXIT_CLEAN
+
+    if args.no_baseline:
+        return B.EXIT_VIOLATIONS if report.total else B.EXIT_CLEAN
+
+    code, msgs = B.check_ratchet(report, B.load_baseline(args.baseline))
+    for m in msgs:
+        print(m, file=sys.stderr)
+    return code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
